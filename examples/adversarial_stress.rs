@@ -1,0 +1,43 @@
+//! Adversarial stress example: Theorem 3.2 live.
+//!
+//! An adaptive adversary builds the network one node at a time, always
+//! extending a fully evicted path, and forces every deterministic heuristic
+//! into Ω(N/B) overhead — while the optimal static plan (which may reorder)
+//! stays at Θ(N). Prints the measured ratio next to N/B for each heuristic.
+//!
+//!     cargo run --release --example adversarial_stress -- [--n 512] [--b 8]
+
+use dtr::dtr::Heuristic;
+use dtr::graphs::adversarial::run_adversary;
+use dtr::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 512);
+    let b = args.usize_or("b", 8);
+    println!("adversary: n={n}, budget={b}  (theory: ratio = Ω(N/B) = Ω({}))\n", n / b);
+    println!("{:<16} {:>10} {:>10} {:>8}", "heuristic", "dtr_ops", "static", "ratio");
+    for h in [
+        Heuristic::dtr(),
+        Heuristic::dtr_eq(),
+        Heuristic::dtr_local(),
+        Heuristic::lru(),
+        Heuristic::size(),
+        Heuristic::Msps,
+        Heuristic::Random,
+    ] {
+        let r = run_adversary(n, b, h)?;
+        println!(
+            "{:<16} {:>10} {:>10} {:>8.1}x",
+            h.name(),
+            r.dtr_ops,
+            r.static_ops,
+            r.ratio()
+        );
+    }
+    println!(
+        "\nEvery deterministic heuristic pays the lower bound; randomization \
+         does not escape it either\n(the adversary here is adaptive)."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! End-to-end driver: train the transformer LM through the full three-layer
+//! stack — rust coordinator -> DTR runtime -> PJRT executables compiled from
+//! JAX+Pallas — under a restricted memory budget, and log the loss curve.
+//!
+//! Requires artifacts: `make artifacts` (or `make e2e` which runs this).
+//!
+//!     cargo run --release --example train_transformer -- \
+//!         [--steps 200] [--budget-ratio 0.5] [--heuristic h_dtr_eq] \
+//!         [--curve-out results/e2e_loss.csv]
+//!
+//! The run demonstrates all layers composing: Pallas fused attention +
+//! layernorm kernels inside the JAX block ops, AOT-lowered to HLO, executed
+//! by the rust engine with DTR evicting/rematerializing real activation
+//! buffers. Under any budget the loss trajectory is bitwise identical to
+//! the unbudgeted run (rematerialization is exact replay).
+
+use dtr::coordinator::{train, TrainConfig};
+use dtr::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = TrainConfig::load(&args)?;
+    if args.get("steps").is_none() {
+        cfg.steps = 200;
+    }
+    if cfg.curve_out.is_none() {
+        cfg.curve_out = Some("results/e2e_loss.csv".into());
+    }
+    println!(
+        "training with budget_ratio={:?} heuristic={} for {} steps",
+        cfg.budget_ratio,
+        cfg.heuristic.name(),
+        cfg.steps
+    );
+    let report = train(&cfg)?;
+
+    // The loss curve must descend: the model is learning a deterministic
+    // token remap through the full AOT stack.
+    let first = report.losses.first().copied().unwrap();
+    let last = report.losses.last().copied().unwrap();
+    anyhow::ensure!(last < first, "loss did not descend: {first} -> {last}");
+    println!(
+        "\nE2E OK: {} params | loss {:.4} -> {:.4} | {:.0} tok/s | \
+         peak {:.1} MiB (budget {:.1} MiB) | {} remats total",
+        report.total_params,
+        first,
+        last,
+        report.tokens_per_sec(),
+        report.peak_budgeted as f64 / (1 << 20) as f64,
+        report.budget as f64 / (1 << 20) as f64,
+        report.total_remats,
+    );
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT pipeline: lower every model op to an HLO-text artifact + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--vocab 512 --d-model 128 --n-heads 4 --d-ff 512 \
+             --seq 64 --batch 8 --n-layers 4]
+
+Emits artifacts/<op>.hlo.txt for each op plus artifacts/manifest.json
+describing shapes/dtypes so the rust runtime can build executables and
+literals without any Python at run time.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    Config,
+    adam_step,
+    block_bwd,
+    block_fwd,
+    embed_bwd,
+    embed_fwd,
+    loss_bwd,
+    loss_fwd,
+    sgd_step,
+)
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a python callable at fixed shapes to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    jdt = {"f32": jnp.float32, "i32": jnp.int32}[dtype]
+    return jax.ShapeDtypeStruct(tuple(shape), jdt)
+
+
+
+def sig(s):
+    dt = "f32" if s.dtype == jnp.float32 else "i32"
+    return {"shape": [int(x) for x in s.shape], "dtype": dt}
+
+
+def param_shapes(cfg: Config):
+    """Name -> shape for every trainable parameter group."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    return {
+        "emb": [v, d],
+        "w_out": [d, v],
+        "ln": [2, d],
+        "wqkv": [d, 3 * d],
+        "wo": [d, d],
+        "w1": [d, f],
+        "w2": [f, d],
+    }
+
+
+def build_ops(cfg: Config):
+    """Return {op_name: (fn, [input specs], n_outputs)}."""
+    b, s, d, v = cfg.batch, cfg.seq, cfg.d_model, cfg.vocab
+    x = spec([b, s, d])
+    tokens = spec([b, s], "i32")
+    blk = [spec(sh) for sh in (
+        [2, d], [d, 3 * d], [d, d], [2, d], [d, cfg.d_ff], [cfg.d_ff, d]
+    )]
+    ops = {
+        "embed_fwd": (embed_fwd, [tokens, spec([v, d])], 1),
+        "embed_bwd": (
+            functools.partial(embed_bwd, vocab=v),
+            [tokens, x],
+            1,
+        ),
+        "block_fwd": (
+            functools.partial(block_fwd, n_heads=cfg.n_heads),
+            [x] + blk,
+            1,
+        ),
+        "block_bwd": (
+            functools.partial(block_bwd, n_heads=cfg.n_heads),
+            [x] + blk + [x],
+            7,
+        ),
+        "loss_fwd": (loss_fwd, [x, spec([d, v]), tokens], 1),
+        "loss_bwd": (loss_bwd, [x, spec([d, v]), tokens], 2),
+    }
+    # Optimizer steps: one artifact per distinct parameter shape.
+    for name, shape in param_shapes(cfg).items():
+        p = spec(shape)
+        ops[f"adam_{name}"] = (adam_step, [p, p, p, p, spec([1])], 3)
+        ops[f"sgd_{name}"] = (sgd_step, [p, p], 1)
+    return ops
+
+
+def compile_all(cfg: Config, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    ops = build_ops(cfg)
+    manifest = {
+        "config": cfg.to_dict(),
+        "total_params": cfg.total_params(),
+        "param_shapes": param_shapes(cfg),
+        "ops": {},
+    }
+    for name, (fn, args, n_out) in ops.items():
+        text = to_hlo_text(fn, args)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # Output signatures come from the jit eval shape.
+        out_shapes = jax.eval_shape(fn, *args)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        assert len(out_shapes) == n_out, f"{name}: {len(out_shapes)} != {n_out}"
+        manifest["ops"][name] = {
+            "file": fname,
+            "inputs": [sig(a) for a in args],
+            "outputs": [sig(o) for o in out_shapes],
+        }
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-layers", type=int, default=4)
+    a = ap.parse_args()
+    cfg = Config(
+        vocab=a.vocab,
+        d_model=a.d_model,
+        n_heads=a.n_heads,
+        d_ff=a.d_ff,
+        seq=a.seq,
+        batch=a.batch,
+        n_layers=a.n_layers,
+    )
+    print(f"AOT-compiling {cfg} ({cfg.total_params():,} params) -> {a.out_dir}")
+    compile_all(cfg, a.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Fused causal attention as a Pallas kernel (flash-attention structure).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's prototype
+leans on cuDNN GPU kernels; our compute substrate is TPU-shaped Pallas. The
+kernel streams K/V blocks HBM->VMEM with an online-softmax accumulator held
+in VMEM scratch — the scratchpad analogue of the shared-memory tiling a CUDA
+flash-attention uses — and shapes the contractions for the MXU (block sizes
+multiples of the 128 lane width where the head dim allows).
+
+Grid: one program per (batch*head, q_block). Each program loops over k/v
+blocks up to the causal frontier, maintaining running max `m`, normalizer
+`l`, and un-normalized accumulator `acc`.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO (loops + dots)
+that runs on any backend. Real-TPU efficiency is estimated in
+EXPERIMENTS.md §Perf from the VMEM footprint and MXU tile utilization.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq, causal):
+    """One (batch*head, q_block) program: online softmax over k/v blocks."""
+    qi = pl.program_id(1)
+    q = q_ref[...]  # [block_q, dh]
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    m = jnp.full((block_q, 1), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, dh), dtype=jnp.float32)
+
+    num_k_blocks = seq // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :]
+        v = v_ref[pl.dslice(kb * block_k, block_k), :]
+        s = jnp.dot(q, k.T) * scale  # [block_q, block_k]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    if causal:
+        # Only k blocks at or before this q block contribute.
+        last = qi + 1 if block_q == block_k else num_k_blocks
+        m, l, acc = jax.lax.fori_loop(0, last, body, (m, l, acc))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m, l, acc))
+
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_attention(q, k, v, causal: bool = True, block_q: int = 32, block_k: int = 32):
+    """Pallas fused attention. q,k,v: [B, H, S, Dh] -> [B, H, S, Dh].
+
+    S must be divisible by the block sizes (the AOT configs guarantee it;
+    tests sweep shapes that satisfy it).
+
+    Differentiable via custom_vjp: the backward pass replays the reference
+    attention's vjp (flash-attention backward kernels recompute scores the
+    same way; the XLA lowering fuses the recompute).
+    """
+    return _attention_impl(q, k, v, causal, block_q, block_k)
+
+
+def _attention_impl(q, k, v, causal, block_q, block_k):
+    b, h, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, "seq must divide blocks"
+    if causal:
+        # The causal frontier arithmetic assumes square blocks.
+        assert block_q == block_k, "causal path requires block_q == block_k"
+
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_k=block_k, seq=s, causal=causal
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)
+
+
+def _attn_vjp_fwd(q, k, v, causal, block_q, block_k):
+    return _attention_impl(q, k, v, causal, block_q, block_k), (q, k, v)
+
+
+def _attn_vjp_bwd(causal, block_q, block_k, res, do):
+    from .ref import attention_ref
+
+    q, k, v = res
+    _, pullback = jax.vjp(lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return pullback(do)
+
+
+fused_attention.defvjp(_attn_vjp_fwd, _attn_vjp_bwd)
+
+
+def vmem_bytes(block_q: int, block_k: int, seq: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per program (for the §Perf roofline note):
+    q block + one k/v block pair + accumulators + the full-S k/v residency
+    the BlockSpec requests."""
+    q_blk = block_q * dh * dtype_bytes
+    kv_stream = 2 * seq * dh * dtype_bytes  # spec'd per program
+    acc = block_q * (dh + 2) * 4
+    scores = block_q * block_k * 4
+    return q_blk + kv_stream + acc + scores

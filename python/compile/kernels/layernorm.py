@@ -1,0 +1,105 @@
+"""Fused LayerNorm as a Pallas kernel.
+
+One program per row block: mean/variance reduction and the scale+shift are
+fused in VMEM, avoiding the three separate HBM round-trips (mean, var,
+normalize) the unfused lowering takes. Rows map to the VPU sublane axis;
+the feature dimension stays minor-most for lane-parallel reductions.
+
+interpret=True for CPU-PJRT executability (see attention.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)  # [block_rows, d]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    y = (x - mean) / jnp.sqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _ln_bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, dg_part_ref, db_part_ref, *, eps):
+    """Per-row-block backward: dx in-kernel; per-block partial reductions for
+    dgamma/dbeta (summed across blocks outside)."""
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...]
+    dy = dy_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mean) * rstd
+    dyg = dy * g
+    m1 = jnp.mean(dyg, axis=-1, keepdims=True)
+    m2 = jnp.mean(dyg * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (rstd * (dyg - m1 - xhat * m2)).astype(dx_ref.dtype)
+    dg_part_ref[...] = jnp.sum(dy * xhat, axis=0)
+    db_part_ref[...] = jnp.sum(dy, axis=0)
+
+
+def _ln_fwd_impl(x, gamma, beta, block_rows, eps):
+    n, d = x.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, "rows must divide block_rows"
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_layernorm(x, gamma, beta, block_rows: int = 8, eps: float = 1e-5):
+    """x: [N, D] (callers flatten leading dims); gamma/beta: [D].
+
+    Differentiable: both forward and backward run as Pallas kernels.
+    """
+    return _ln_fwd_impl(x, gamma, beta, block_rows, eps)
+
+
+def _ln_vjp_fwd(x, gamma, beta, block_rows, eps):
+    return _ln_fwd_impl(x, gamma, beta, block_rows, eps), (x, gamma)
+
+
+def _ln_vjp_bwd(block_rows, eps, res, dy):
+    x, gamma = res
+    n, d = x.shape
+    blocks = n // min(block_rows, n)
+    br = n // blocks
+    kernel = functools.partial(_ln_bwd_kernel, eps=eps)
+    dx, dg_parts, db_parts = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((blocks, d), jnp.float32),
+            jax.ShapeDtypeStruct((blocks, d), jnp.float32),
+        ],
+        interpret=True,
+    )(x, gamma, dy)
+    return dx, jnp.sum(dg_parts, axis=0), jnp.sum(db_parts, axis=0)
+
+
+fused_layernorm.defvjp(_ln_vjp_fwd, _ln_vjp_bwd)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its oracle to float32 tolerance
+under pytest/hypothesis sweeps (python/tests/test_kernels.py). The oracles
+are also used to build a reference (kernel-free) model for end-to-end
+numerical checks of the L2 ops. They use only primitive jnp arithmetic so
+they are maximally trustworthy as a spec.
+"""
+
+import jax.numpy as jnp
+
+
+def softmax_ref(x, axis=-1):
+    """Numerically stable softmax."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis. x: [..., D]; gamma/beta: [D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    y = (x - mean) / jnp.sqrt(var + eps)
+    return y * gamma + beta
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Scaled dot-product attention.
+
+    q, k, v: [B, H, S, Dh] -> [B, H, S, Dh]. Causal masking by default
+    (decoder LM). Softmax in float32.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = softmax_ref(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)

@@ -1,0 +1,212 @@
+"""L2: the transformer-LM compute graph in JAX, built on the Pallas kernels.
+
+The model is factored into *per-op jitted functions* with self-contained
+backward ops (`*_bwd` recomputes its internal intermediates via jax.vjp), so
+the only cross-op state is the inter-op activation tensors — exactly the
+granularity the DTR runtime checkpoints. Every op here is AOT-lowered once
+by aot.py to an HLO-text artifact; Python never runs at training time.
+
+Parameter layout per block (all f32):
+    ln1  [2, D]     layernorm gamma;beta
+    wqkv [D, 3D]    fused QKV projection
+    wo   [D, D]     attention output projection
+    ln2  [2, D]
+    w1   [D, F]     MLP up
+    w2   [F, D]     MLP down
+Plus `emb [V, D]` (input embedding) and `w_out [D, V]` (untied LM head).
+"""
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import fused_attention
+from .kernels.layernorm import fused_layernorm
+from .kernels.ref import attention_ref, layernorm_ref, softmax_ref
+
+
+@dataclass(frozen=True)
+class Config:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    seq: int = 64
+    batch: int = 8
+    n_layers: int = 4
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def params_per_block(self) -> int:
+        d, f = self.d_model, self.d_ff
+        return 2 * d + d * 3 * d + d * d + 2 * d + d * f + f * d
+
+    def total_params(self) -> int:
+        return (
+            self.vocab * self.d_model
+            + self.n_layers * self.params_per_block()
+            + self.d_model * self.vocab
+        )
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# --------------------------------------------------------------------- ops
+
+
+def embed_fwd(tokens, emb):
+    """tokens [B,S] i32, emb [V,D] -> x [B,S,D]."""
+    return emb[tokens]
+
+
+def embed_bwd(tokens, dy, vocab: int):
+    """Gradient of embed_fwd w.r.t. emb: scatter-add of dy rows."""
+    flat_tokens = tokens.reshape(-1)
+    flat_dy = dy.reshape(-1, dy.shape[-1])
+    demb = jnp.zeros((vocab, dy.shape[-1]), dtype=dy.dtype)
+    return demb.at[flat_tokens].add(flat_dy)
+
+
+def _block_fwd_impl(x, ln1, wqkv, wo, ln2, w1, w2, *, n_heads, use_kernels=True):
+    b, s, d = x.shape
+    dh = d // n_heads
+    ln = _ln(use_kernels)
+    # Attention sublayer (pre-norm).
+    h = ln(x.reshape(b * s, d), ln1[0], ln1[1]).reshape(b, s, d)
+    qkv = h @ wqkv  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, dh).transpose(0, 2, 1, 3)
+
+    if use_kernels:
+        attn = fused_attention(heads(q), heads(k), heads(v), causal=True)
+    else:
+        attn = attention_ref(heads(q), heads(k), heads(v), causal=True)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + attn @ wo
+    # MLP sublayer (pre-norm, GELU).
+    h2 = ln(x.reshape(b * s, d), ln2[0], ln2[1]).reshape(b, s, d)
+    ff = jax.nn.gelu(h2 @ w1, approximate=True) @ w2
+    return x + ff
+
+
+def _ln(use_kernels):
+    if use_kernels:
+        return fused_layernorm
+    return layernorm_ref
+
+
+def block_fwd(x, ln1, wqkv, wo, ln2, w1, w2, *, n_heads):
+    return _block_fwd_impl(x, ln1, wqkv, wo, ln2, w1, w2, n_heads=n_heads)
+
+
+def block_fwd_ref(x, ln1, wqkv, wo, ln2, w1, w2, *, n_heads):
+    """Kernel-free oracle of block_fwd (pytest cross-check)."""
+    return _block_fwd_impl(
+        x, ln1, wqkv, wo, ln2, w1, w2, n_heads=n_heads, use_kernels=False
+    )
+
+
+def block_bwd(x, ln1, wqkv, wo, ln2, w1, w2, dy, *, n_heads):
+    """Self-contained backward: recomputes block internals via vjp.
+
+    Returns (dx, dln1, dwqkv, dwo, dln2, dw1, dw2).
+    """
+    # The vjp re-runs the forward inside this single jitted op, so the only
+    # tensors DTR must keep (or rematerialize) across ops are x and dy.
+    _, pullback = jax.vjp(
+        lambda *args: block_fwd(*args, n_heads=n_heads), x, ln1, wqkv, wo, ln2, w1, w2
+    )
+    return pullback(dy)
+
+
+def loss_fwd(x, w_out, targets):
+    """Mean next-token cross-entropy. x [B,S,D], w_out [D,V], targets [B,S] i32.
+
+    Returns a [1] tensor (scalar losses are awkward across the FFI).
+    """
+    logits = x @ w_out  # [B,S,V]
+    logp = logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll).reshape(1)
+
+
+def loss_bwd(x, w_out, targets):
+    """Returns (dx, dw_out) for unit upstream gradient."""
+    _, pullback = jax.vjp(lambda x_, w_: loss_fwd(x_, w_, targets), x, w_out)
+    return pullback(jnp.ones((1,), dtype=x.dtype))
+
+
+def adam_step(p, g, m, v, t, *, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam update; t is the 1-based step count as f32[1].
+
+    Returns (p', m', v').
+    """
+    t = t[0]
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mhat = m2 / (1.0 - b1**t)
+    vhat = v2 / (1.0 - b2**t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m2, v2
+
+
+def sgd_step(p, g, *, lr=0.1):
+    return (p - lr * g,)
+
+
+# ------------------------------------------------- reference full model
+
+
+def init_params(cfg: Config, key):
+    """Reference initializer (pytest only; the rust coordinator initializes
+    with the same scheme host-side)."""
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    scale = 0.02
+    params = {
+        "emb": scale * jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32),
+        "w_out": scale * jax.random.normal(ks[1], (cfg.d_model, cfg.vocab), jnp.float32),
+        "blocks": [],
+    }
+    d, f = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layers):
+        bk = jax.random.split(ks[2 + i], 4)
+        ln = jnp.stack([jnp.ones(d), jnp.zeros(d)])
+        params["blocks"].append(
+            {
+                "ln1": ln,
+                "wqkv": scale * jax.random.normal(bk[0], (d, 3 * d), jnp.float32),
+                "wo": scale * jax.random.normal(bk[1], (d, d), jnp.float32),
+                "ln2": ln,
+                "w1": scale * jax.random.normal(bk[2], (d, f), jnp.float32),
+                "w2": scale * jax.random.normal(bk[3], (f, d), jnp.float32),
+            }
+        )
+    return params
+
+
+def model_loss_ref(cfg: Config, params, tokens, targets):
+    """Whole-model loss using the kernel-free ops (numerical oracle)."""
+    x = embed_fwd(tokens, params["emb"])
+    for blk in params["blocks"]:
+        x = block_fwd_ref(
+            x, blk["ln1"], blk["wqkv"], blk["wo"], blk["ln2"], blk["w1"], blk["w2"],
+            n_heads=cfg.n_heads,
+        )
+    return loss_fwd(x, params["w_out"], targets)[0]
+
+
+def model_loss_with_kernels(cfg: Config, params, tokens, targets):
+    """Whole-model loss chaining the AOT ops (pytest: matches the oracle)."""
+    x = embed_fwd(tokens, params["emb"])
+    for blk in params["blocks"]:
+        x = block_fwd(
+            x, blk["ln1"], blk["wqkv"], blk["wo"], blk["ln2"], blk["w1"], blk["w2"],
+            n_heads=cfg.n_heads,
+        )
+    return loss_fwd(x, params["w_out"], targets)[0]

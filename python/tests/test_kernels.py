@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py), with
+hypothesis sweeping shapes and value distributions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import fused_attention, vmem_bytes
+from compile.kernels.layernorm import fused_layernorm
+from compile.kernels.ref import attention_ref, layernorm_ref, softmax_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# --------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([16, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref_causal(b, h, s, dh, seed):
+    q, k, v = (rand(seed + i, (b, h, s, dh)) for i in range(3))
+    out = fused_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    blocks=st.sampled_from([(8, 8), (16, 16)]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref_noncausal(s, blocks, seed):
+    bq, bk = blocks
+    q, k, v = (rand(seed + i, (2, 2, s, 16)) for i in range(3))
+    out = fused_attention(q, k, v, causal=False, block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_block_shape_invariance():
+    """Different BlockSpec tilings must produce identical results."""
+    q, k, v = (rand(i, (2, 2, 64, 16)) for i in range(3))
+    a = fused_attention(q, k, v, block_q=16, block_k=16)
+    b = fused_attention(q, k, v, block_q=32, block_k=32)
+    c = fused_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_causality():
+    """Future tokens must not influence earlier positions."""
+    q, k, v = (rand(i, (1, 1, 32, 16)) for i in range(3))
+    out1 = fused_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    # Perturb the last key/value: positions < 31 must not change.
+    k2 = k.at[:, :, -1].set(99.0)
+    v2 = v.at[:, :, -1].set(-99.0)
+    out2 = fused_attention(q, k2, v2, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(out1[:, :, -1], out2[:, :, -1])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), scale=st.sampled_from([0.1, 1.0, 10.0]))
+def test_attention_grad_matches_ref(seed, scale):
+    q, k, v = (rand(seed + i, (1, 2, 32, 16), scale) for i in range(3))
+
+    def f_kernel(q, k, v):
+        return jnp.sum(fused_attention(q, k, v, block_q=16, block_k=16) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    # At scale 10 the softmax saturates to one-hot; tiny fwd differences
+    # (1e-7) are amplified through the near-zero probabilities, so the
+    # tolerance scales with the logit magnitude.
+    tol = 2e-3 * max(1.0, scale)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=tol, atol=2e-4 * scale * scale)
+
+
+def test_attention_extreme_values_stable():
+    """Online softmax must not overflow on large logits."""
+    q = 30.0 * jnp.ones((1, 1, 16, 8), jnp.float32)
+    k = 30.0 * jnp.ones((1, 1, 16, 8), jnp.float32)
+    v = rand(0, (1, 1, 16, 8))
+    out = fused_attention(q, k, v, block_q=16, block_k=16)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_vmem_estimate_within_budget():
+    # Default AOT config tile must fit a TPU core's ~16 MiB VMEM.
+    assert vmem_bytes(32, 32, 512, 64) < 16 * 1024 * 1024
+
+
+# --------------------------------------------------------------- layernorm
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    x = rand(seed, (n, d), 3.0)
+    g = rand(seed + 1, (d,))
+    b = rand(seed + 2, (d,))
+    out = fused_layernorm(x, g, b)
+    ref = layernorm_ref(x, g, b)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16))
+def test_layernorm_grads_match_ref(seed):
+    x = rand(seed, (16, 32), 2.0)
+    g = rand(seed + 1, (32,))
+    b = rand(seed + 2, (32,))
+    dy = rand(seed + 3, (16, 32))
+
+    def with_kernel(x, g, b):
+        return jnp.sum(fused_layernorm(x, g, b) * dy)
+
+    def with_ref(x, g, b):
+        return jnp.sum(layernorm_ref(x, g, b) * dy)
+
+    gk = jax.grad(with_kernel, argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(with_ref, argnums=(0, 1, 2))(x, g, b)
+    for a, r in zip(gk, gr):
+        np.testing.assert_allclose(a, r, rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_output_normalized():
+    x = rand(0, (32, 64), 5.0)
+    out = fused_layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-2)
+
+
+def test_softmax_ref_rows_sum_to_one():
+    x = rand(1, (8, 16), 4.0)
+    p = softmax_ref(x)
+    np.testing.assert_allclose(np.sum(p, -1), 1.0, rtol=1e-6)
+
+
+def test_layernorm_rejects_bad_blocking():
+    x = rand(0, (10, 16))
+    with pytest.raises(AssertionError):
+        fused_layernorm(x, jnp.ones(16), jnp.zeros(16), block_rows=4)

@@ -1,0 +1,116 @@
+//! Microbenchmarks of the DTR hot paths: victim selection per heuristic,
+//! union-find maintenance, exact-e* DFS, and full chain replays. Custom
+//! harness (criterion is not in the offline crate cache): median of
+//! repeated runs with warmup, printed as `name  median  iters`.
+
+use std::time::Instant;
+
+use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, Runtime};
+use dtr::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    println!("{name:<52} median {:>12}  p95 {:>12}  ({iters} iters)", fmt_ns(median), fmt_ns(p95));
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns > 10_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else if ns > 10_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// Replay a chain of `n` unit ops under `budget` with heuristic `h`,
+/// touching random earlier tensors to force rematerialization traffic.
+fn chain_workload(n: usize, budget: u64, h: Heuristic, touches: usize) {
+    let cfg = Config { budget, heuristic: h, ..Config::default() };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let mut rng = Rng::new(7);
+    let mut ts = vec![rt.constant(1)];
+    for i in 0..n {
+        let t = rt.call(&format!("f{i}"), 1, &[ts[i]], &[OutSpec::sized(1)]).unwrap()[0];
+        ts.push(t);
+    }
+    for _ in 0..touches {
+        let t = ts[1 + rng.index(n)];
+        rt.access(t).unwrap();
+    }
+}
+
+fn main() {
+    println!("# bench_dtr — DTR core hot paths\n");
+
+    for h in [
+        Heuristic::dtr(),
+        Heuristic::dtr_eq(),
+        Heuristic::dtr_local(),
+        Heuristic::lru(),
+    ] {
+        bench(&format!("chain n=1024 b=48 touches=64  [{}]", h.name()), 20, || {
+            chain_workload(1024, 48, h, 64);
+        });
+    }
+
+    // Eviction-search scaling with pool size (the prototype's O(pool) scan).
+    for n in [256usize, 1024, 4096] {
+        bench(&format!("chain n={n} b=n/16 touches=16 [h_dtr_eq]"), 10, || {
+            chain_workload(n, (n / 16) as u64, Heuristic::dtr_eq(), 16);
+        });
+    }
+
+    // Appendix E.2 optimizations on a large pool.
+    for (label, sqrt_sample, small_filter) in
+        [("full-scan", false, false), ("sqrt-sample", true, false), ("sqrt+small-filter", true, true)]
+    {
+        bench(&format!("chain n=4096 b=256 touches=32 [{label}]"), 10, || {
+            let cfg = Config {
+                budget: 256,
+                heuristic: Heuristic::dtr_eq(),
+                sqrt_sample,
+                small_filter,
+                ..Config::default()
+            };
+            let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+            let mut ts = vec![rt.constant(1)];
+            for i in 0..4096 {
+                let t = rt.call(&format!("f{i}"), 1, &[ts[i]], &[OutSpec::sized(1)]).unwrap()[0];
+                ts.push(t);
+            }
+            let mut rng = Rng::new(3);
+            for _ in 0..32 {
+                let t = ts[1 + rng.index(4096)];
+                rt.access(t).unwrap();
+            }
+        });
+    }
+
+    // Union-find throughput.
+    bench("union-find: 100k make/union/cost ops", 20, || {
+        let mut uf = dtr::dtr::unionfind::UnionFind::new();
+        let hs: Vec<u32> = (0..100_000).map(|_| uf.make_set()).collect();
+        for w in hs.chunks(2) {
+            if w.len() == 2 {
+                uf.add_cost(w[0], 1.0);
+                uf.union(w[0], w[1]);
+            }
+        }
+        let mut total = 0.0;
+        for &h in hs.iter().step_by(97) {
+            total += uf.component_cost(h);
+        }
+        std::hint::black_box(total);
+    });
+}

@@ -1,0 +1,75 @@
+//! Real-engine benchmarks (Table 1 / Fig. 4 end-to-end): per-step wall time
+//! of the transformer training step at several budgets, with the DTR
+//! runtime-overhead fraction. Requires `make artifacts`; prints a notice
+//! and exits cleanly when they are absent (so `cargo bench` works anywhere).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use dtr::dtr::{Config, Heuristic};
+use dtr::exec::{Engine, Optimizer};
+
+fn main() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("# bench_engine: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    println!("# bench_engine — real training step under DTR budgets\n");
+
+    let mut engine = Engine::new(
+        &artifacts,
+        Config { profile: true, ..Config::default() },
+        Optimizer::Sgd,
+    )
+    .expect("engine");
+    let peak = engine.measure_peak().expect("peak");
+    println!(
+        "model: {} params; unbudgeted peak {:.1} MiB\n",
+        engine.total_params(),
+        peak as f64 / (1 << 20) as f64
+    );
+
+    for ratio in [1.0f64, 0.9, 0.8, 0.7] {
+        engine.dtr_cfg = Config {
+            budget: (peak as f64 * ratio) as u64,
+            heuristic: Heuristic::dtr_eq(),
+            profile: true,
+            ..Config::default()
+        };
+        // Warmup + 5 measured steps.
+        let _ = engine.train_step();
+        let mut walls = Vec::new();
+        let mut overhead = Vec::new();
+        let mut remats = 0u64;
+        let mut failed = false;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            match engine.train_step() {
+                Ok(r) => {
+                    walls.push(t0.elapsed().as_nanos() as u64);
+                    overhead.push(r.stats.eviction_loop_ns);
+                    remats += r.stats.remat_count;
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed {
+            println!("budget {ratio:>4.1}x  OOM");
+            continue;
+        }
+        walls.sort();
+        let median = walls[walls.len() / 2];
+        let ov: u64 = overhead.iter().sum::<u64>() / overhead.len() as u64;
+        println!(
+            "budget {ratio:>4.1}x  step {:>8.1} ms  eviction-loop {:>8.3} ms ({:.2}%)  remats/step {:.1}",
+            median as f64 / 1e6,
+            ov as f64 / 1e6,
+            100.0 * ov as f64 / median as f64,
+            remats as f64 / walls.len() as f64,
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! End-to-end simulator benchmarks: one per paper experiment family —
+//! per-model simulated batch under each main heuristic (Fig. 2 rows),
+//! the static-baseline comparison workload (Fig. 3), the adversarial
+//! generator (Thm 3.2), and the Theorem 3.1 sweep. Reports wall time of the
+//! *simulation itself* (the paper quotes "milliseconds per budget" for DTR
+//! vs minutes for Checkmate's ILP — this validates that claim for our
+//! implementation).
+
+use std::time::Instant;
+
+use dtr::baselines::optimal_chain_ops;
+use dtr::dtr::{Config, Heuristic};
+use dtr::graphs::adversarial::run_adversary;
+use dtr::graphs::linear::{run_linear, theorem_budget};
+use dtr::graphs::models::{by_name, ALL_MODELS};
+use dtr::sim::replay::{baseline, simulate};
+
+fn time<F: FnMut() -> R, R>(name: &str, iters: usize, mut f: F) {
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.sort();
+    println!(
+        "{name:<58} median {:>10.3} ms  ({iters} iters)",
+        samples[samples.len() / 2] as f64 / 1e6
+    );
+}
+
+fn main() {
+    println!("# bench_sim — simulator end-to-end (paper-experiment workloads)\n");
+
+    // Fig. 2 rows: per-model simulated batch at 0.5 budget.
+    for model in ALL_MODELS {
+        let log = by_name(model, 1).unwrap();
+        let b = baseline(&log);
+        let budget = b.budget_at(0.5);
+        for h in [Heuristic::dtr_eq(), Heuristic::dtr()] {
+            time(&format!("fig2: {model} @0.5 [{}]", h.name()), 10, || {
+                simulate(&log, Config { budget, heuristic: h, ..Config::default() })
+            });
+        }
+    }
+
+    // Fig. 3: DTR on a 512-chain vs the Revolve DP solve time.
+    time("fig3: dtr h_dtr chain n=512 b=2sqrt(n)", 10, || {
+        run_linear(512, theorem_budget(512), Heuristic::dtr(), false).unwrap()
+    });
+    time("fig3: revolve DP optimum n=512 b=48 (the 'ILP' solve)", 10, || {
+        optimal_chain_ops(512, 48).unwrap()
+    });
+
+    // Thm 3.1 sweep cost.
+    time("thm31: h_e* chain n=4096 b=2sqrt(n)", 5, || {
+        run_linear(4096, theorem_budget(4096), Heuristic::EStarCount, false).unwrap()
+    });
+
+    // Thm 3.2 adversary.
+    time("thm32: adversary n=512 b=8 [h_dtr_eq]", 5, || {
+        run_adversary(512, 8, Heuristic::dtr_eq()).unwrap()
+    });
+}

@@ -1,0 +1,113 @@
+//! Static checkpointing baselines on linear chains (the Fig. 3 comparators):
+//!
+//! * **Chen √N** (Chen et al. 2016): evenly spaced segment checkpoints, one
+//!   extra forward pass;
+//! * **Chen greedy** (the GreedyRemat-style variant): grow segments until
+//!   the budget is hit;
+//! * **unbounded**: no eviction (2N ops, N memory).
+//!
+//! All are expressed analytically for a unit-cost unit-size chain of length
+//! `n` under a peak-memory budget `b` (in tensors), returning total operator
+//! executions (forward + recompute + backward) — the same metric the DTR
+//! simulator reports — or `None` when the scheme cannot fit in `b`.
+
+/// Cost of running forward+backward with no eviction.
+pub fn unbounded(n: usize) -> (u64, u64) {
+    (2 * n as u64, n as u64 + 2)
+}
+
+/// Chen et al. segmented checkpointing with segment length `k`:
+/// memory ≈ n/k checkpoints + k live recomputed tensors + O(1) for the
+/// gradient; compute = n forward + (n - n/k) recompute + n backward.
+fn chen_with_segment(n: usize, k: usize) -> (u64, u64) {
+    let checkpoints = n.div_ceil(k);
+    let mem = checkpoints as u64 + k as u64 + 2;
+    let recompute = (n - checkpoints) as u64;
+    (2 * n as u64 + recompute, mem)
+}
+
+/// Chen √N: pick the segment length minimizing ops subject to the budget.
+/// Returns `None` if no segmentation fits.
+pub fn chen_sqrt(n: usize, b: u64) -> Option<(u64, u64)> {
+    // The classic choice is k = √n; under a budget we search all k and keep
+    // the cheapest feasible (the paper's scheme family).
+    let mut best: Option<(u64, u64)> = None;
+    for k in 1..=n {
+        let (ops, mem) = chen_with_segment(n, k);
+        if mem <= b && best.map_or(true, |(bo, _)| ops < bo) {
+            best = Some((ops, mem));
+        }
+    }
+    best
+}
+
+/// Chen greedy: fix checkpoint *count* to the budget's leftover after the
+/// working set, i.e. segments of length ⌈n / (b - 2)⌉ — a memory-first
+/// greedy placement (sizes only, like GreedyRemat).
+pub fn chen_greedy(n: usize, b: u64) -> Option<(u64, u64)> {
+    if b < 4 {
+        return None;
+    }
+    // Reserve half the budget for checkpoints, half for the live segment.
+    let checkpoints = ((b - 2) / 2).max(1) as usize;
+    let k = n.div_ceil(checkpoints);
+    let (ops, mem) = chen_with_segment(n, k);
+    if mem <= b {
+        Some((ops, mem))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_is_2n() {
+        assert_eq!(unbounded(100).0, 200);
+    }
+
+    #[test]
+    fn chen_sqrt_one_extra_forward() {
+        // With ample budget the optimum inside the family approaches zero
+        // recompute; at b ≈ 2√n it is ~one extra forward pass.
+        let n = 1024;
+        let b = 2 * (n as f64).sqrt() as u64 + 2;
+        let (ops, mem) = chen_sqrt(n, b).unwrap();
+        assert!(mem <= b);
+        let extra = ops - 2 * n as u64;
+        assert!(extra <= n as u64, "extra {extra} > one forward pass");
+        assert!(extra >= n as u64 / 2, "extra {extra} suspiciously low");
+    }
+
+    #[test]
+    fn chen_infeasible_below_2sqrt() {
+        // Minimum memory of the scheme is ~2√n.
+        assert!(chen_sqrt(1024, 16).is_none());
+        assert!(chen_sqrt(1024, 80).is_some());
+    }
+
+    #[test]
+    fn more_memory_never_hurts() {
+        let n = 512;
+        let mut last = u64::MAX;
+        for b in [50u64, 80, 120, 240, 520] {
+            if let Some((ops, _)) = chen_sqrt(n, b) {
+                assert!(ops <= last, "ops increased with memory");
+                last = ops;
+            }
+        }
+        assert!(last < u64::MAX);
+    }
+
+    #[test]
+    fn greedy_feasible_and_worse_or_equal() {
+        let n = 512;
+        for b in [60u64, 100, 200] {
+            let g = chen_greedy(n, b).unwrap();
+            let s = chen_sqrt(n, b).unwrap();
+            assert!(g.0 >= s.0, "greedy beat exhaustive-k search");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Static checkpointing baselines for the Fig. 3 comparison: Chen et al.
+//! √N segmentation (+greedy), Griewank–Walther Revolve (optimal on chains),
+//! and an exhaustively optimal small-DAG scheduler (the Checkmate stand-in).
+
+pub mod chain;
+pub mod optimal;
+pub mod revolve;
+
+pub use chain::{chen_greedy, chen_sqrt, unbounded};
+pub use optimal::{optimal_cost, SmallDag};
+pub use revolve::{optimal_chain_ops, Revolve};

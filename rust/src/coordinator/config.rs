@@ -1,0 +1,205 @@
+//! Training configuration: JSON file + CLI-flag overrides.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::dtr::{DeallocPolicy, Heuristic};
+use crate::exec::Optimizer;
+use crate::util::cli::Args;
+use crate::util::json::parse;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub steps: usize,
+    /// Memory budget as a fraction of the measured unbudgeted peak;
+    /// `None` = unlimited.
+    pub budget_ratio: Option<f64>,
+    pub heuristic: Heuristic,
+    pub policy: DeallocPolicy,
+    pub optimizer: Optimizer,
+    pub sqrt_sample: bool,
+    pub small_filter: bool,
+    pub log_every: usize,
+    /// Where to write the loss-curve CSV (optional).
+    pub curve_out: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            steps: 50,
+            budget_ratio: Some(0.65),
+            heuristic: Heuristic::dtr_eq(),
+            policy: DeallocPolicy::EagerEvict,
+            // SGD by default: Adam's m/v state triples the pinned constant
+            // footprint, which dominates small models and raises the
+            // feasible-budget floor to ~0.8 of peak (see EXPERIMENTS.md).
+            optimizer: Optimizer::Sgd,
+            sqrt_sample: false,
+            small_filter: false,
+            log_every: 10,
+            curve_out: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a JSON file; unknown keys are rejected to catch typos.
+    pub fn from_file(path: &Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let v = parse(&text).context("parsing train config")?;
+        let mut cfg = TrainConfig::default();
+        let obj = v.as_obj().context("config must be a JSON object")?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(val.as_str().context("artifacts_dir")?)
+                }
+                "steps" => cfg.steps = val.as_usize().context("steps")?,
+                "budget_ratio" => {
+                    cfg.budget_ratio = match val.as_f64() {
+                        Some(r) if r > 0.0 => Some(r),
+                        _ => None,
+                    }
+                }
+                "heuristic" => {
+                    let name = val.as_str().context("heuristic")?;
+                    cfg.heuristic =
+                        Heuristic::parse(name).with_context(|| format!("unknown heuristic {name}"))?;
+                }
+                "policy" => {
+                    let name = val.as_str().context("policy")?;
+                    cfg.policy = DeallocPolicy::parse(name)
+                        .with_context(|| format!("unknown policy {name}"))?;
+                }
+                "optimizer" => {
+                    cfg.optimizer = match val.as_str().context("optimizer")? {
+                        "adam" => Optimizer::Adam,
+                        "sgd" => Optimizer::Sgd,
+                        other => anyhow::bail!("unknown optimizer {other}"),
+                    }
+                }
+                "sqrt_sample" => cfg.sqrt_sample = val.as_bool().context("sqrt_sample")?,
+                "small_filter" => cfg.small_filter = val.as_bool().context("small_filter")?,
+                "log_every" => cfg.log_every = val.as_usize().context("log_every")?,
+                "curve_out" => cfg.curve_out = val.as_str().map(PathBuf::from),
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top (flags win over file).
+    pub fn apply_args(mut self, args: &Args) -> Result<TrainConfig> {
+        if let Some(d) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(d);
+        }
+        self.steps = args.usize_or("steps", self.steps);
+        if let Some(r) = args.get("budget-ratio") {
+            let r: f64 = r.parse().context("budget-ratio")?;
+            self.budget_ratio = if r > 0.0 { Some(r) } else { None };
+        }
+        if args.bool("no-budget") {
+            self.budget_ratio = None;
+        }
+        if let Some(h) = args.get("heuristic") {
+            self.heuristic = Heuristic::parse(h).with_context(|| format!("heuristic {h}"))?;
+        }
+        if let Some(p) = args.get("policy") {
+            self.policy = DeallocPolicy::parse(p).with_context(|| format!("policy {p}"))?;
+        }
+        if let Some(o) = args.get("optimizer") {
+            self.optimizer = match o {
+                "adam" => Optimizer::Adam,
+                "sgd" => Optimizer::Sgd,
+                other => anyhow::bail!("unknown optimizer {other}"),
+            };
+        }
+        if args.bool("sqrt-sample") {
+            self.sqrt_sample = true;
+        }
+        if args.bool("small-filter") {
+            self.small_filter = true;
+        }
+        self.log_every = args.usize_or("log-every", self.log_every);
+        if let Some(c) = args.get("curve-out") {
+            self.curve_out = Some(PathBuf::from(c));
+        }
+        Ok(self)
+    }
+
+    pub fn load(args: &Args) -> Result<TrainConfig> {
+        let base = match args.get("config") {
+            Some(path) => TrainConfig::from_file(Path::new(path))?,
+            None => TrainConfig::default(),
+        };
+        base.apply_args(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(content: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("dtr_cfg_{}.json", content.len()));
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.budget_ratio, Some(0.65));
+        assert_eq!(c.heuristic, Heuristic::dtr_eq());
+    }
+
+    #[test]
+    fn parses_file() {
+        let p = write_tmp(
+            r#"{"steps": 7, "budget_ratio": 0.4, "heuristic": "h_lru",
+                "policy": "banish", "optimizer": "sgd", "log_every": 2}"#,
+        );
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.budget_ratio, Some(0.4));
+        assert_eq!(c.heuristic, Heuristic::lru());
+        assert_eq!(c.policy, DeallocPolicy::Banish);
+        assert_eq!(c.optimizer, Optimizer::Sgd);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let p = write_tmp(r#"{"stepz": 7}"#);
+        assert!(TrainConfig::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let p = write_tmp(r#"{"steps": 7}"#);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--steps".to_string(),
+                "99".to_string(),
+                "--heuristic".to_string(),
+                "h_dtr".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.steps, 99);
+        assert_eq!(c.heuristic, Heuristic::dtr());
+    }
+
+    #[test]
+    fn no_budget_flag() {
+        let args = crate::util::cli::Args::parse(vec!["--no-budget".to_string()].into_iter());
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.budget_ratio, None);
+    }
+}

@@ -1,0 +1,9 @@
+//! Training coordinator: config system, launcher, metrics, loss-curve
+//! logging. This is the user-facing layer a downstream team drives
+//! (`dtr-repro train --config configs/train_small.json` or flag overrides).
+
+pub mod config;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use trainer::{train, TrainReport};

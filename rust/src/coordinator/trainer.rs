@@ -1,0 +1,142 @@
+//! The training loop: budget resolution, step iteration, metrics, and the
+//! loss-curve record — the E2E driver behind `examples/train_transformer.rs`
+//! and `dtr-repro train`.
+
+use anyhow::Result;
+
+use super::config::TrainConfig;
+use crate::dtr;
+use crate::exec::{Engine, StepResult};
+use crate::util::csv::{f, CsvOut};
+
+/// Aggregated results of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub total_params: u64,
+    pub peak_unbudgeted: u64,
+    pub budget: u64,
+    pub peak_budgeted: u64,
+    pub total_remats: u64,
+    pub total_evictions: u64,
+    pub total_wall_ns: u64,
+    pub total_exec_ns: u64,
+    pub tokens_per_step: u64,
+}
+
+impl TrainReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let total_tokens = self.tokens_per_step as f64 * self.losses.len() as f64;
+        total_tokens / (self.total_wall_ns as f64 / 1e9)
+    }
+
+    /// DTR runtime overhead: wall time not spent executing operators.
+    pub fn overhead_fraction(&self) -> f64 {
+        1.0 - self.total_exec_ns as f64 / self.total_wall_ns.max(1) as f64
+    }
+}
+
+/// Run a training session per `cfg`, printing progress and returning the
+/// report. The loss curve is optionally written as CSV.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let dtr_cfg = dtr::Config {
+        budget: u64::MAX,
+        heuristic: cfg.heuristic,
+        policy: cfg.policy,
+        sqrt_sample: cfg.sqrt_sample,
+        small_filter: cfg.small_filter,
+        profile: true,
+        ..dtr::Config::default()
+    };
+    let mut engine = Engine::new(&cfg.artifacts_dir, dtr_cfg.clone(), cfg.optimizer)?;
+    let mcfg = engine.cfg;
+    println!(
+        "model: {} params, {} layers, d_model={}, seq={}, batch={}",
+        engine.total_params(),
+        mcfg.n_layers,
+        mcfg.d_model,
+        mcfg.seq,
+        mcfg.batch
+    );
+
+    // Resolve the budget from the measured unbudgeted peak.
+    let peak = engine.measure_peak()?;
+    let budget = match cfg.budget_ratio {
+        Some(r) => ((peak as f64) * r) as u64,
+        None => u64::MAX,
+    };
+    engine.dtr_cfg = dtr::Config { budget, ..dtr_cfg };
+    println!(
+        "unbudgeted peak = {:.1} MiB; budget = {}",
+        peak as f64 / (1 << 20) as f64,
+        if budget == u64::MAX {
+            "unlimited".to_string()
+        } else {
+            format!(
+                "{:.1} MiB ({}%)",
+                budget as f64 / (1 << 20) as f64,
+                (cfg.budget_ratio.unwrap() * 100.0) as u32
+            )
+        }
+    );
+
+    let mut report = TrainReport {
+        losses: Vec::with_capacity(cfg.steps),
+        total_params: engine.total_params(),
+        peak_unbudgeted: peak,
+        budget,
+        peak_budgeted: 0,
+        total_remats: 0,
+        total_evictions: 0,
+        total_wall_ns: 0,
+        total_exec_ns: 0,
+        tokens_per_step: (mcfg.batch * mcfg.seq) as u64,
+    };
+
+    let mut curve = match &cfg.curve_out {
+        Some(p) => Some(CsvOut::create(Some(p), false)?),
+        None => None,
+    };
+    if let Some(c) = &mut curve {
+        c.row(&["step", "loss", "remats", "evictions", "peak_bytes", "wall_ms"])?;
+    }
+
+    for step in 1..=cfg.steps {
+        let StepResult { loss, stats, wall_ns, exec_ns, .. } = engine.train_step()?;
+        report.losses.push(loss);
+        report.peak_budgeted = report.peak_budgeted.max(stats.peak_memory);
+        report.total_remats += stats.remat_count;
+        report.total_evictions += stats.evict_count;
+        report.total_wall_ns += wall_ns;
+        report.total_exec_ns += exec_ns;
+        if let Some(c) = &mut curve {
+            c.row(&[
+                step.to_string(),
+                f(loss as f64),
+                stats.remat_count.to_string(),
+                stats.evict_count.to_string(),
+                stats.peak_memory.to_string(),
+                f(wall_ns as f64 / 1e6),
+            ])?;
+        }
+        if step % cfg.log_every == 0 || step == 1 || step == cfg.steps {
+            println!(
+                "step {step:>4}  loss {loss:.4}  remats {:>4}  evictions {:>4}  peak {:.1} MiB  {:.0} ms",
+                stats.remat_count,
+                stats.evict_count,
+                stats.peak_memory as f64 / (1 << 20) as f64,
+                wall_ns as f64 / 1e6,
+            );
+        }
+    }
+
+    println!(
+        "done: loss {:.4} -> {:.4} | {:.0} tok/s | remats/step {:.1} | DTR overhead {:.1}%",
+        report.losses.first().copied().unwrap_or(f32::NAN),
+        report.losses.last().copied().unwrap_or(f32::NAN),
+        report.tokens_per_sec(),
+        report.total_remats as f64 / cfg.steps as f64,
+        report.overhead_fraction() * 100.0,
+    );
+    Ok(report)
+}

@@ -1,0 +1,60 @@
+//! Compute backends. The DTR runtime is backend-agnostic: the simulator uses
+//! `NullBackend` (pure cost accounting, Appendix C), while the real engine
+//! plugs in a PJRT-backed implementation (`crate::runtime::PjrtBackend`) that
+//! executes AOT-compiled HLO artifacts and holds actual buffers.
+
+use super::ids::TensorId;
+use anyhow::Result;
+
+/// Executes operator replays and owns the concrete buffers.
+///
+/// Buffers are keyed by *root tensor id*: one buffer per storage. Alias
+/// views carry no data of their own (size 0), matching the paper's
+/// storage/tensor split.
+pub trait Backend {
+    /// Execute operator `name`, reading buffers for `inputs` and producing
+    /// buffers for `outputs` (root tensors only need storage; alias outputs
+    /// may be ignored by the backend).
+    fn execute(&mut self, name: &str, inputs: &[TensorId], outputs: &[TensorId]) -> Result<()>;
+
+    /// Drop buffers for evicted root tensors.
+    fn free(&mut self, roots: &[TensorId]);
+}
+
+/// Accounting-only backend: the simulator's "device".
+#[derive(Debug, Default)]
+pub struct NullBackend {
+    pub executed: u64,
+    pub freed: u64,
+}
+
+impl NullBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Backend for NullBackend {
+    fn execute(&mut self, _name: &str, _inputs: &[TensorId], _outputs: &[TensorId]) -> Result<()> {
+        self.executed += 1;
+        Ok(())
+    }
+
+    fn free(&mut self, roots: &[TensorId]) {
+        self.freed += roots.len() as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_backend_counts() {
+        let mut b = NullBackend::new();
+        b.execute("f", &[], &[]).unwrap();
+        b.free(&[TensorId(0), TensorId(1)]);
+        assert_eq!(b.executed, 1);
+        assert_eq!(b.freed, 2);
+    }
+}

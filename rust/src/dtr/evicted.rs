@@ -1,0 +1,282 @@
+//! Exact evicted-neighborhood computation (`e*`, Sec. 2 / Appendix C.2) and
+//! the MSPS rematerialization set (`e_R`, evicted-ancestor side only).
+//!
+//! For a resident storage `S`, `e*(S)` is the union of
+//!  * the evicted *ancestors* reachable from `S` through evicted `deps`
+//!    edges (the storages that must be rematerialized before `S` can be), and
+//!  * the evicted *descendants* reachable through evicted `deps^T` edges
+//!    (the storages that need `S` resident before they can be recomputed).
+//!
+//! These are computed by DFS over evicted nodes only; every node visit bumps
+//! the graph's metadata-access counter so the Fig. 12 overhead comparison
+//! reflects real traversal work. Banished storages are excluded (they are no
+//! longer part of the dependency graph).
+
+use super::graph::Graph;
+use super::ids::StorageId;
+
+/// Reusable DFS scratch space — allocated once per runtime to keep the hot
+/// eviction loop allocation-free.
+#[derive(Debug, Default)]
+pub struct EvictedScratch {
+    stack: Vec<StorageId>,
+    /// Visit stamps, lazily grown; `stamp[s] == cur` means visited.
+    stamp: Vec<u32>,
+    cur: u32,
+}
+
+impl EvictedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            // Stamp wrapped: reset.
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.cur = 1;
+        }
+        self.stack.clear();
+    }
+
+    #[inline]
+    fn visit(&mut self, s: StorageId) -> bool {
+        let st = &mut self.stamp[s.idx()];
+        if *st == self.cur {
+            false
+        } else {
+            *st = self.cur;
+            true
+        }
+    }
+}
+
+#[inline]
+fn evicted(g: &Graph, s: StorageId) -> bool {
+    let st = g.storage(s);
+    !st.resident && !st.banished
+}
+
+/// Sum of `local_cost` over the exact evicted neighborhood `e*(s)`, plus the
+/// count of member storages. `accesses` is bumped per edge traversal.
+pub fn estar_cost(
+    g: &Graph,
+    s: StorageId,
+    scratch: &mut EvictedScratch,
+    accesses: &mut u64,
+) -> (f64, usize) {
+    scratch.begin(g.storages.len());
+    // Mark the origin so neither DFS re-enters it.
+    scratch.visit(s);
+    let mut cost = 0.0f64;
+    let mut count = 0usize;
+
+    // Ancestor side: evicted deps, transitively through evicted nodes.
+    for &d in &g.storage(s).deps {
+        *accesses += 1;
+        if evicted(g, d) && scratch.visit(d) {
+            scratch.stack.push(d);
+        }
+    }
+    while let Some(x) = scratch.stack.pop() {
+        cost += g.storage(x).local_cost as f64;
+        count += 1;
+        for &d in &g.storage(x).deps {
+            *accesses += 1;
+            if evicted(g, d) && scratch.visit(d) {
+                scratch.stack.push(d);
+            }
+        }
+    }
+
+    // Descendant side: evicted dependents, transitively.
+    for &d in &g.storage(s).dependents {
+        *accesses += 1;
+        if evicted(g, d) && scratch.visit(d) {
+            scratch.stack.push(d);
+        }
+    }
+    while let Some(x) = scratch.stack.pop() {
+        cost += g.storage(x).local_cost as f64;
+        count += 1;
+        for &d in &g.storage(x).dependents {
+            *accesses += 1;
+            if evicted(g, d) && scratch.visit(d) {
+                scratch.stack.push(d);
+            }
+        }
+    }
+
+    (cost, count)
+}
+
+/// Collect the members of `e*(s)` (for tests and the Theorem 3.1 heuristic
+/// `h_{e*}` trace experiments; the hot path uses `estar_cost`).
+pub fn estar_members(g: &Graph, s: StorageId, scratch: &mut EvictedScratch) -> Vec<StorageId> {
+    let mut acc = 0u64;
+    let mut members = Vec::new();
+    scratch.begin(g.storages.len());
+    scratch.visit(s);
+    let push_from = |scratch: &mut EvictedScratch, seeds: &[StorageId]| {
+        for &d in seeds {
+            if evicted(g, d) && scratch.visit(d) {
+                scratch.stack.push(d);
+            }
+        }
+    };
+    push_from(scratch, &g.storage(s).deps);
+    while let Some(x) = scratch.stack.pop() {
+        members.push(x);
+        let deps = g.storage(x).deps.clone();
+        push_from(scratch, &deps);
+    }
+    push_from(scratch, &g.storage(s).dependents);
+    while let Some(x) = scratch.stack.pop() {
+        members.push(x);
+        let deps = g.storage(x).dependents.clone();
+        push_from(scratch, &deps);
+    }
+    let _ = &mut acc;
+    members
+}
+
+/// MSPS rematerialization set cost: Σ local_cost over the evicted storages
+/// that must be rematerialized before `s` can be recomputed (ancestor side
+/// of `e*` only) — Peng et al. 2020's heuristic numerator.
+pub fn remat_set_cost(
+    g: &Graph,
+    s: StorageId,
+    scratch: &mut EvictedScratch,
+    accesses: &mut u64,
+) -> f64 {
+    scratch.begin(g.storages.len());
+    scratch.visit(s);
+    let mut cost = 0.0f64;
+    for &d in &g.storage(s).deps {
+        *accesses += 1;
+        if evicted(g, d) && scratch.visit(d) {
+            scratch.stack.push(d);
+        }
+    }
+    while let Some(x) = scratch.stack.pop() {
+        cost += g.storage(x).local_cost as f64;
+        for &d in &g.storage(x).deps {
+            *accesses += 1;
+            if evicted(g, d) && scratch.visit(d) {
+                scratch.stack.push(d);
+            }
+        }
+    }
+    cost
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::graph::Graph;
+    use crate::dtr::ids::TensorId;
+
+    /// Build the Figure-1 example: linear chain t0..t7 where resident set is
+    /// {t0, t2, t3, t6}; then e*(t2) = {t1, t4} and e*(t3) = {t1, t4, t5}.
+    fn fig1_graph() -> (Graph, Vec<StorageId>) {
+        let mut g = Graph::new();
+        let mut storages = Vec::new();
+        let mut prev: Option<TensorId> = None;
+        for i in 0..7 {
+            let s = g.new_storage(1, i as u32);
+            let t = if let Some(p) = prev {
+                let op = g.new_op(&format!("f{i}"), 1, vec![p]);
+                let t = g.new_tensor(s, Some(op), false);
+                g.ops[op.idx()].outputs.push(t);
+                t
+            } else {
+                g.new_tensor(s, None, false)
+            };
+            storages.push(s);
+            prev = Some(t);
+        }
+        // Residency per Fig 1: t0, t2, t3, t6 resident (indices 0..6 here:
+        // our storages[i] is t_i).
+        for (i, &s) in storages.iter().enumerate() {
+            g.storage_mut(s).resident = matches!(i, 0 | 2 | 3 | 6);
+        }
+        (g, storages)
+    }
+
+    #[test]
+    fn fig1_evicted_neighborhoods() {
+        let (g, ss) = fig1_graph();
+        let mut scratch = EvictedScratch::new();
+        let mut acc = 0u64;
+        // Note: the paper's Fig. 1 network is branched; our rebuild here is a
+        // pure chain, so the expected sets follow chain semantics.
+        // e*(t2): evicted ancestor t1 (stop at resident t0); descendant side
+        // stops immediately at resident t3 -> {t1}.
+        let (c2, n2) = estar_cost(&g, ss[2], &mut scratch, &mut acc);
+        assert_eq!(n2, 1);
+        assert_eq!(c2, 1.0);
+        let m2 = estar_members(&g, ss[2], &mut scratch);
+        assert_eq!(m2, vec![ss[1]]);
+        // e*(t3): ancestor side empty (t2 resident); evicted descendants
+        // {t4, t5} (stop at resident t6).
+        let mut m3 = estar_members(&g, ss[3], &mut scratch);
+        m3.sort();
+        assert_eq!(m3, vec![ss[4], ss[5]]);
+        let (c3, n3) = estar_cost(&g, ss[3], &mut scratch, &mut acc);
+        assert_eq!((c3, n3), (2.0, 2));
+    }
+
+    #[test]
+    fn estar_empty_when_neighbors_resident() {
+        let (mut g, ss) = fig1_graph();
+        for &s in &ss {
+            g.storage_mut(s).resident = true;
+        }
+        let mut scratch = EvictedScratch::new();
+        let mut acc = 0u64;
+        for &s in &ss {
+            let (c, n) = estar_cost(&g, s, &mut scratch, &mut acc);
+            assert_eq!((c, n), (0.0, 0));
+        }
+    }
+
+    #[test]
+    fn banished_excluded() {
+        let (mut g, ss) = fig1_graph();
+        g.storage_mut(ss[4]).banished = true;
+        let mut scratch = EvictedScratch::new();
+        let mut acc = 0u64;
+        // t3's descendants: t4 banished → stops traversal; t5 unreachable.
+        let (_, n) = estar_cost(&g, ss[3], &mut scratch, &mut acc);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn remat_set_is_ancestor_side_only() {
+        let (g, ss) = fig1_graph();
+        let mut scratch = EvictedScratch::new();
+        let mut acc = 0u64;
+        // t6 resident; its evicted ancestors are t5, t4 (stop at resident t3).
+        let c = remat_set_cost(&g, ss[6], &mut scratch, &mut acc);
+        assert_eq!(c, 2.0);
+        // t2: ancestor side is just t1.
+        let c2 = remat_set_cost(&g, ss[2], &mut scratch, &mut acc);
+        assert_eq!(c2, 1.0);
+    }
+
+    #[test]
+    fn accesses_grow_with_neighborhood() {
+        let (g, ss) = fig1_graph();
+        let mut scratch = EvictedScratch::new();
+        let mut small = 0u64;
+        let mut large = 0u64;
+        estar_cost(&g, ss[6], &mut scratch, &mut small); // neighborhood {t4,t5}
+        // Evict more first: compare vs a node with empty neighborhood.
+        estar_cost(&g, ss[0], &mut scratch, &mut large);
+        assert!(small > large);
+    }
+}

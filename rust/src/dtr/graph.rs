@@ -1,0 +1,287 @@
+//! Storage/Tensor/Operator arenas and the storage-level dependency graph
+//! (Appendix C.1/C.2 of the paper).
+//!
+//! In the paper's model (mirroring PyTorch): a *storage* is a buffer of
+//! device memory, a *tensor* is a view of a storage, and an *operator* is a
+//! pure function from tensors to tensors. DTR evicts and rematerializes at
+//! storage granularity; `deps(S)`/`deps^T(S)` are the storage-level
+//! dependency edges induced by the parent operators of every view of `S`.
+
+use super::ids::{OpId, StorageId, TensorId};
+
+/// A recorded operator application — the rematerialization closure: replay
+/// `op` on `inputs` to recompute `outputs`.
+#[derive(Debug, Clone)]
+pub struct Operator {
+    pub name: String,
+    /// Logical compute cost (the simulator's time unit; nanoseconds when the
+    /// log carries measured times, FLOP-derived units for generated logs).
+    pub cost: u64,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+/// A view of a storage. `defined` tracks whether this view is currently
+/// materialized: a tensor becomes undefined when its storage is evicted and
+/// is re-defined only when its own parent operator is replayed (the paper's
+/// `defined(t)` condition — view metadata is destroyed with the storage).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub storage: StorageId,
+    /// Parent operator. Constants have no parent (not rematerializable).
+    pub op: Option<OpId>,
+    pub defined: bool,
+    /// True iff this tensor is not the root view of its storage.
+    pub alias: bool,
+}
+
+/// A buffer of memory plus DTR metadata.
+#[derive(Debug, Clone)]
+pub struct Storage {
+    pub size: u64,
+    pub root: TensorId,
+    pub tensors: Vec<TensorId>,
+    pub resident: bool,
+    /// Lock count held by in-flight (re)materializations.
+    pub locks: u32,
+    /// Pinned storages are unevictable: constants, banish-neighbors, and
+    /// final outputs. Pinned storages may still be banished.
+    pub pinned: bool,
+    pub banished: bool,
+    /// External (user program) reference count.
+    pub refs: u32,
+    /// Logical time of last access (max over views).
+    pub last_access: u64,
+    /// Cached `cost(S)` = Σ cost(op(t)) over views t (Appendix C.2); updated
+    /// when views are added.
+    pub local_cost: u64,
+    /// Storage-level dependencies (dedup'd, excludes self).
+    pub deps: Vec<StorageId>,
+    /// Storage-level dependents (dedup'd, excludes self).
+    pub dependents: Vec<StorageId>,
+    /// Union-find handle for the relaxed evicted neighborhood.
+    pub uf: u32,
+    /// Position in the evictable pool (`usize::MAX` when not pooled).
+    pub pool_pos: usize,
+}
+
+impl Storage {
+    #[inline]
+    pub fn evictable(&self) -> bool {
+        self.resident && self.locks == 0 && !self.pinned && !self.banished
+    }
+}
+
+/// The arena. Also tracks `metadata_accesses` for the Fig. 12 experiment:
+/// every dependency-edge traversal performed for heuristic evaluation or
+/// metadata maintenance bumps the counter.
+#[derive(Debug, Default)]
+pub struct Graph {
+    pub ops: Vec<Operator>,
+    pub tensors: Vec<Tensor>,
+    pub storages: Vec<Storage>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn op(&self, id: OpId) -> &Operator {
+        &self.ops[id.idx()]
+    }
+
+    #[inline]
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id.idx()]
+    }
+
+    #[inline]
+    pub fn tensor_mut(&mut self, id: TensorId) -> &mut Tensor {
+        &mut self.tensors[id.idx()]
+    }
+
+    #[inline]
+    pub fn storage(&self, id: StorageId) -> &Storage {
+        &self.storages[id.idx()]
+    }
+
+    #[inline]
+    pub fn storage_mut(&mut self, id: StorageId) -> &mut Storage {
+        &mut self.storages[id.idx()]
+    }
+
+    #[inline]
+    pub fn storage_of(&self, t: TensorId) -> StorageId {
+        self.tensors[t.idx()].storage
+    }
+
+    /// Allocate a new storage whose root view is created by the caller
+    /// immediately after (root is patched in by `new_tensor`).
+    pub fn new_storage(&mut self, size: u64, uf: u32) -> StorageId {
+        let id = StorageId(self.storages.len() as u32);
+        self.storages.push(Storage {
+            size,
+            root: TensorId(u32::MAX),
+            tensors: Vec::new(),
+            resident: false,
+            locks: 0,
+            pinned: false,
+            banished: false,
+            refs: 0,
+            last_access: 0,
+            local_cost: 0,
+            deps: Vec::new(),
+            dependents: Vec::new(),
+            uf,
+            pool_pos: usize::MAX,
+        });
+        id
+    }
+
+    /// Register a tensor view of `storage` produced by `op` (None for
+    /// constants). Maintains the storage-level dependency edges and the
+    /// cached local cost.
+    pub fn new_tensor(&mut self, storage: StorageId, op: Option<OpId>, alias: bool) -> TensorId {
+        let id = TensorId(self.tensors.len() as u32);
+        self.tensors.push(Tensor { storage, op, defined: false, alias });
+        if self.storages[storage.idx()].root.0 == u32::MAX {
+            self.storages[storage.idx()].root = id;
+        }
+        self.storages[storage.idx()].tensors.push(id);
+        if let Some(op_id) = op {
+            let cost = self.ops[op_id.idx()].cost;
+            self.storages[storage.idx()].local_cost += cost;
+            // Storage-level dependency edges from this view's parent op.
+            let input_storages: Vec<StorageId> = self.ops[op_id.idx()]
+                .inputs
+                .iter()
+                .map(|&t| self.tensors[t.idx()].storage)
+                .collect();
+            for s in input_storages {
+                if s != storage && !self.storages[storage.idx()].deps.contains(&s) {
+                    self.storages[storage.idx()].deps.push(s);
+                    self.storages[s.idx()].dependents.push(storage);
+                }
+            }
+        }
+        id
+    }
+
+    pub fn new_op(
+        &mut self,
+        name: &str,
+        cost: u64,
+        inputs: Vec<TensorId>,
+    ) -> OpId {
+        let id = OpId(self.ops.len() as u32);
+        self.ops.push(Operator { name: name.to_string(), cost, inputs, outputs: Vec::new() });
+        id
+    }
+
+    /// Is every view of this storage's op-cone banished-safe, i.e. does `S`
+    /// have an evicted (non-banished) dependent? Banishing requires none
+    /// (Appendix C.4: `deps_e^T(S) = ∅`).
+    pub fn has_evicted_dependent(&self, s: StorageId) -> bool {
+        self.storages[s.idx()]
+            .dependents
+            .iter()
+            .any(|&d| {
+                let st = &self.storages[d.idx()];
+                !st.banished && !st.resident
+            })
+    }
+
+    /// Total bytes of resident storages (accounting check).
+    pub fn resident_bytes(&self) -> u64 {
+        self.storages.iter().filter(|s| s.resident).map(|s| s.size).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup_chain() -> (Graph, Vec<TensorId>) {
+        // c0 -> t1 -> t2 with simple ops.
+        let mut g = Graph::new();
+        let s0 = g.new_storage(4, 0);
+        let t0 = g.new_tensor(s0, None, false);
+        let op1 = g.new_op("f1", 10, vec![t0]);
+        let s1 = g.new_storage(4, 1);
+        let t1 = g.new_tensor(s1, Some(op1), false);
+        g.ops[op1.idx()].outputs.push(t1);
+        let op2 = g.new_op("f2", 20, vec![t1]);
+        let s2 = g.new_storage(4, 2);
+        let t2 = g.new_tensor(s2, Some(op2), false);
+        g.ops[op2.idx()].outputs.push(t2);
+        (g, vec![t0, t1, t2])
+    }
+
+    #[test]
+    fn dependency_edges_maintained() {
+        let (g, ts) = setup_chain();
+        let s1 = g.storage_of(ts[1]);
+        let s0 = g.storage_of(ts[0]);
+        let s2 = g.storage_of(ts[2]);
+        assert_eq!(g.storage(s1).deps, vec![s0]);
+        assert_eq!(g.storage(s1).dependents, vec![s2]);
+        assert_eq!(g.storage(s0).dependents, vec![s1]);
+        assert!(g.storage(s2).dependents.is_empty());
+    }
+
+    #[test]
+    fn local_cost_cached() {
+        let (g, ts) = setup_chain();
+        assert_eq!(g.storage(g.storage_of(ts[1])).local_cost, 10);
+        assert_eq!(g.storage(g.storage_of(ts[2])).local_cost, 20);
+        // Constant has no parent op → zero cost.
+        assert_eq!(g.storage(g.storage_of(ts[0])).local_cost, 0);
+    }
+
+    #[test]
+    fn alias_adds_view_cost_and_no_self_dep() {
+        let (mut g, ts) = setup_chain();
+        let s1 = g.storage_of(ts[1]);
+        // View op: input t1, output aliases storage s1.
+        let vop = g.new_op("view", 1, vec![ts[1]]);
+        let tv = g.new_tensor(s1, Some(vop), true);
+        g.ops[vop.idx()].outputs.push(tv);
+        let st = g.storage(s1);
+        // cost(S) = 10 (f1) + 1 (view)
+        assert_eq!(st.local_cost, 11);
+        // deps(S) must not include S itself.
+        assert!(!st.deps.contains(&s1));
+        assert_eq!(st.tensors.len(), 2);
+        assert_eq!(st.root, ts[1]);
+    }
+
+    #[test]
+    fn evicted_dependent_detection() {
+        let (mut g, ts) = setup_chain();
+        let s1 = g.storage_of(ts[1]);
+        let s2 = g.storage_of(ts[2]);
+        g.storage_mut(s2).resident = false;
+        assert!(g.has_evicted_dependent(s1));
+        g.storage_mut(s2).resident = true;
+        assert!(!g.has_evicted_dependent(s1));
+        // Banished dependents don't count.
+        g.storage_mut(s2).resident = false;
+        g.storage_mut(s2).banished = true;
+        assert!(!g.has_evicted_dependent(s1));
+    }
+
+    #[test]
+    fn evictable_conditions() {
+        let (mut g, ts) = setup_chain();
+        let s1 = g.storage_of(ts[1]);
+        g.storage_mut(s1).resident = true;
+        assert!(g.storage(s1).evictable());
+        g.storage_mut(s1).locks = 1;
+        assert!(!g.storage(s1).evictable());
+        g.storage_mut(s1).locks = 0;
+        g.storage_mut(s1).pinned = true;
+        assert!(!g.storage(s1).evictable());
+    }
+}

@@ -1,0 +1,361 @@
+//! The eviction-heuristic family (Sec. 4.1 + Appendix C.3/D.1).
+//!
+//! Every heuristic is a score over resident storages; DTR evicts the
+//! minimum-scoring evictable storage. All of the paper's heuristics are
+//! expressible in the parameterized form `h'(s,m,c)(S) = c(S)/[m(S)·s(S)]`
+//! with each factor optionally ablated:
+//!
+//! * `h_DTR`       = Param { cost: EStar,   size: on,  staleness: on  }
+//! * `h_DTR^eq`    = Param { cost: EqClass, size: on,  staleness: on  }
+//! * `h_DTR^local` = Param { cost: Local,   size: on,  staleness: on  }
+//! * `h_LRU`       = Param { cost: None,    size: off, staleness: on  }
+//! * `h_size`      = Param { cost: None,    size: on,  staleness: off }
+//! * `h_MSPS`      = MSPS (cost over the evicted *remat set*, size only)
+//! * `h_rand`      = Random
+//! * `h_{e*}`      = EStarCount (Appendix A: |e*(S)|, used in Theorem 3.1)
+
+use super::evicted::{estar_cost, remat_set_cost, EvictedScratch};
+use super::graph::Graph;
+use super::ids::StorageId;
+use super::unionfind::UnionFind;
+use crate::util::rng::Rng;
+
+/// Which compute-cost measure feeds the numerator (Appendix D.1's `c`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostKind {
+    /// Exact evicted neighborhood `e*` (directed, transitive).
+    EStar,
+    /// Union-find approximation `ẽ*` (undirected components + split hack).
+    EqClass,
+    /// Parent-op cost only.
+    Local,
+    /// Ablated: constant 1.
+    NoCost,
+}
+
+/// Fully parameterized heuristic spec: `h'(s, m, c)` from Appendix D.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub cost: CostKind,
+    pub use_size: bool,
+    pub use_staleness: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Heuristic {
+    Param(ParamSpec),
+    /// Peng et al. 2020 MSPS: (c0 + Σ over evicted remat set) / m.
+    Msps,
+    /// Uniform random score (metadata-free baseline).
+    Random,
+    /// |e*(S)| — the reduced heuristic of Appendix A (Theorem 3.1).
+    EStarCount,
+}
+
+impl Heuristic {
+    pub fn dtr() -> Self {
+        Heuristic::Param(ParamSpec { cost: CostKind::EStar, use_size: true, use_staleness: true })
+    }
+    pub fn dtr_eq() -> Self {
+        Heuristic::Param(ParamSpec { cost: CostKind::EqClass, use_size: true, use_staleness: true })
+    }
+    pub fn dtr_local() -> Self {
+        Heuristic::Param(ParamSpec { cost: CostKind::Local, use_size: true, use_staleness: true })
+    }
+    pub fn lru() -> Self {
+        Heuristic::Param(ParamSpec { cost: CostKind::NoCost, use_size: false, use_staleness: true })
+    }
+    pub fn size() -> Self {
+        Heuristic::Param(ParamSpec { cost: CostKind::NoCost, use_size: true, use_staleness: false })
+    }
+
+    /// Canonical name used in CSV output and CLI flags.
+    pub fn name(&self) -> String {
+        match self {
+            Heuristic::Param(p) => match (p.cost, p.use_size, p.use_staleness) {
+                (CostKind::EStar, true, true) => "h_dtr".into(),
+                (CostKind::EqClass, true, true) => "h_dtr_eq".into(),
+                (CostKind::Local, true, true) => "h_dtr_local".into(),
+                (CostKind::NoCost, false, true) => "h_lru".into(),
+                (CostKind::NoCost, true, false) => "h_size".into(),
+                (c, m, s) => format!(
+                    "h_param_c{}_m{}_s{}",
+                    match c {
+                        CostKind::EStar => "estar",
+                        CostKind::EqClass => "eq",
+                        CostKind::Local => "local",
+                        CostKind::NoCost => "no",
+                    },
+                    if m { "yes" } else { "no" },
+                    if s { "yes" } else { "no" }
+                ),
+            },
+            Heuristic::Msps => "h_msps".into(),
+            Heuristic::Random => "h_rand".into(),
+            Heuristic::EStarCount => "h_estar_count".into(),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Heuristic> {
+        Some(match name {
+            "h_dtr" | "dtr" => Heuristic::dtr(),
+            "h_dtr_eq" | "dtr_eq" | "eq" => Heuristic::dtr_eq(),
+            "h_dtr_local" | "dtr_local" | "local" => Heuristic::dtr_local(),
+            "h_lru" | "lru" => Heuristic::lru(),
+            "h_size" | "size" => Heuristic::size(),
+            "h_msps" | "msps" => Heuristic::Msps,
+            "h_rand" | "rand" | "random" => Heuristic::Random,
+            "h_estar_count" | "estar_count" => Heuristic::EStarCount,
+            _ => return None,
+        })
+    }
+
+    /// All heuristics compared in Fig. 2.
+    pub fn fig2_set() -> Vec<Heuristic> {
+        vec![
+            Heuristic::dtr(),
+            Heuristic::dtr_eq(),
+            Heuristic::dtr_local(),
+            Heuristic::lru(),
+            Heuristic::size(),
+            Heuristic::Msps,
+            Heuristic::Random,
+        ]
+    }
+
+    /// The full ablation grid of Appendix D.1: c ∈ {e*, eq, local, no} ×
+    /// s ∈ {yes,no} × m ∈ {yes,no}.
+    pub fn ablation_grid() -> Vec<Heuristic> {
+        let mut out = Vec::new();
+        for cost in [CostKind::EStar, CostKind::EqClass, CostKind::Local, CostKind::NoCost] {
+            for use_size in [true, false] {
+                for use_staleness in [true, false] {
+                    out.push(Heuristic::Param(ParamSpec { cost, use_size, use_staleness }));
+                }
+            }
+        }
+        out
+    }
+
+    /// Does this heuristic need union-find evicted-component maintenance?
+    pub fn needs_uf(&self) -> bool {
+        matches!(self, Heuristic::Param(p) if p.cost == CostKind::EqClass)
+    }
+}
+
+/// Mutable context needed to evaluate scores.
+pub struct ScoreCtx<'a> {
+    pub graph: &'a Graph,
+    pub uf: &'a mut UnionFind,
+    pub scratch: &'a mut EvictedScratch,
+    pub clock: u64,
+    pub rng: &'a mut Rng,
+    /// Metadata-access counter (Fig. 12).
+    pub accesses: &'a mut u64,
+    /// Scratch for dedup'ing UF roots during ẽ* queries.
+    pub root_buf: &'a mut Vec<u32>,
+}
+
+/// Score a storage; lower = evicted first. All scores are strictly positive
+/// so ratios remain meaningful.
+pub fn score(h: Heuristic, s: StorageId, ctx: &mut ScoreCtx<'_>) -> f64 {
+    *ctx.accesses += 1; // the heuristic evaluation itself (paper counts these)
+    let st = ctx.graph.storage(s);
+    match h {
+        Heuristic::Random => ctx.rng.f64().max(f64::MIN_POSITIVE),
+        Heuristic::EStarCount => {
+            let (_, n) = estar_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
+            n as f64 + 1.0
+        }
+        Heuristic::Msps => {
+            let c = st.local_cost as f64
+                + remat_set_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
+            (c + 1.0) / (st.size.max(1) as f64)
+        }
+        Heuristic::Param(p) => {
+            let c = match p.cost {
+                CostKind::NoCost => 1.0,
+                CostKind::Local => st.local_cost as f64 + 1.0,
+                CostKind::EStar => {
+                    let (ec, _) = estar_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
+                    st.local_cost as f64 + ec + 1.0
+                }
+                CostKind::EqClass => {
+                    st.local_cost as f64 + eq_neighborhood_cost(s, ctx) + 1.0
+                }
+            };
+            let m = if p.use_size { st.size.max(1) as f64 } else { 1.0 };
+            let stale = if p.use_staleness {
+                (ctx.clock.saturating_sub(st.last_access) + 1) as f64
+            } else {
+                1.0
+            };
+            c / (m * stale)
+        }
+    }
+}
+
+/// ẽ*(S): sum the running costs of the distinct UF components adjacent to S
+/// through evicted deps/dependents — *without* unioning them (Appendix C.2:
+/// "no UF unions are performed when querying").
+fn eq_neighborhood_cost(s: StorageId, ctx: &mut ScoreCtx<'_>) -> f64 {
+    ctx.root_buf.clear();
+    let st = ctx.graph.storage(s);
+    let mut total = 0.0;
+    for list in [&st.deps, &st.dependents] {
+        for &n in list.iter() {
+            *ctx.accesses += 1;
+            let nst = ctx.graph.storage(n);
+            if !nst.resident && !nst.banished {
+                let root = ctx.uf.find(nst.uf);
+                if !ctx.root_buf.contains(&root) {
+                    ctx.root_buf.push(root);
+                    total += ctx.uf.component_cost(root);
+                }
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::graph::Graph;
+    use crate::dtr::ids::TensorId;
+
+    fn chain(n: usize, costs: &[u64], sizes: &[u64]) -> (Graph, Vec<StorageId>, UnionFind) {
+        let mut g = Graph::new();
+        let mut uf = UnionFind::new();
+        let mut ss = Vec::new();
+        let mut prev: Option<TensorId> = None;
+        for i in 0..n {
+            let h = uf.make_set();
+            let s = g.new_storage(sizes[i], h);
+            let t = if let Some(p) = prev {
+                let op = g.new_op(&format!("f{i}"), costs[i], vec![p]);
+                let t = g.new_tensor(s, Some(op), false);
+                g.ops[op.idx()].outputs.push(t);
+                t
+            } else {
+                g.new_tensor(s, None, false)
+            };
+            g.storage_mut(s).resident = true;
+            ss.push(s);
+            prev = Some(t);
+        }
+        (g, ss, uf)
+    }
+
+    fn ctx_score(h: Heuristic, g: &Graph, uf: &mut UnionFind, clock: u64, s: StorageId) -> f64 {
+        let mut scratch = EvictedScratch::new();
+        let mut rng = Rng::new(1);
+        let mut acc = 0u64;
+        let mut roots = Vec::new();
+        let mut ctx = ScoreCtx {
+            graph: g,
+            uf,
+            scratch: &mut scratch,
+            clock,
+            rng: &mut rng,
+            accesses: &mut acc,
+            root_buf: &mut roots,
+        };
+        score(h, s, &mut ctx)
+    }
+
+    #[test]
+    fn lru_prefers_stalest() {
+        let (mut g, ss, mut uf) = chain(3, &[0, 5, 5], &[1, 1, 1]);
+        g.storage_mut(ss[1]).last_access = 1;
+        g.storage_mut(ss[2]).last_access = 9;
+        let s1 = ctx_score(Heuristic::lru(), &g, &mut uf, 10, ss[1]);
+        let s2 = ctx_score(Heuristic::lru(), &g, &mut uf, 10, ss[2]);
+        assert!(s1 < s2, "stalest tensor must score lowest");
+    }
+
+    #[test]
+    fn size_prefers_largest() {
+        let (g, ss, mut uf) = chain(3, &[0, 5, 5], &[1, 100, 10]);
+        let s1 = ctx_score(Heuristic::size(), &g, &mut uf, 10, ss[1]);
+        let s2 = ctx_score(Heuristic::size(), &g, &mut uf, 10, ss[2]);
+        assert!(s1 < s2, "largest tensor must score lowest");
+    }
+
+    #[test]
+    fn local_prefers_cheap() {
+        let (g, ss, mut uf) = chain(3, &[0, 100, 2], &[1, 1, 1]);
+        let cheap = ctx_score(Heuristic::dtr_local(), &g, &mut uf, 10, ss[2]);
+        let costly = ctx_score(Heuristic::dtr_local(), &g, &mut uf, 10, ss[1]);
+        assert!(cheap < costly);
+    }
+
+    #[test]
+    fn estar_penalizes_evicted_chains() {
+        // Evict middle of a 5-chain; its resident neighbors' e* grows.
+        let (mut g, ss, mut uf) = chain(5, &[0, 10, 10, 10, 10], &[1; 5]);
+        g.storage_mut(ss[2]).resident = false;
+        let with_neighbors = ctx_score(Heuristic::dtr(), &g, &mut uf, 1, ss[1]);
+        let isolated = ctx_score(Heuristic::dtr(), &g, &mut uf, 1, ss[4]);
+        // ss[1] has evicted neighbor (cost 10) + own cost 10; ss[4] costs 10
+        // with an empty neighborhood... but ss[3] borders the evicted ss[2]
+        // too. Compare ss[1] (borders evicted) with ss[4] (does not).
+        assert!(with_neighbors > isolated);
+    }
+
+    #[test]
+    fn eqclass_matches_estar_without_splits() {
+        // Evict a contiguous run; for chains (undirected = directed closure
+        // union) the component cost equals the exact e* cost.
+        let (mut g, ss, mut uf) = chain(6, &[0, 7, 7, 7, 7, 7], &[1; 6]);
+        for &s in &ss[2..4] {
+            // simulate runtime eviction bookkeeping
+            g.storage_mut(s).resident = false;
+            let h = g.storage(s).uf;
+            uf.add_cost(h, g.storage(s).local_cost as f64);
+        }
+        uf.union(g.storage(ss[2]).uf, g.storage(ss[3]).uf);
+        let exact = ctx_score(Heuristic::dtr(), &g, &mut uf, 1, ss[1]);
+        let approx = ctx_score(Heuristic::dtr_eq(), &g, &mut uf, 1, ss[1]);
+        assert!((exact - approx).abs() < 1e-9, "exact={exact} approx={approx}");
+    }
+
+    #[test]
+    fn estar_count_is_appendix_a_heuristic() {
+        let (mut g, ss, mut uf) = chain(5, &[0, 1, 1, 1, 1], &[1; 5]);
+        g.storage_mut(ss[1]).resident = false;
+        g.storage_mut(ss[2]).resident = false;
+        // ss[3] borders the 2-evicted run → |e*| = 2 → score 3.
+        let sc = ctx_score(Heuristic::EStarCount, &g, &mut uf, 1, ss[3]);
+        assert_eq!(sc, 3.0);
+    }
+
+    #[test]
+    fn msps_ignores_staleness() {
+        let (mut g, ss, mut uf) = chain(3, &[0, 5, 5], &[1, 1, 1]);
+        g.storage_mut(ss[1]).last_access = 0;
+        let a = ctx_score(Heuristic::Msps, &g, &mut uf, 10, ss[1]);
+        g.storage_mut(ss[1]).last_access = 9;
+        let b = ctx_score(Heuristic::Msps, &g, &mut uf, 10, ss[1]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for h in Heuristic::fig2_set() {
+            assert_eq!(Heuristic::parse(&h.name()), Some(h), "{}", h.name());
+        }
+    }
+
+    #[test]
+    fn ablation_grid_is_16() {
+        assert_eq!(Heuristic::ablation_grid().len(), 16);
+    }
+
+    #[test]
+    fn random_scores_positive_and_varied() {
+        let (g, ss, mut uf) = chain(2, &[0, 1], &[1, 1]);
+        let a = ctx_score(Heuristic::Random, &g, &mut uf, 1, ss[1]);
+        assert!(a > 0.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Index newtypes for the DTR arenas. Everything is arena-allocated and
+//! referenced by dense u32 ids, which keeps the metadata structures flat and
+//! cheap to traverse (the eviction loop touches them constantly).
+
+macro_rules! id_type {
+    ($(#[$doc:meta])* $name:ident) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            #[inline]
+            pub fn idx(self) -> usize {
+                self.0 as usize
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}{}", stringify!($name).chars().next().unwrap(), self.0)
+            }
+        }
+    };
+}
+
+id_type!(
+    /// A buffer of device memory (the unit DTR evicts/rematerializes).
+    StorageId
+);
+id_type!(
+    /// A view of a storage; the unit operators produce and consume.
+    TensorId
+);
+id_type!(
+    /// A recorded operator application (the rematerialization closure).
+    OpId
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_roundtrip() {
+        assert_eq!(StorageId(7).idx(), 7);
+        assert_eq!(TensorId(0).idx(), 0);
+        assert_eq!(OpId(42).idx(), 42);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(StorageId(3).to_string(), "S3");
+        assert_eq!(TensorId(3).to_string(), "T3");
+        assert_eq!(OpId(3).to_string(), "O3");
+    }
+}

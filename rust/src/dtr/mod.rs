@@ -1,0 +1,24 @@
+//! Dynamic Tensor Rematerialization: the paper's core runtime.
+//!
+//! See DESIGN.md §2–3. Public surface:
+//! * [`Runtime`] — the online eviction/rematerialization algorithm (Fig. 1);
+//! * [`Heuristic`] — the eviction-score family of Sec. 4.1 / Appendix D;
+//! * [`DeallocPolicy`] — ignore / eager-evict / banish (Sec. 2);
+//! * [`Backend`] — pluggable compute: accounting-only for simulation, PJRT
+//!   for real execution.
+
+pub mod backend;
+pub mod evicted;
+pub mod graph;
+pub mod heuristics;
+pub mod ids;
+pub mod policy;
+pub mod runtime;
+pub mod unionfind;
+
+pub use backend::{Backend, NullBackend};
+pub use graph::{Graph, Operator, Storage, Tensor};
+pub use heuristics::{CostKind, Heuristic, ParamSpec};
+pub use ids::{OpId, StorageId, TensorId};
+pub use policy::DeallocPolicy;
+pub use runtime::{Config, DtrError, OutSpec, Runtime, Stats};

@@ -1,0 +1,53 @@
+//! Deallocation policies (Sec. 2 "Deallocation" + Appendix C.5/D.2).
+//!
+//! When the source program drops its last external reference to a storage,
+//! DTR can: ignore the event (keep the storage as a normal eviction
+//! candidate), *eagerly evict* it (the paper's default — preempts a
+//! desirable eviction, cannot free constants), or *banish* it (permanently
+//! free, can free constants, but pins all dependents forever).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeallocPolicy {
+    /// Disregard deallocations entirely.
+    Ignore,
+    /// Evict as soon as all external references are dropped (paper default).
+    EagerEvict,
+    /// Permanently free when no evicted dependents remain; pins dependents.
+    Banish,
+}
+
+impl DeallocPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeallocPolicy::Ignore => "ignore",
+            DeallocPolicy::EagerEvict => "eager",
+            DeallocPolicy::Banish => "banish",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ignore" => DeallocPolicy::Ignore,
+            "eager" | "eager_evict" => DeallocPolicy::EagerEvict,
+            "banish" => DeallocPolicy::Banish,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [DeallocPolicy; 3] {
+        [DeallocPolicy::Ignore, DeallocPolicy::EagerEvict, DeallocPolicy::Banish]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in DeallocPolicy::all() {
+            assert_eq!(DeallocPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(DeallocPolicy::parse("bogus"), None);
+    }
+}

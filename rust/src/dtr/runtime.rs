@@ -1,0 +1,992 @@
+//! The DTR runtime: the paper's core algorithm (Figure 1) over the storage
+//! model of Appendix C.
+//!
+//! `Runtime::call` records a new operator and performs it; `perform`
+//! recursively (re)materializes undefined inputs, evicts under the budget
+//! heuristic to make room for outputs, executes through the pluggable
+//! `Backend`, and maintains all metadata: staleness clocks, cached local
+//! costs, union-find evicted components, locks, pins, and reference counts.
+//! Deallocation events are routed through the configured `DeallocPolicy`.
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::evicted::EvictedScratch;
+use super::graph::Graph;
+use super::heuristics::{score, Heuristic, ScoreCtx};
+use super::ids::{OpId, StorageId, TensorId};
+use super::policy::DeallocPolicy;
+use super::unionfind::UnionFind;
+use crate::util::rng::Rng;
+
+/// Runtime configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Memory budget in bytes. `u64::MAX` disables eviction.
+    pub budget: u64,
+    pub heuristic: Heuristic,
+    pub policy: DeallocPolicy,
+    /// Appendix E.2 optimization: only search a random √n sample of the pool.
+    pub sqrt_sample: bool,
+    /// Appendix E.2 optimization: skip tensors smaller than 1% of the pool's
+    /// mean size during victim search.
+    pub small_filter: bool,
+    /// Seed for `h_rand` and the sampling optimization.
+    pub seed: u64,
+    /// Measure wall-clock time of the victim-search loop (Fig. 4 profiling).
+    pub profile: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            budget: u64::MAX,
+            heuristic: Heuristic::dtr_eq(),
+            policy: DeallocPolicy::EagerEvict,
+            sqrt_sample: false,
+            small_filter: false,
+            seed: 0x5EED,
+            profile: false,
+        }
+    }
+}
+
+/// Counters and gauges exposed to every experiment harness.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    /// Logical clock: accumulated compute cost (base + remat).
+    pub clock: u64,
+    /// Cost of first-time operator executions.
+    pub base_compute: u64,
+    /// Cost of rematerializations (the checkpointing overhead).
+    pub remat_compute: u64,
+    pub remat_count: u64,
+    pub evict_count: u64,
+    pub banish_count: u64,
+    /// Storage/metadata accesses by heuristic evaluation + maintenance
+    /// (Fig. 12 / Appendix D.3).
+    pub metadata_accesses: u64,
+    pub memory: u64,
+    pub peak_memory: u64,
+    /// Wall time spent inside victim selection (Fig. 4 "eviction loop" +
+    /// "cost compute"), ns. Only populated when `cfg.profile`.
+    pub eviction_loop_ns: u64,
+    /// Subset of `eviction_loop_ns` spent evaluating heuristic scores.
+    pub cost_compute_ns: u64,
+    /// Number of victim-search passes.
+    pub eviction_searches: u64,
+}
+
+impl Stats {
+    /// Total compute (the simulator's headline metric).
+    pub fn total_compute(&self) -> u64 {
+        self.base_compute + self.remat_compute
+    }
+
+    /// Slowdown factor vs. the unbudgeted execution.
+    pub fn slowdown(&self) -> f64 {
+        if self.base_compute == 0 {
+            1.0
+        } else {
+            self.total_compute() as f64 / self.base_compute as f64
+        }
+    }
+}
+
+/// DTR failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum DtrError {
+    #[error("out of memory: need {need} free bytes, have {free} (budget {budget}, resident {resident}, no evictable storage)")]
+    Oom { need: u64, free: u64, budget: u64, resident: u64 },
+    #[error("tensor {0} is an evicted constant and cannot be rematerialized")]
+    EvictedConstant(TensorId),
+    #[error("tensor {0} depends on banished storage and cannot be rematerialized")]
+    Banished(TensorId),
+    #[error("rematerialization recursion exceeded {0} frames (thrashing)")]
+    TooDeep(usize),
+}
+
+/// Output specification for `Runtime::call`.
+#[derive(Debug, Clone, Copy)]
+pub struct OutSpec {
+    /// Size in bytes of the freshly allocated storage; ignored for aliases.
+    pub size: u64,
+    /// If `Some(i)`, the output is a view of the storage of `inputs[i]`.
+    pub alias_of: Option<usize>,
+}
+
+impl OutSpec {
+    pub fn sized(size: u64) -> Self {
+        OutSpec { size, alias_of: None }
+    }
+    pub fn alias(of_input: usize) -> Self {
+        OutSpec { size: 0, alias_of: Some(of_input) }
+    }
+}
+
+const MAX_REMAT_DEPTH: usize = 1 << 20;
+
+pub struct Runtime<B: Backend> {
+    pub cfg: Config,
+    pub graph: Graph,
+    pub stats: Stats,
+    backend: B,
+    uf: UnionFind,
+    scratch: EvictedScratch,
+    rng: Rng,
+    /// Evictable storages (resident, unlocked, unpinned).
+    pool: Vec<StorageId>,
+    /// Storages awaiting banishment (policy = Banish, blocked on evicted
+    /// dependents).
+    pending_banish: Vec<StorageId>,
+    /// Scratch for ẽ* root dedup.
+    root_buf: Vec<u32>,
+    /// Scratch for double-compute bookkeeping.
+    was_defined: Vec<bool>,
+}
+
+impl<B: Backend> Runtime<B> {
+    pub fn new(cfg: Config, backend: B) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Runtime {
+            cfg,
+            graph: Graph::new(),
+            stats: Stats::default(),
+            backend,
+            uf: UnionFind::new(),
+            scratch: EvictedScratch::new(),
+            rng,
+            pool: Vec::new(),
+            pending_banish: Vec::new(),
+            root_buf: Vec::new(),
+            was_defined: Vec::new(),
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    // ---------------------------------------------------------------- pool
+
+    #[inline]
+    fn pool_add(&mut self, s: StorageId) {
+        if self.graph.storage(s).pool_pos == usize::MAX && self.graph.storage(s).evictable() {
+            self.graph.storage_mut(s).pool_pos = self.pool.len();
+            self.pool.push(s);
+        }
+    }
+
+    #[inline]
+    fn pool_remove(&mut self, s: StorageId) {
+        let pos = self.graph.storage(s).pool_pos;
+        if pos != usize::MAX {
+            let last = *self.pool.last().unwrap();
+            self.pool.swap_remove(pos);
+            if pos < self.pool.len() {
+                self.graph.storage_mut(last).pool_pos = pos;
+            }
+            self.graph.storage_mut(s).pool_pos = usize::MAX;
+        }
+    }
+
+    /// Re-examine pool membership after flag changes.
+    fn pool_refresh(&mut self, s: StorageId) {
+        if self.graph.storage(s).evictable() {
+            self.pool_add(s);
+        } else {
+            self.pool_remove(s);
+        }
+    }
+
+    // ------------------------------------------------------------ creation
+
+    /// Register a constant (weights, inputs): resident, pinned, never
+    /// rematerializable. Returns its tensor.
+    pub fn constant(&mut self, size: u64) -> TensorId {
+        let uf = self.uf.make_set();
+        let s = self.graph.new_storage(size, uf);
+        let t = self.graph.new_tensor(s, None, false);
+        self.graph.tensor_mut(t).defined = true;
+        let st = self.graph.storage_mut(s);
+        st.resident = true;
+        st.pinned = true;
+        st.refs = 1;
+        st.last_access = self.stats.clock;
+        self.stats.memory += size;
+        self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
+        t
+    }
+
+    /// Record and perform a new operator application. Returns the output
+    /// tensors. Each output gets one external reference.
+    pub fn call(
+        &mut self,
+        name: &str,
+        cost: u64,
+        inputs: &[TensorId],
+        outputs: &[OutSpec],
+    ) -> Result<Vec<TensorId>> {
+        let op = self.graph.new_op(name, cost, inputs.to_vec());
+        let mut out_tensors = Vec::with_capacity(outputs.len());
+        for spec in outputs {
+            let (sid, alias) = match spec.alias_of {
+                Some(i) => (self.graph.storage_of(inputs[i]), true),
+                None => {
+                    let uf = self.uf.make_set();
+                    (self.graph.new_storage(spec.size, uf), false)
+                }
+            };
+            let t = self.graph.new_tensor(sid, Some(op), alias);
+            out_tensors.push(t);
+        }
+        self.graph.ops[op.idx()].outputs = out_tensors.clone();
+        for &t in &out_tensors {
+            let sid = self.graph.storage_of(t);
+            self.graph.storage_mut(sid).refs += 1;
+        }
+        self.perform(op, 0)?;
+        Ok(out_tensors)
+    }
+
+    // ----------------------------------------------------------- execution
+
+    /// Perform (or replay) an operator: the heart of Figure 1.
+    fn perform(&mut self, op: OpId, depth: usize) -> Result<()> {
+        if depth > MAX_REMAT_DEPTH {
+            return Err(DtrError::TooDeep(depth).into());
+        }
+        let is_remat = depth > 0;
+        let inputs = self.graph.op(op).inputs.clone();
+
+        // Lock inputs so nothing we need gets evicted mid-flight.
+        for &i in &inputs {
+            let sid = self.graph.storage_of(i);
+            self.graph.storage_mut(sid).locks += 1;
+            self.pool_remove(sid);
+        }
+
+        let result = self.perform_locked(op, &inputs, is_remat, depth);
+
+        // Unlock inputs (and return them to the pool if evictable again).
+        for &i in &inputs {
+            let sid = self.graph.storage_of(i);
+            let st = self.graph.storage_mut(sid);
+            debug_assert!(st.locks > 0);
+            st.locks -= 1;
+            self.pool_refresh(sid);
+        }
+        // A rematerialization may unblock pending banishes; retry only once
+        // the locks are released.
+        if is_remat && result.is_ok() && !self.pending_banish.is_empty() {
+            self.retry_pending_banishes();
+        }
+        result
+    }
+
+    fn perform_locked(
+        &mut self,
+        op: OpId,
+        inputs: &[TensorId],
+        is_remat: bool,
+        depth: usize,
+    ) -> Result<()> {
+        // Recursively rematerialize undefined inputs.
+        for &i in inputs {
+            if !self.graph.tensor(i).defined {
+                let parent = match self.graph.tensor(i).op {
+                    Some(p) => p,
+                    None => return Err(DtrError::EvictedConstant(i).into()),
+                };
+                let sid = self.graph.storage_of(i);
+                if self.graph.storage(sid).banished {
+                    return Err(DtrError::Banished(i).into());
+                }
+                self.perform(parent, depth + 1)?;
+            }
+        }
+
+        // Allocate output memory (the paper first increments by every
+        // output's size, then releases double-computed ephemerals).
+        let outputs = self.graph.op(op).outputs.clone();
+        let mut need = 0u64;
+        self.was_defined.clear();
+        for &o in &outputs {
+            let t = self.graph.tensor(o);
+            self.was_defined.push(t.defined);
+            if !t.alias {
+                need += self.graph.storage(t.storage).size;
+            }
+        }
+        self.free_for(need)?;
+        self.stats.memory += need;
+        self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
+
+        // Execute on the backend.
+        let name = self.graph.op(op).name.clone();
+        self.backend.execute(&name, inputs, &outputs)?;
+
+        // Commit outputs.
+        let uf_enabled = self.cfg.heuristic.needs_uf();
+        for (k, &o) in outputs.iter().enumerate() {
+            let sid = self.graph.storage_of(o);
+            let alias = self.graph.tensor(o).alias;
+            if alias {
+                // Views occupy no memory; they are definable only once the
+                // storage is resident (guaranteed: their base input is a view
+                // of the same storage and was just materialized).
+                debug_assert!(self.graph.storage(sid).resident);
+                self.graph.tensor_mut(o).defined = true;
+            } else if self.graph.storage(sid).resident && self.was_defined[k] {
+                // Double-computed ephemeral (multi-output replay): free the
+                // duplicate immediately.
+                self.stats.memory -= self.graph.storage(sid).size;
+            } else {
+                let st = self.graph.storage_mut(sid);
+                st.resident = true;
+                self.graph.tensor_mut(o).defined = true;
+                if uf_enabled && is_remat {
+                    // Union-find split approximation: leave the component,
+                    // subtracting our cost (Appendix C.2).
+                    let handle = self.graph.storage(sid).uf;
+                    let cost = self.graph.storage(sid).local_cost as f64;
+                    self.uf.sub_cost(handle, cost);
+                    let fresh = self.uf.make_set();
+                    self.graph.storage_mut(sid).uf = fresh;
+                }
+                self.pool_refresh(sid);
+            }
+        }
+
+        // Advance the logical clock and update staleness metadata.
+        let cost = self.graph.op(op).cost;
+        self.stats.clock += cost;
+        if is_remat {
+            self.stats.remat_compute += cost;
+            self.stats.remat_count += 1;
+        } else {
+            self.stats.base_compute += cost;
+        }
+        let now = self.stats.clock;
+        for &i in inputs {
+            let sid = self.graph.storage_of(i);
+            self.graph.storage_mut(sid).last_access = now;
+        }
+        for &o in &outputs {
+            let sid = self.graph.storage_of(o);
+            self.graph.storage_mut(sid).last_access = now;
+        }
+
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ eviction
+
+    /// Evict until `need` additional bytes fit under the budget.
+    fn free_for(&mut self, need: u64) -> Result<()> {
+        if self.cfg.budget == u64::MAX {
+            return Ok(());
+        }
+        while self.stats.memory.saturating_add(need) > self.cfg.budget {
+            match self.select_victim() {
+                Some(v) => self.evict(v),
+                None => {
+                    return Err(DtrError::Oom {
+                        need,
+                        free: self.cfg.budget.saturating_sub(self.stats.memory),
+                        budget: self.cfg.budget,
+                        resident: self.stats.memory,
+                    }
+                    .into())
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Victim search: argmin of the heuristic over the evictable pool,
+    /// optionally restricted by the Appendix E.2 approximations.
+    fn select_victim(&mut self) -> Option<StorageId> {
+        if self.pool.is_empty() {
+            return None;
+        }
+        let t0 = if self.cfg.profile { Some(std::time::Instant::now()) } else { None };
+        self.stats.eviction_searches += 1;
+
+        // Optional small-tensor filter threshold: 1% of pool mean size.
+        let min_size = if self.cfg.small_filter {
+            let total: u64 = self.pool.iter().map(|&s| self.graph.storage(s).size).sum();
+            (total / self.pool.len() as u64) / 100
+        } else {
+            0
+        };
+
+        let mut best: Option<(f64, StorageId)> = None;
+        let mut score_ns = 0u64;
+
+        let consider = |rt: &mut Self, s: StorageId, best: &mut Option<(f64, StorageId)>, score_ns: &mut u64| {
+            if rt.graph.storage(s).size < min_size {
+                return;
+            }
+            let s0 = if rt.cfg.profile { Some(std::time::Instant::now()) } else { None };
+            let mut ctx = ScoreCtx {
+                graph: &rt.graph,
+                uf: &mut rt.uf,
+                scratch: &mut rt.scratch,
+                clock: rt.stats.clock,
+                rng: &mut rt.rng,
+                accesses: &mut rt.stats.metadata_accesses,
+                root_buf: &mut rt.root_buf,
+            };
+            let sc = score(rt.cfg.heuristic, s, &mut ctx);
+            if let Some(t) = s0 {
+                *score_ns += t.elapsed().as_nanos() as u64;
+            }
+            if best.map_or(true, |(b, _)| sc < b) {
+                *best = Some((sc, s));
+            }
+        };
+
+        if self.cfg.sqrt_sample && self.pool.len() > 4 {
+            let n = self.pool.len();
+            let k = (n as f64).sqrt().ceil() as usize;
+            let picks = self.rng.sample_indices(n, k.min(n));
+            for idx in picks {
+                let s = self.pool[idx];
+                consider(self, s, &mut best, &mut score_ns);
+            }
+            // Fallback: if the sample was entirely filtered out, scan fully.
+            if best.is_none() {
+                for idx in 0..self.pool.len() {
+                    let s = self.pool[idx];
+                    consider(self, s, &mut best, &mut score_ns);
+                }
+            }
+        } else {
+            for idx in 0..self.pool.len() {
+                let s = self.pool[idx];
+                consider(self, s, &mut best, &mut score_ns);
+            }
+        }
+
+        // Final fallback when the size filter starved the search.
+        if best.is_none() && min_size > 0 {
+            for idx in 0..self.pool.len() {
+                let s = self.pool[idx];
+                let s0 = if self.cfg.profile { Some(std::time::Instant::now()) } else { None };
+                let mut ctx = ScoreCtx {
+                    graph: &self.graph,
+                    uf: &mut self.uf,
+                    scratch: &mut self.scratch,
+                    clock: self.stats.clock,
+                    rng: &mut self.rng,
+                    accesses: &mut self.stats.metadata_accesses,
+                    root_buf: &mut self.root_buf,
+                };
+                let sc = score(self.cfg.heuristic, s, &mut ctx);
+                if let Some(t) = s0 {
+                    score_ns += t.elapsed().as_nanos() as u64;
+                }
+                if best.map_or(true, |(b, _)| sc < b) {
+                    best = Some((sc, s));
+                }
+            }
+        }
+
+        if let Some(t) = t0 {
+            self.stats.eviction_loop_ns += t.elapsed().as_nanos() as u64;
+            self.stats.cost_compute_ns += score_ns;
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Evict a storage: undefine all views, free the buffer, and maintain
+    /// the union-find evicted components.
+    pub fn evict(&mut self, s: StorageId) {
+        debug_assert!(self.graph.storage(s).evictable(), "evicting non-evictable {s}");
+        let tensors = self.graph.storage(s).tensors.clone();
+        for &t in &tensors {
+            self.graph.tensor_mut(t).defined = false;
+        }
+        let root = self.graph.storage(s).root;
+        self.backend.free(&[root]);
+        self.stats.memory -= self.graph.storage(s).size;
+        self.graph.storage_mut(s).resident = false;
+        self.pool_remove(s);
+        self.stats.evict_count += 1;
+
+        if self.cfg.heuristic.needs_uf() {
+            let handle = self.graph.storage(s).uf;
+            let cost = self.graph.storage(s).local_cost as f64;
+            self.uf.add_cost(handle, cost);
+            // Merge with adjacent evicted components (undirected relaxation).
+            let deps = self.graph.storage(s).deps.clone();
+            let dependents = self.graph.storage(s).dependents.clone();
+            for n in deps.into_iter().chain(dependents) {
+                self.stats.metadata_accesses += 1;
+                let other = self.graph.storage(n);
+                if !other.resident && !other.banished {
+                    let oh = other.uf;
+                    self.uf.union(handle, oh);
+                }
+            }
+        }
+    }
+
+    // -------------------------------------------------------- deallocation
+
+    /// Increment the external reference count (COPY in the log format).
+    pub fn retain(&mut self, t: TensorId) {
+        let sid = self.graph.storage_of(t);
+        self.graph.storage_mut(sid).refs += 1;
+    }
+
+    /// Decrement the external reference count (RELEASE); at zero, apply the
+    /// deallocation policy.
+    pub fn release(&mut self, t: TensorId) {
+        let sid = self.graph.storage_of(t);
+        {
+            let st = self.graph.storage_mut(sid);
+            debug_assert!(st.refs > 0, "release underflow on {sid}");
+            st.refs = st.refs.saturating_sub(1);
+            if st.refs > 0 {
+                return;
+            }
+        }
+        match self.cfg.policy {
+            DeallocPolicy::Ignore => {}
+            DeallocPolicy::EagerEvict => {
+                if self.graph.storage(sid).evictable() {
+                    self.evict(sid);
+                }
+            }
+            DeallocPolicy::Banish => {
+                if !self.try_banish(sid) {
+                    self.pending_banish.push(sid);
+                }
+            }
+        }
+    }
+
+    /// Banish: permanently free (Appendix C.4). Only legal with no evicted
+    /// dependents; pins every dependent (they become non-rematerializable).
+    fn try_banish(&mut self, s: StorageId) -> bool {
+        if self.graph.storage(s).banished {
+            return true;
+        }
+        if self.graph.has_evicted_dependent(s) {
+            return false;
+        }
+        if self.graph.storage(s).locks > 0 {
+            return false;
+        }
+        if self.graph.storage(s).resident {
+            let tensors = self.graph.storage(s).tensors.clone();
+            for &t in &tensors {
+                self.graph.tensor_mut(t).defined = false;
+            }
+            let root = self.graph.storage(s).root;
+            self.backend.free(&[root]);
+            self.stats.memory -= self.graph.storage(s).size;
+        }
+        let st = self.graph.storage_mut(s);
+        st.resident = false;
+        st.banished = true;
+        self.pool_remove(s);
+        self.stats.banish_count += 1;
+        // Pin dependents: their parent inputs are gone forever.
+        let dependents = self.graph.storage(s).dependents.clone();
+        for d in dependents {
+            let dst = self.graph.storage_mut(d);
+            if !dst.banished {
+                dst.pinned = true;
+            }
+            self.pool_refresh(d);
+        }
+        true
+    }
+
+    fn retry_pending_banishes(&mut self) {
+        let pending = std::mem::take(&mut self.pending_banish);
+        for s in pending {
+            if !self.try_banish(s) {
+                self.pending_banish.push(s);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- access
+
+    /// Materialize (if needed) and touch a tensor: the prototype's
+    /// `decheckpoint()` — used for final outputs and user-side reads.
+    pub fn access(&mut self, t: TensorId) -> Result<()> {
+        if !self.graph.tensor(t).defined {
+            let op = self
+                .graph
+                .tensor(t)
+                .op
+                .ok_or(DtrError::EvictedConstant(t))?;
+            self.perform(op, 1)?;
+        }
+        let sid = self.graph.storage_of(t);
+        self.graph.storage_mut(sid).last_access = self.stats.clock;
+        Ok(())
+    }
+
+    /// Output condition (Appendix C.6): rematerialize and pin every tensor
+    /// the program still holds references to (gradients, loss, prediction).
+    pub fn pin_live_outputs(&mut self) -> Result<()> {
+        let live: Vec<TensorId> = (0..self.graph.tensors.len())
+            .map(|i| TensorId(i as u32))
+            .filter(|&t| {
+                let sid = self.graph.storage_of(t);
+                let st = self.graph.storage(sid);
+                st.refs > 0 && !st.banished
+            })
+            .collect();
+        for t in live {
+            self.access(t)?;
+            let sid = self.graph.storage_of(t);
+            self.graph.storage_mut(sid).pinned = true;
+            self.pool_refresh(sid);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- introspection
+
+    pub fn is_resident(&self, t: TensorId) -> bool {
+        self.graph.storage(self.graph.storage_of(t)).resident
+    }
+
+    pub fn is_defined(&self, t: TensorId) -> bool {
+        self.graph.tensor(t).defined
+    }
+
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Verify internal accounting (used by tests and the property harness).
+    pub fn check_invariants(&self) -> Result<()> {
+        let resident_bytes = self.graph.resident_bytes();
+        anyhow::ensure!(
+            resident_bytes == self.stats.memory,
+            "memory accounting drift: tracked {} vs actual {}",
+            self.stats.memory,
+            resident_bytes
+        );
+        for (i, s) in self.graph.storages.iter().enumerate() {
+            anyhow::ensure!(
+                s.locks == 0,
+                "storage S{} still locked after quiescence",
+                i
+            );
+            if s.pool_pos != usize::MAX {
+                anyhow::ensure!(
+                    self.pool[s.pool_pos] == StorageId(i as u32),
+                    "pool position corrupt for S{}",
+                    i
+                );
+                anyhow::ensure!(s.evictable(), "non-evictable S{} in pool", i);
+            } else {
+                anyhow::ensure!(
+                    !s.evictable() || self.cfg.budget == u64::MAX,
+                    "evictable S{} missing from pool",
+                    i
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::backend::NullBackend;
+
+    fn rt(budget: u64, h: Heuristic) -> Runtime<NullBackend> {
+        let cfg = Config { budget, heuristic: h, ..Config::default() };
+        Runtime::new(cfg, NullBackend::new())
+    }
+
+    /// Run a linear chain of n unit ops under `budget` memory units.
+    fn run_chain(rtm: &mut Runtime<NullBackend>, n: usize) -> Vec<TensorId> {
+        let mut ts = vec![rtm.constant(1)];
+        for i in 0..n {
+            let t = rtm
+                .call(&format!("f{i}"), 1, &[ts[i]], &[OutSpec::sized(1)])
+                .unwrap()[0];
+            ts.push(t);
+        }
+        ts
+    }
+
+    #[test]
+    fn unbudgeted_chain_no_remat() {
+        let mut r = rt(u64::MAX, Heuristic::dtr_eq());
+        run_chain(&mut r, 32);
+        assert_eq!(r.stats.remat_count, 0);
+        assert_eq!(r.stats.base_compute, 32);
+        assert_eq!(r.stats.memory, 33);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn budget_forces_eviction_and_access_remats() {
+        let mut r = rt(8, Heuristic::lru());
+        let ts = run_chain(&mut r, 32);
+        assert!(r.stats.evict_count > 0, "must have evicted under budget");
+        assert!(r.stats.memory <= 8);
+        // Access an early evicted tensor: recursive remat.
+        let victim = ts[5];
+        assert!(!r.is_defined(victim));
+        r.access(victim).unwrap();
+        assert!(r.is_defined(victim));
+        assert!(r.stats.remat_count > 0);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn all_heuristics_complete_chain() {
+        for h in Heuristic::fig2_set() {
+            let mut r = rt(10, h);
+            let ts = run_chain(&mut r, 64);
+            r.access(*ts.last().unwrap()).unwrap();
+            assert!(r.stats.memory <= 10, "{} over budget", h.name());
+            r.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn oom_when_budget_below_working_set() {
+        // One op needs input (1) + output (1) = 2 units; budget 2 minus the
+        // pinned constant leaves 1 unit -> second call cannot fit both its
+        // locked input and output.
+        let mut r = rt(2, Heuristic::lru());
+        let c = r.constant(1);
+        let t1 = r.call("f0", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+        let err = r.call("f1", 1, &[t1], &[OutSpec::sized(5)]);
+        assert!(err.is_err(), "allocation larger than budget must fail");
+    }
+
+    #[test]
+    fn constants_never_evicted() {
+        let mut r = rt(4, Heuristic::size());
+        let c = r.constant(2);
+        run_chain_from(&mut r, c, 16);
+        assert!(r.is_resident(c), "constant was evicted");
+        r.check_invariants().unwrap();
+    }
+
+    fn run_chain_from(r: &mut Runtime<NullBackend>, from: TensorId, n: usize) -> Vec<TensorId> {
+        let mut ts = vec![from];
+        for i in 0..n {
+            let t = r.call(&format!("g{i}"), 1, &[ts[i]], &[OutSpec::sized(1)]).unwrap()[0];
+            ts.push(t);
+        }
+        ts
+    }
+
+    #[test]
+    fn eager_eviction_on_release() {
+        let mut r = rt(u64::MAX, Heuristic::dtr_eq());
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        let before = r.stats.memory;
+        r.release(t1);
+        assert_eq!(r.stats.memory, before - 4, "eager policy must evict on last release");
+        assert!(!r.is_resident(t1));
+    }
+
+    #[test]
+    fn ignore_policy_keeps_released() {
+        let mut r = Runtime::new(
+            Config { policy: DeallocPolicy::Ignore, ..Config::default() },
+            NullBackend::new(),
+        );
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        r.release(t1);
+        assert!(r.is_resident(t1));
+    }
+
+    #[test]
+    fn banish_frees_and_pins_children() {
+        let mut r = Runtime::new(
+            Config { policy: DeallocPolicy::Banish, ..Config::default() },
+            NullBackend::new(),
+        );
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        let t2 = r.call("g", 1, &[t1], &[OutSpec::sized(4)]).unwrap()[0];
+        r.release(t1);
+        // t2 resident (no evicted dependents) -> banish succeeds.
+        assert!(!r.is_resident(t1));
+        let s2 = r.graph.storage_of(t2);
+        assert!(r.graph.storage(s2).pinned, "child of banished storage must be pinned");
+        assert!(r.graph.storage(r.graph.storage_of(t1)).banished);
+    }
+
+    #[test]
+    fn banish_blocked_by_evicted_dependent() {
+        let mut r = Runtime::new(
+            Config {
+                policy: DeallocPolicy::Banish,
+                budget: u64::MAX,
+                ..Config::default()
+            },
+            NullBackend::new(),
+        );
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        let t2 = r.call("g", 1, &[t1], &[OutSpec::sized(4)]).unwrap()[0];
+        // Manually evict t2 then release t1: banish must be deferred.
+        let s2 = r.graph.storage_of(t2);
+        r.evict(s2);
+        r.release(t1);
+        assert!(!r.graph.storage(r.graph.storage_of(t1)).banished);
+        assert!(r.is_resident(t1), "banish deferred; storage stays");
+        // Rematerialize t2 -> pending banish should fire.
+        r.access(t2).unwrap();
+        assert!(r.graph.storage(r.graph.storage_of(t1)).banished);
+    }
+
+    #[test]
+    fn banish_can_free_constants() {
+        let mut r = Runtime::new(
+            Config { policy: DeallocPolicy::Banish, ..Config::default() },
+            NullBackend::new(),
+        );
+        let c = r.constant(8);
+        let _t1 = r.call("f", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+        let before = r.stats.memory;
+        r.release(c);
+        assert_eq!(r.stats.memory, before - 8, "banish must free the constant");
+    }
+
+    #[test]
+    fn alias_outputs_occupy_no_memory() {
+        let mut r = rt(u64::MAX, Heuristic::dtr_eq());
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        let before = r.stats.memory;
+        let v = r.call("view", 0, &[t1], &[OutSpec::alias(0)]).unwrap()[0];
+        assert_eq!(r.stats.memory, before);
+        assert_eq!(r.graph.storage_of(v), r.graph.storage_of(t1));
+        assert!(r.is_defined(v));
+    }
+
+    #[test]
+    fn evicting_storage_undefines_all_views_and_remats_separately() {
+        let mut r = rt(u64::MAX, Heuristic::dtr_eq());
+        let c = r.constant(1);
+        let t1 = r.call("f", 1, &[c], &[OutSpec::sized(4)]).unwrap()[0];
+        let v = r.call("view", 0, &[t1], &[OutSpec::alias(0)]).unwrap()[0];
+        let s = r.graph.storage_of(t1);
+        r.evict(s);
+        assert!(!r.is_defined(t1));
+        assert!(!r.is_defined(v));
+        // Access the alias: must remat the root (storage) then the view op.
+        r.access(v).unwrap();
+        assert!(r.is_defined(v));
+        assert!(r.is_defined(t1));
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn multi_output_evicted_separately_rematerialized_together() {
+        let mut r = rt(u64::MAX, Heuristic::dtr_eq());
+        let c = r.constant(1);
+        let outs = r
+            .call("multi", 3, &[c], &[OutSpec::sized(2), OutSpec::sized(2)])
+            .unwrap();
+        let (a, b) = (outs[0], outs[1]);
+        r.evict(r.graph.storage_of(a));
+        r.evict(r.graph.storage_of(b));
+        let mem_before = r.stats.memory;
+        r.access(a).unwrap();
+        // Replaying `multi` rematerializes both outputs.
+        assert!(r.is_defined(a) && r.is_defined(b));
+        assert_eq!(r.stats.memory, mem_before + 4);
+        // Now evict only b and access a: replay double-computes b and frees
+        // the ephemeral immediately (memory returns to resident set size).
+        r.evict(r.graph.storage_of(b));
+        r.evict(r.graph.storage_of(a));
+        r.access(b).unwrap();
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deep_chain_recursive_remat() {
+        let mut r = rt(6, Heuristic::dtr_eq());
+        let ts = run_chain(&mut r, 200);
+        // Touch the far end then the beginning: long recursive remats.
+        r.access(ts[199]).unwrap();
+        r.access(ts[3]).unwrap();
+        assert!(r.stats.memory <= 6);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pin_live_outputs_holds_results() {
+        let mut r = rt(6, Heuristic::lru());
+        let ts = run_chain(&mut r, 32);
+        // Release everything but the last two (the "gradients").
+        for &t in &ts[1..31] {
+            r.release(t);
+        }
+        r.pin_live_outputs().unwrap();
+        assert!(r.is_defined(ts[31]));
+        assert!(r.is_defined(ts[32]));
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_slowdown_sane() {
+        let mut r = rt(8, Heuristic::dtr_eq());
+        let ts = run_chain(&mut r, 64);
+        r.access(ts[1]).unwrap();
+        let s = &r.stats;
+        assert!(s.slowdown() >= 1.0);
+        assert_eq!(s.total_compute(), s.base_compute + s.remat_compute);
+    }
+
+    #[test]
+    fn sqrt_sampling_still_terminates() {
+        let mut r = Runtime::new(
+            Config {
+                budget: 12,
+                sqrt_sample: true,
+                small_filter: true,
+                ..Config::default()
+            },
+            NullBackend::new(),
+        );
+        let ts = run_chain(&mut r, 128);
+        r.access(ts[64]).unwrap();
+        assert!(r.stats.memory <= 12);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn metadata_accesses_ordering() {
+        // h_dtr (exact e*) must touch far more metadata than h_local.
+        let counts: Vec<u64> = [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()]
+            .iter()
+            .map(|&h| {
+                let mut r = rt(8, h);
+                let ts = run_chain(&mut r, 128);
+                r.access(ts[1]).unwrap();
+                r.stats.metadata_accesses
+            })
+            .collect();
+        assert!(counts[0] > counts[1], "e* {} <= eq {}", counts[0], counts[1]);
+        assert!(counts[1] > counts[2], "eq {} <= local {}", counts[1], counts[2]);
+    }
+}

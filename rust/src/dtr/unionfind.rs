@@ -1,0 +1,207 @@
+//! Union-find over evicted components with per-component running cost sums —
+//! the data structure behind the paper's `h_DTR^eq` heuristic (Sec. 4.1,
+//! Appendix C.2 "Relaxed (Union-Find) evicted neighborhood").
+//!
+//! Supported operations:
+//!  * `make_set()` — fresh empty component (cost 0);
+//!  * `union(a, b)` — merge components, summing costs;
+//!  * `add_cost` / `sub_cost` — adjust a component's running sum;
+//!  * `find` — representative (with path halving).
+//!
+//! Splitting is *not* supported (that is the point of the approximation):
+//! when a storage is rematerialized the caller subtracts its local cost from
+//! its old component and maps the storage to a fresh empty set, leaving
+//! "phantom dependencies" behind, exactly as described in the paper.
+//!
+//! Every parent-chain hop is reported to an access counter so the Fig. 12
+//! metadata-overhead experiment can count storage/metadata touches.
+
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    /// Running cost sum; meaningful at component roots only.
+    cost: Vec<f64>,
+    /// Metadata-access counter (Fig. 12 / Appendix D.3).
+    pub accesses: u64,
+}
+
+impl UnionFind {
+    pub fn new() -> Self {
+        UnionFind { parent: Vec::new(), rank: Vec::new(), cost: Vec::new(), accesses: 0 }
+    }
+
+    /// Create a fresh singleton component with zero cost; returns its handle.
+    pub fn make_set(&mut self) -> u32 {
+        let id = self.parent.len() as u32;
+        self.parent.push(id);
+        self.rank.push(0);
+        self.cost.push(0.0);
+        id
+    }
+
+    /// Find with path halving.
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        loop {
+            self.accesses += 1;
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    /// Merge the components of `a` and `b`, summing their running costs.
+    /// Returns the new root.
+    pub fn union(&mut self, a: u32, b: u32) -> u32 {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return ra;
+        }
+        self.accesses += 1;
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        self.cost[hi as usize] += self.cost[lo as usize];
+        self.cost[lo as usize] = 0.0;
+        hi
+    }
+
+    /// Running cost sum of `x`'s component.
+    pub fn component_cost(&mut self, x: u32) -> f64 {
+        let r = self.find(x);
+        self.cost[r as usize]
+    }
+
+    pub fn add_cost(&mut self, x: u32, c: f64) {
+        let r = self.find(x);
+        self.cost[r as usize] += c;
+    }
+
+    /// Subtract `c` from `x`'s component (the splitting approximation:
+    /// rematerialization removes a cost but not the connectivity).
+    pub fn sub_cost(&mut self, x: u32, c: f64) {
+        let r = self.find(x);
+        self.cost[r as usize] -= c;
+        // Numerical hygiene: running sums can drift slightly negative after
+        // long simulate/remat interleavings; clamp at zero.
+        if self.cost[r as usize] < 0.0 {
+            self.cost[r as usize] = 0.0;
+        }
+    }
+
+    pub fn same_set(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+}
+
+impl Default for UnionFind {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_has_zero_cost() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        assert_eq!(uf.component_cost(a), 0.0);
+    }
+
+    #[test]
+    fn union_sums_costs() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        uf.add_cost(a, 2.0);
+        uf.add_cost(b, 3.0);
+        uf.union(a, b);
+        assert_eq!(uf.component_cost(a), 5.0);
+        assert_eq!(uf.component_cost(b), 5.0);
+        assert!(uf.same_set(a, b));
+    }
+
+    #[test]
+    fn union_idempotent() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        uf.add_cost(a, 1.0);
+        uf.union(a, b);
+        uf.union(b, a);
+        assert_eq!(uf.component_cost(a), 1.0);
+    }
+
+    #[test]
+    fn sub_cost_models_split_approximation() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        let c = uf.make_set();
+        uf.add_cost(a, 1.0);
+        uf.add_cost(b, 2.0);
+        uf.add_cost(c, 4.0);
+        uf.union(a, b);
+        uf.union(b, c);
+        assert_eq!(uf.component_cost(a), 7.0);
+        // "Rematerialize" b: subtract its cost, move it to a fresh set.
+        uf.sub_cost(b, 2.0);
+        let b2 = uf.make_set();
+        assert_eq!(uf.component_cost(a), 5.0);
+        assert_eq!(uf.component_cost(b2), 0.0);
+        // Phantom connectivity: a and c remain merged even though b split them.
+        assert!(uf.same_set(a, c));
+    }
+
+    #[test]
+    fn cost_never_negative() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        uf.add_cost(a, 1.0);
+        uf.sub_cost(a, 5.0);
+        assert_eq!(uf.component_cost(a), 0.0);
+    }
+
+    #[test]
+    fn chain_unions_transitive() {
+        let mut uf = UnionFind::new();
+        let hs: Vec<u32> = (0..64).map(|_| uf.make_set()).collect();
+        for w in hs.windows(2) {
+            uf.union(w[0], w[1]);
+        }
+        for &h in &hs {
+            assert!(uf.same_set(hs[0], h));
+        }
+    }
+
+    #[test]
+    fn accesses_counted() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let before = uf.accesses;
+        uf.find(a);
+        assert!(uf.accesses > before);
+    }
+}

@@ -1,0 +1,5 @@
+//! Real execution: the DTR-managed training engine over PJRT artifacts.
+
+pub mod engine;
+
+pub use engine::{Engine, Optimizer, PjrtBackend, StepResult};

@@ -1,0 +1,142 @@
+//! The Theorem 3.2 adversary: an architecture generator that watches DTR's
+//! eviction decisions and always extends the network at the end of a fully
+//! evicted path, forcing Ω(N²/B) total work where a static planner needs
+//! only Θ(N) (Appendix B, Figure 6).
+//!
+//! The generator builds `B` linear paths hanging off a common root `t_0`.
+//! After DTR's budget forces evictions, some path has no resident tensors;
+//! the adversary appends the next node to (the end of) such a path, making
+//! DTR rematerialize the whole path first.
+
+use anyhow::Result;
+
+use crate::dtr::{Config, Heuristic, NullBackend, OutSpec, Runtime, Stats, TensorId};
+
+pub struct AdversaryRun {
+    pub stats: Stats,
+    /// Total tensor operations performed by DTR.
+    pub dtr_ops: u64,
+    /// Operations a path-at-a-time static schedule needs (= N).
+    pub static_ops: u64,
+    pub n: usize,
+    pub b: usize,
+}
+
+impl AdversaryRun {
+    /// The Theorem 3.2 overhead ratio.
+    pub fn ratio(&self) -> f64 {
+        self.dtr_ops as f64 / self.static_ops as f64
+    }
+}
+
+/// Run the adversary for `n` total nodes against budget `b` (unit tensors)
+/// under heuristic `h`.
+pub fn run_adversary(n: usize, b: usize, h: Heuristic) -> Result<AdversaryRun> {
+    assert!(b >= 2 && n > b);
+    let cfg = Config { budget: b as u64 + 1, heuristic: h, ..Config::default() };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+
+    // Root t0 (pinned constant, gets the +1 in the budget).
+    let t0 = rt.constant(1);
+
+    // paths[j] = tensors of path j, in order.
+    let mut paths: Vec<Vec<TensorId>> = Vec::with_capacity(b);
+    for j in 0..b {
+        let t = rt.call(&format!("p{j}_0"), 1, &[t0], &[OutSpec::sized(1)])?[0];
+        paths.push(vec![t]);
+    }
+
+    let mut created = b;
+    while created < n {
+        // Find a path whose tensors are all evicted; prefer the longest such
+        // path (worst case for DTR). Falls back to the path with the fewest
+        // resident tensors if none is fully evicted.
+        let mut target: Option<usize> = None;
+        let mut best_len = 0usize;
+        for (j, path) in paths.iter().enumerate() {
+            if path.iter().all(|&t| !rt.is_defined(t)) && path.len() >= best_len {
+                target = Some(j);
+                best_len = path.len();
+            }
+        }
+        let j = match target {
+            Some(j) => j,
+            None => {
+                // No fully evicted path: pick the one with the most evicted
+                // suffix (still forces maximal rematerialization).
+                (0..paths.len())
+                    .max_by_key(|&j| {
+                        paths[j].iter().rev().take_while(|&&t| !rt.is_defined(t)).count()
+                    })
+                    .unwrap()
+            }
+        };
+        let tail = *paths[j].last().unwrap();
+        let t = rt.call(
+            &format!("p{j}_{}", paths[j].len()),
+            1,
+            &[tail],
+            &[OutSpec::sized(1)],
+        )?[0];
+        paths[j].push(t);
+        created += 1;
+    }
+
+    let dtr_ops = rt.stats.base_compute + rt.stats.remat_compute;
+    Ok(AdversaryRun {
+        stats: rt.stats.clone(),
+        dtr_ops,
+        // The optimal static planner reorders the graph one path at a time:
+        // exactly one computation per node (Appendix B).
+        static_ops: n as u64,
+        n,
+        b,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversary_forces_superlinear_work() {
+        let r = run_adversary(256, 8, Heuristic::dtr_eq()).unwrap();
+        // Ω(N/B) = 32x in the worst case; demand well above constant factor.
+        assert!(r.ratio() > 3.0, "ratio {} not adversarial", r.ratio());
+        assert_eq!(r.static_ops, 256);
+    }
+
+    #[test]
+    fn adversary_hits_every_deterministic_heuristic() {
+        for h in [
+            Heuristic::dtr(),
+            Heuristic::dtr_eq(),
+            Heuristic::dtr_local(),
+            Heuristic::lru(),
+            Heuristic::size(),
+            Heuristic::Msps,
+        ] {
+            let r = run_adversary(128, 8, h).unwrap();
+            assert!(r.ratio() > 2.0, "{}: ratio {}", h.name(), r.ratio());
+        }
+    }
+
+    #[test]
+    fn ratio_grows_with_n_over_b() {
+        let small = run_adversary(128, 16, Heuristic::lru()).unwrap();
+        let large = run_adversary(512, 16, Heuristic::lru()).unwrap();
+        assert!(
+            large.ratio() > small.ratio(),
+            "Ω(N/B): {} vs {}",
+            large.ratio(),
+            small.ratio()
+        );
+    }
+
+    #[test]
+    fn larger_budget_reduces_ratio() {
+        let tight = run_adversary(256, 4, Heuristic::lru()).unwrap();
+        let loose = run_adversary(256, 64, Heuristic::lru()).unwrap();
+        assert!(loose.ratio() < tight.ratio());
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload generators: the paper's evaluation models as Appendix-C.6 logs
+//! (`models`), plus direct runtime drivers for the formal-bounds experiments
+//! (`linear` for Theorem 3.1 / Fig. 5, `adversarial` for Theorem 3.2).
+
+pub mod adversarial;
+pub mod linear;
+pub mod models;
+pub mod tape;
+
+pub use models::{by_name, ALL_MODELS};
+pub use tape::{R, Tape};

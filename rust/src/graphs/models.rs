@@ -1,0 +1,417 @@
+//! Workload generators for the paper's evaluation models (Sec. 4.1): five
+//! static architectures (MLP, ResNet, DenseNet, UNet, Transformer) and three
+//! dynamic ones (LSTM, TreeLSTM, Unrolled GAN). Each produces a complete
+//! single-batch training log via [`Tape`] with FLOP-derived operator costs
+//! and f32 tensor sizes, reproducing the structural properties that drive
+//! DTR's eviction behaviour: skip connections (ResNet/UNet), dense fan-out
+//! (DenseNet), recurrence with shared weights (LSTM), tree-shaped dynamism
+//! (TreeLSTM), and differentiable unrolling (Unrolled GAN).
+
+use super::tape::{R, Tape};
+use crate::sim::log::Log;
+
+const F32: u64 = 4;
+/// Cost unit: ~MFLOPs, floored at 1.
+fn mf(flops: u64) -> u64 {
+    (flops / 1_000_000).max(1)
+}
+
+/// Fully-connected feedforward chain (the Theorem 3.1 shape at DL scale).
+pub fn mlp(depth: usize, width: u64, batch: u64) -> Log {
+    let mut t = Tape::new("mlp");
+    let x = t.data("x", batch * width * F32);
+    let mut h = x;
+    for i in 0..depth {
+        let w = t.weight(&format!("w{i}"), width * width * F32);
+        let lin = t.op(&format!("fc{i}"), mf(2 * batch * width * width), &[h, w], batch * width * F32);
+        h = t.op(&format!("relu{i}"), mf(batch * width), &[lin], batch * width * F32);
+    }
+    let loss = t.op("loss", mf(batch * width), &[h], 8);
+    t.finish(loss)
+}
+
+/// Conv-block helper: conv + bn + relu (sizes for square feature maps).
+fn conv_block(t: &mut Tape, tag: &str, input: R, cin: u64, cout: u64, hw: u64, batch: u64) -> R {
+    let w = t.weight(&format!("w_{tag}"), cout * cin * 9 * F32);
+    let act = batch * cout * hw * hw * F32;
+    let flops = 2 * batch * cout * cin * 9 * hw * hw;
+    let conv = t.op(&format!("conv_{tag}"), mf(flops), &[input, w], act);
+    let g = t.weight(&format!("bn_{tag}"), cout * 2 * F32);
+    let bn = t.op(&format!("bn_{tag}"), mf(batch * cout * hw * hw), &[conv, g], act);
+    t.op(&format!("relu_{tag}"), mf(batch * cout * hw * hw), &[bn], act)
+}
+
+/// ResNet: stages of residual blocks with skip connections (the structure
+/// Chen et al.'s segmenting had to be modified to handle; Fig. 3 note).
+pub fn resnet(blocks_per_stage: usize, batch: u64) -> Log {
+    let mut t = Tape::new("resnet");
+    let mut hw = 32u64;
+    let mut c = 16u64;
+    let x = t.data("x", batch * 3 * hw * hw * F32);
+    let mut h = conv_block(&mut t, "stem", x, 3, c, hw, batch);
+    for stage in 0..3 {
+        for b in 0..blocks_per_stage {
+            let tag1 = format!("s{stage}b{b}c1");
+            let tag2 = format!("s{stage}b{b}c2");
+            let y1 = conv_block(&mut t, &tag1, h, c, c, hw, batch);
+            let y2 = conv_block(&mut t, &tag2, y1, c, c, hw, batch);
+            // Residual add: fan-out on h (used by both conv path and skip).
+            h = t.op(
+                &format!("add_s{stage}b{b}"),
+                mf(batch * c * hw * hw),
+                &[y2, h],
+                batch * c * hw * hw * F32,
+            );
+        }
+        if stage < 2 {
+            // Downsample: stride-2 conv, double channels.
+            let tag = format!("down{stage}");
+            hw /= 2;
+            c *= 2;
+            h = conv_block(&mut t, &tag, h, c / 2, c, hw, batch);
+        }
+    }
+    let pool = t.op("avgpool", mf(batch * c * hw * hw), &[h], batch * c * F32);
+    let wfc = t.weight("w_fc", c * 10 * F32);
+    let logits = t.op("fc", mf(2 * batch * c * 10), &[pool, wfc], batch * 10 * F32);
+    let loss = t.op("loss", mf(batch * 10), &[logits], 8);
+    t.finish(loss)
+}
+
+/// DenseNet: each layer consumes the concatenation of *all* previous feature
+/// maps — maximal fan-out, the hardest case for neighborhood metadata.
+pub fn densenet(layers: usize, growth: u64, batch: u64) -> Log {
+    let mut t = Tape::new("densenet");
+    let hw = 16u64;
+    let x = t.data("x", batch * 3 * hw * hw * F32);
+    let stem = conv_block(&mut t, "stem", x, 3, growth, hw, batch);
+    let mut feats: Vec<(R, u64)> = vec![(stem, growth)];
+    for l in 0..layers {
+        let cin: u64 = feats.iter().map(|(_, c)| c).sum();
+        let inputs: Vec<R> = feats.iter().map(|&(r, _)| r).collect();
+        let cat = t.op(
+            &format!("concat{l}"),
+            mf(batch * cin * hw * hw),
+            &inputs,
+            batch * cin * hw * hw * F32,
+        );
+        let out = conv_block(&mut t, &format!("dense{l}"), cat, cin, growth, hw, batch);
+        feats.push((out, growth));
+    }
+    let cin: u64 = feats.iter().map(|(_, c)| c).sum();
+    let inputs: Vec<R> = feats.iter().map(|&(r, _)| r).collect();
+    let cat = t.op("final_concat", mf(batch * cin * hw * hw), &inputs, batch * cin * hw * hw * F32);
+    let pool = t.op("avgpool", mf(batch * cin * hw * hw), &[cat], batch * cin * F32);
+    let w = t.weight("w_fc", cin * 10 * F32);
+    let logits = t.op("fc", mf(2 * batch * cin * 10), &[pool, w], batch * 10 * F32);
+    let loss = t.op("loss", mf(batch * 10), &[logits], 8);
+    t.finish(loss)
+}
+
+/// UNet: encoder/decoder with long-range skip concatenations — the paper's
+/// hardest static model (lowest feasible budgets, Fig. 2/Table 1).
+pub fn unet(depth: usize, base_c: u64, batch: u64) -> Log {
+    let mut t = Tape::new("unet");
+    let mut hw = 64u64;
+    let x = t.data("x", batch * 3 * hw * hw * F32);
+    let mut h = conv_block(&mut t, "stem", x, 3, base_c, hw, batch);
+    let mut c = base_c;
+    let mut skips: Vec<(R, u64, u64)> = Vec::new();
+    for d in 0..depth {
+        let h2 = conv_block(&mut t, &format!("enc{d}"), h, c, c, hw, batch);
+        skips.push((h2, c, hw));
+        // Downsample.
+        hw /= 2;
+        let c2 = c * 2;
+        h = conv_block(&mut t, &format!("down{d}"), h2, c, c2, hw, batch);
+        c = c2;
+    }
+    h = conv_block(&mut t, "bottleneck", h, c, c, hw, batch);
+    for d in (0..depth).rev() {
+        let (skip, sc, shw) = skips[d];
+        hw = shw;
+        // Upsample + concat with the long-range encoder skip.
+        let up = t.op(
+            &format!("up{d}"),
+            mf(batch * c * hw * hw),
+            &[h],
+            batch * (c / 2) * hw * hw * F32,
+        );
+        let cat = t.op(
+            &format!("skipcat{d}"),
+            mf(batch * (c / 2 + sc) * hw * hw),
+            &[up, skip],
+            batch * (c / 2 + sc) * hw * hw * F32,
+        );
+        h = conv_block(&mut t, &format!("dec{d}"), cat, c / 2 + sc, sc, hw, batch);
+        c = sc;
+    }
+    let w = t.weight("w_out", c * 2 * 9 * F32);
+    let out = t.op("head", mf(2 * batch * c * 2 * 9 * hw * hw), &[h, w], batch * 2 * hw * hw * F32);
+    let loss = t.op("loss", mf(batch * hw * hw), &[out], 8);
+    t.finish(loss)
+}
+
+/// Transformer encoder stack (the Table-1 model, seq-len driven).
+pub fn transformer(layers: usize, seq: u64, d_model: u64, batch: u64) -> Log {
+    let mut t = Tape::new("transformer");
+    let act = batch * seq * d_model * F32;
+    let d_ff = d_model * 4;
+    let x = t.data("x", act);
+    let mut h = x;
+    for l in 0..layers {
+        // Self-attention.
+        let ln1g = t.weight(&format!("ln1_{l}"), d_model * 2 * F32);
+        let ln1 = t.op(&format!("ln1_{l}"), mf(batch * seq * d_model), &[h, ln1g], act);
+        let wqkv = t.weight(&format!("wqkv{l}"), d_model * 3 * d_model * F32);
+        let qkv = t.op(
+            &format!("qkv{l}"),
+            mf(2 * batch * seq * d_model * 3 * d_model),
+            &[ln1, wqkv],
+            3 * act,
+        );
+        let scores = t.op(
+            &format!("scores{l}"),
+            mf(2 * batch * seq * seq * d_model),
+            &[qkv],
+            batch * seq * seq * F32,
+        );
+        let probs = t.op(
+            &format!("softmax{l}"),
+            mf(batch * seq * seq),
+            &[scores],
+            batch * seq * seq * F32,
+        );
+        let attn = t.op(
+            &format!("attnv{l}"),
+            mf(2 * batch * seq * seq * d_model),
+            &[probs, qkv],
+            act,
+        );
+        let wo = t.weight(&format!("wo{l}"), d_model * d_model * F32);
+        let proj = t.op(&format!("proj{l}"), mf(2 * batch * seq * d_model * d_model), &[attn, wo], act);
+        let res1 = t.op(&format!("res1_{l}"), mf(batch * seq * d_model), &[proj, h], act);
+        // MLP.
+        let ln2g = t.weight(&format!("ln2_{l}"), d_model * 2 * F32);
+        let ln2 = t.op(&format!("ln2_{l}"), mf(batch * seq * d_model), &[res1, ln2g], act);
+        let w1 = t.weight(&format!("wff1_{l}"), d_model * d_ff * F32);
+        let ff1 = t.op(
+            &format!("ff1_{l}"),
+            mf(2 * batch * seq * d_model * d_ff),
+            &[ln2, w1],
+            batch * seq * d_ff * F32,
+        );
+        let gelu = t.op(&format!("gelu{l}"), mf(batch * seq * d_ff), &[ff1], batch * seq * d_ff * F32);
+        let w2 = t.weight(&format!("wff2_{l}"), d_ff * d_model * F32);
+        let ff2 = t.op(&format!("ff2_{l}"), mf(2 * batch * seq * d_ff * d_model), &[gelu, w2], act);
+        h = t.op(&format!("res2_{l}"), mf(batch * seq * d_model), &[ff2, res1], act);
+    }
+    let loss = t.op("loss", mf(batch * seq * d_model), &[h], 8);
+    t.finish(loss)
+}
+
+/// LSTM unrolled over `steps` timesteps with shared weights (dynamic model
+/// #1: the trace length depends on the input sequence).
+pub fn lstm(steps: usize, hidden: u64, batch: u64) -> Log {
+    let mut t = Tape::new("lstm");
+    let act = batch * hidden * F32;
+    let wx = t.weight("wx", hidden * 4 * hidden * F32);
+    let wh = t.weight("wh", hidden * 4 * hidden * F32);
+    let mut h = t.data("h0", act);
+    let mut c = t.data("c0", act);
+    for s in 0..steps {
+        let x = t.data(&format!("x{s}"), act);
+        let gx = t.op(&format!("gx{s}"), mf(2 * batch * hidden * 4 * hidden), &[x, wx], 4 * act);
+        let gh = t.op(&format!("gh{s}"), mf(2 * batch * hidden * 4 * hidden), &[h, wh], 4 * act);
+        let gates = t.op(&format!("gates{s}"), mf(4 * batch * hidden), &[gx, gh], 4 * act);
+        c = t.op(&format!("cell{s}"), mf(4 * batch * hidden), &[gates, c], act);
+        h = t.op(&format!("hid{s}"), mf(2 * batch * hidden), &[gates, c], act);
+    }
+    let loss = t.op("loss", mf(batch * hidden), &[h], 8);
+    t.finish(loss)
+}
+
+/// TreeLSTM over a complete binary tree with `leaves` leaves (dynamic model
+/// #2: tree-shaped, data-dependent control flow — Table 1's 2^k - 1 nodes).
+pub fn treelstm(leaves: usize, hidden: u64, batch: u64) -> Log {
+    assert!(leaves.is_power_of_two(), "complete binary tree");
+    let mut t = Tape::new("treelstm");
+    let act = batch * hidden * F32;
+    let wl = t.weight("wl", hidden * hidden * F32);
+    let wr = t.weight("wr", hidden * hidden * F32);
+    let wc = t.weight("wc", hidden * hidden * F32);
+    let mut level: Vec<R> = (0..leaves)
+        .map(|i| {
+            let x = t.data(&format!("leaf{i}"), act);
+            t.op(&format!("embed{i}"), mf(2 * batch * hidden * hidden), &[x, wc], act)
+        })
+        .collect();
+    let mut d = 0usize;
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len() / 2);
+        for (i, pair) in level.chunks(2).enumerate() {
+            let gl = t.op(
+                &format!("gl_{d}_{i}"),
+                mf(2 * batch * hidden * hidden),
+                &[pair[0], wl],
+                act,
+            );
+            let gr = t.op(
+                &format!("gr_{d}_{i}"),
+                mf(2 * batch * hidden * hidden),
+                &[pair[1], wr],
+                act,
+            );
+            let comb = t.op(&format!("comb_{d}_{i}"), mf(4 * batch * hidden), &[gl, gr], act);
+            next.push(comb);
+        }
+        level = next;
+        d += 1;
+    }
+    let loss = t.op("loss", mf(batch * hidden), &[level[0]], 8);
+    t.finish(loss)
+}
+
+/// Unrolled GAN: the generator is optimized through `unroll` differentiable
+/// steps of discriminator updates (dynamic model #3: higher-order structure;
+/// the surrogate discriminator parameters are *computed* tensors that every
+/// later step depends on).
+pub fn unrolled_gan(unroll: usize, width: u64, batch: u64) -> Log {
+    let mut t = Tape::new("unrolled_gan");
+    let act = batch * width * F32;
+    let param = width * width * F32;
+    // Generator forward.
+    let z = t.data("z", act);
+    let wg1 = t.weight("wg1", param);
+    let wg2 = t.weight("wg2", param);
+    let g1 = t.op("g1", mf(2 * batch * width * width), &[z, wg1], act);
+    let g1r = t.op("g1_relu", mf(batch * width), &[g1], act);
+    let fake = t.op("g2", mf(2 * batch * width * width), &[g1r, wg2], act);
+    // Initial discriminator params (constants) become computed surrogates.
+    let wd0 = t.weight("wd0", param);
+    let real = t.data("real", act);
+    let mut wd: R = wd0;
+    for k in 0..unroll {
+        // Discriminator forward on real and fake with current surrogate.
+        let dr = t.op(&format!("d_real{k}"), mf(2 * batch * width * width), &[real, wd], act);
+        let df = t.op(&format!("d_fake{k}"), mf(2 * batch * width * width), &[fake, wd], act);
+        let dl = t.op(&format!("d_loss{k}"), mf(batch * width), &[dr, df], act);
+        // Differentiable inner update: wd' = wd - lr * dgrad(dl, wd).
+        let grad = t.op(
+            &format!("d_grad{k}"),
+            mf(4 * batch * width * width),
+            &[dl, wd],
+            param,
+        );
+        wd = t.op(&format!("d_step{k}"), mf(width * width), &[grad, wd], param);
+    }
+    // Generator loss through the unrolled discriminator.
+    let dfinal = t.op("d_final", mf(2 * batch * width * width), &[fake, wd], act);
+    let loss = t.op("g_loss", mf(batch * width), &[dfinal], 8);
+    t.finish(loss)
+}
+
+/// Named model registry: the Fig. 2 / Fig. 4 suite at paper-like default
+/// scales (kept modest so full heuristic sweeps stay fast; harnesses accept
+/// `--scale` to grow them).
+pub fn by_name(name: &str, scale: u64) -> Option<Log> {
+    // Activation memory must dominate weights (as in the paper's batched
+    // training workloads) or no budget below the weight+grad floor exists.
+    let s = scale.max(1);
+    Some(match name {
+        "mlp" => mlp(24, 128, 512 * s),
+        "resnet" => resnet(6, 8 * s),
+        "densenet" => densenet(16, 16, 8 * s),
+        "unet" => unet(4, 8, 2 * s),
+        "transformer" => transformer(4, 128, 64, 16 * s),
+        "lstm" => lstm(32, 64, 64 * s),
+        "treelstm" => treelstm(64, 64, 64 * s),
+        "unrolled_gan" => unrolled_gan(8, 64, 64 * s),
+        _ => return None,
+    })
+}
+
+pub const ALL_MODELS: [&str; 8] = [
+    "mlp",
+    "resnet",
+    "densenet",
+    "unet",
+    "transformer",
+    "lstm",
+    "treelstm",
+    "unrolled_gan",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::{Config, Heuristic};
+    use crate::sim::replay::{baseline, simulate};
+
+    #[test]
+    fn all_models_generate_and_replay() {
+        for name in ALL_MODELS {
+            let log = by_name(name, 1).unwrap();
+            assert!(!log.instrs.is_empty(), "{name} empty");
+            let out = simulate(&log, Config::default());
+            assert!(out.ok(), "{name}: {:?}", out.failed);
+        }
+    }
+
+    #[test]
+    fn all_models_replay_at_60pct_budget() {
+        for name in ALL_MODELS {
+            let log = by_name(name, 1).unwrap();
+            let b = baseline(&log);
+            let budget = b.budget_at(0.6);
+            assert!(budget < b.peak_memory, "{name}: no headroom to exercise");
+            let out = simulate(
+                &log,
+                Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() },
+            );
+            assert!(out.ok(), "{name} @0.6: {:?}", out.failed);
+            assert!(out.stats.slowdown() < 2.0, "{name} thrashed: {}", out.stats.slowdown());
+        }
+    }
+
+    #[test]
+    fn structural_signatures() {
+        // DenseNet logs must contain wide-fanin concats; UNet long skips;
+        // ResNet residual adds; GAN surrogate steps.
+        let dense = by_name("densenet", 1).unwrap().to_jsonl();
+        assert!(dense.contains("final_concat"));
+        let unet = by_name("unet", 1).unwrap().to_jsonl();
+        assert!(unet.contains("skipcat"));
+        let resnet = by_name("resnet", 1).unwrap().to_jsonl();
+        assert!(resnet.contains("add_s"));
+        let gan = by_name("unrolled_gan", 1).unwrap().to_jsonl();
+        assert!(gan.contains("d_step"));
+    }
+
+    #[test]
+    fn model_sizes_reasonable() {
+        for name in ALL_MODELS {
+            let log = by_name(name, 1).unwrap();
+            let b = baseline(&log);
+            assert!(
+                b.calls >= 40,
+                "{name} too small: {} calls (want a real model-sized log)",
+                b.calls
+            );
+            assert!(b.peak_memory > 2 * b.constant_bytes / 2, "{name} trivial");
+        }
+    }
+
+    #[test]
+    fn treelstm_requires_power_of_two() {
+        let log = treelstm(32, 16, 2);
+        assert!(log.instrs.len() > 100);
+    }
+
+    #[test]
+    fn lstm_scales_with_steps() {
+        let a = lstm(8, 32, 4);
+        let b = lstm(16, 32, 4);
+        assert!(b.instrs.len() > a.instrs.len());
+    }
+}

@@ -1,0 +1,368 @@
+//! Forward-graph builder that auto-derives a reverse-mode backward pass,
+//! emitting a complete Appendix-C.6 training log (forward + loss + backward
+//! with gradient accumulation at fan-out points, weight gradients held live,
+//! and framework-faithful RELEASE events as values die).
+//!
+//! This synthesizes the PyTorch logs the paper's authors captured (see
+//! DESIGN.md §5 Substitutions): DTR's behaviour depends only on the log's
+//! structure — DAG shape, tensor sizes, operator costs, deallocation events —
+//! which the tape reproduces from each model's architecture.
+
+use super::super::sim::log::{Log, OutDecl};
+
+/// Reference to a value in the tape: a forward node or a constant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum R {
+    /// Forward activation (node index).
+    N(usize),
+    /// Constant (index into the constant table).
+    C(usize),
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    label: String,
+    cost: u64,
+    size: u64,
+    inputs: Vec<R>,
+    /// Fraction-of-forward cost for this node's backward op (x1000).
+    bwd_cost_permille: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Const {
+    name: String,
+    size: u64,
+    /// Weights get gradients (held live at the end); data inputs do not.
+    is_weight: bool,
+}
+
+/// Builder for a training-step log.
+pub struct Tape {
+    model: String,
+    nodes: Vec<Node>,
+    consts: Vec<Const>,
+}
+
+impl Tape {
+    pub fn new(model: &str) -> Self {
+        Tape { model: model.to_string(), nodes: Vec::new(), consts: Vec::new() }
+    }
+
+    /// Non-rematerializable model parameter (gets a gradient).
+    pub fn weight(&mut self, name: &str, size: u64) -> R {
+        self.consts.push(Const { name: name.to_string(), size, is_weight: true });
+        R::C(self.consts.len() - 1)
+    }
+
+    /// Non-rematerializable data input (no gradient).
+    pub fn data(&mut self, name: &str, size: u64) -> R {
+        self.consts.push(Const { name: name.to_string(), size, is_weight: false });
+        R::C(self.consts.len() - 1)
+    }
+
+    /// Forward operator producing one activation of `size` bytes.
+    pub fn op(&mut self, label: &str, cost: u64, inputs: &[R], size: u64) -> R {
+        self.op_full(label, cost, inputs, size, 2000)
+    }
+
+    /// Like [`Tape::op`] with an explicit backward/forward cost ratio in
+    /// permille (backward ops are typically ~2x forward).
+    pub fn op_full(
+        &mut self,
+        label: &str,
+        cost: u64,
+        inputs: &[R],
+        size: u64,
+        bwd_cost_permille: u64,
+    ) -> R {
+        debug_assert!(!inputs.is_empty());
+        self.nodes.push(Node {
+            label: label.to_string(),
+            cost: cost.max(1),
+            size: size.max(1),
+            inputs: inputs.to_vec(),
+            bwd_cost_permille,
+        });
+        R::N(self.nodes.len() - 1)
+    }
+
+    pub fn size_of(&self, r: R) -> u64 {
+        match r {
+            R::N(i) => self.nodes[i].size,
+            R::C(i) => self.consts[i].size,
+        }
+    }
+
+    fn fwd_name(&self, r: R) -> String {
+        match r {
+            R::N(i) => format!("a{i}"),
+            R::C(i) => self.consts[i].name.clone(),
+        }
+    }
+
+    /// Emit the full training log: forward in creation order, a gradient
+    /// seed at `loss`, then the backward pass in reverse order.
+    pub fn finish(self, loss: R) -> Log {
+        let loss_idx = match loss {
+            R::N(i) => i,
+            R::C(_) => panic!("loss must be a computed node"),
+        };
+        let n = self.nodes.len();
+        let mut log = Log::new(&self.model);
+
+        // --- constants ---
+        for c in &self.consts {
+            log.constant(&c.name, c.size);
+        }
+
+        // --- forward ---
+        for (i, node) in self.nodes.iter().enumerate() {
+            let inputs: Vec<String> = node.inputs.iter().map(|&r| self.fwd_name(r)).collect();
+            let input_refs: Vec<&str> = inputs.iter().map(|s| s.as_str()).collect();
+            log.call1(&node.label, node.cost, &input_refs, &format!("a{i}"), node.size);
+        }
+
+        // --- backward bookkeeping ---
+        // consumers[j] = forward nodes consuming node j.
+        let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &r in &node.inputs {
+                if let R::N(j) = r {
+                    consumers[j].push(i);
+                }
+            }
+        }
+        // Does node i (transitively) feed the loss? Dead branches get no
+        // gradient and their activations are released right after forward.
+        let mut feeds_loss = vec![false; n];
+        feeds_loss[loss_idx] = true;
+        for i in (0..n).rev() {
+            if consumers[i].iter().any(|&c| feeds_loss[c]) {
+                feeds_loss[i] = true;
+            }
+        }
+
+        // partials[j] = names of partial gradients accumulated for node j.
+        let mut partials: Vec<Vec<String>> = vec![Vec::new(); n];
+        // How many backward ops still need activation a_j as input.
+        let mut bwd_uses: Vec<usize> = vec![0; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !feeds_loss[i] {
+                continue;
+            }
+            for &r in &node.inputs {
+                if let R::N(j) = r {
+                    bwd_uses[j] += 1;
+                }
+            }
+        }
+
+        // Activations that never appear in any backward op can be released
+        // as soon as their consumers' forwards are done; to keep the log
+        // simple we release them immediately before backward starts (except
+        // the loss itself, which stays live per the output condition).
+        for i in 0..n {
+            if (bwd_uses[i] == 0 && i != loss_idx && consumers[i].is_empty() && !feeds_loss[i])
+                || (!feeds_loss[i] && bwd_uses[i] == 0 && i != loss_idx)
+            {
+                log.release(&format!("a{i}"));
+            }
+        }
+
+        // --- gradient seed ---
+        let seed = "dL".to_string();
+        log.call1("grad_seed", 1, &[&format!("a{loss_idx}")], &seed, self.nodes[loss_idx].size);
+        partials[loss_idx].push(seed);
+
+        // --- backward, reverse order ---
+        let mut grad_counter = 0usize;
+        for i in (0..n).rev() {
+            if !feeds_loss[i] || partials[i].is_empty() {
+                continue;
+            }
+            let node = &self.nodes[i];
+
+            // Accumulate fan-out partials into one gradient.
+            let grad = if partials[i].len() == 1 {
+                partials[i][0].clone()
+            } else {
+                let acc = format!("g{i}_acc");
+                let refs: Vec<&str> = partials[i].iter().map(|s| s.as_str()).collect();
+                log.call1(
+                    &format!("grad_add_{i}"),
+                    (node.size / 4).max(1),
+                    &refs,
+                    &acc,
+                    node.size,
+                );
+                for p in &partials[i] {
+                    log.release(p);
+                }
+                acc
+            };
+
+            // Backward op: inputs are the output gradient plus the forward
+            // op's inputs; outputs are one gradient per differentiable input.
+            let mut in_names = vec![grad.clone()];
+            in_names.extend(node.inputs.iter().map(|&r| self.fwd_name(r)));
+            let mut outs = Vec::new();
+            let mut targets: Vec<Option<usize>> = Vec::new();
+            for &r in &node.inputs {
+                match r {
+                    R::N(j) => {
+                        let g = format!("g{}_{}", j, grad_counter);
+                        grad_counter += 1;
+                        outs.push(OutDecl::sized(&g, self.nodes[j].size));
+                        targets.push(Some(j));
+                    }
+                    R::C(k) if self.consts[k].is_weight => {
+                        outs.push(OutDecl::sized(
+                            &format!("gw_{}_{}", self.consts[k].name, grad_counter),
+                            self.consts[k].size,
+                        ));
+                        grad_counter += 1;
+                        targets.push(None);
+                    }
+                    R::C(_) => {}
+                }
+            }
+            if outs.is_empty() {
+                // Leaf backward with nothing to produce: emit a tiny sink
+                // gradient so the op is still recorded.
+                outs.push(OutDecl::sized(&format!("gsink_{i}"), 8));
+                targets.push(None);
+            }
+            let bwd_cost = (node.cost * node.bwd_cost_permille / 1000).max(1);
+            let in_refs: Vec<&str> = in_names.iter().map(|s| s.as_str()).collect();
+            log.call(&format!("{}_bwd", node.label), bwd_cost, &in_refs, outs.clone());
+
+            // Register partial gradients with their target nodes.
+            for (o, tgt) in outs.iter().zip(targets) {
+                if let Some(j) = tgt {
+                    partials[j].push(o.name.clone());
+                }
+            }
+
+            // This node's own gradient is now fully consumed.
+            if i != loss_idx || !partials[i].iter().any(|p| p == "dL") {
+                log.release(&grad);
+            } else {
+                log.release(&grad); // dL released too; loss value itself stays
+            }
+
+            // Decrement backward-use counts of this op's activation inputs;
+            // release those now dead (mirrors autograd freeing saved tensors).
+            for &r in &node.inputs {
+                if let R::N(j) = r {
+                    bwd_uses[j] -= 1;
+                    if bwd_uses[j] == 0 && j != loss_idx {
+                        log.release(&format!("a{j}"));
+                    }
+                }
+            }
+        }
+
+        // Release the loss activation's gradient chain end: the loss value
+        // and weight gradients remain live (output condition).
+        log
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::{Config, Heuristic};
+    use crate::sim::replay::{baseline, simulate};
+
+    fn mlp(depth: usize) -> Log {
+        let mut t = Tape::new("mlp");
+        let x = t.data("x", 1024);
+        let mut h = x;
+        for i in 0..depth {
+            let w = t.weight(&format!("w{i}"), 256);
+            h = t.op(&format!("fc{i}"), 100, &[h, w], 1024);
+        }
+        let loss = t.op("loss", 10, &[h], 8);
+        t.finish(loss)
+    }
+
+    #[test]
+    fn mlp_log_replays_unbudgeted() {
+        let log = mlp(6);
+        let b = baseline(&log);
+        assert!(b.total_compute > 600);
+        let out = simulate(&log, Config::default());
+        assert!(out.ok(), "{:?}", out.failed);
+    }
+
+    #[test]
+    fn mlp_log_replays_under_budget_all_heuristics() {
+        let log = mlp(12);
+        let b = baseline(&log);
+        let budget = b.constant_bytes + (b.peak_memory - b.constant_bytes) / 2;
+        for h in Heuristic::fig2_set() {
+            let out = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+            assert!(out.ok(), "{}: {:?}", h.name(), out.failed);
+        }
+    }
+
+    #[test]
+    fn fanout_accumulates_gradients() {
+        // Diamond: x -> a -> (b, c) -> d; a's gradient must be accumulated.
+        let mut t = Tape::new("diamond");
+        let x = t.data("x", 64);
+        let w = t.weight("w", 64);
+        let a = t.op("a", 10, &[x, w], 64);
+        let b = t.op("b", 10, &[a], 64);
+        let c = t.op("c", 10, &[a], 64);
+        let d = t.op("d", 10, &[b, c], 64);
+        let log = t.finish(d);
+        let text = log.to_jsonl();
+        assert!(text.contains("grad_add"), "fan-out must emit accumulation:\n{text}");
+        let out = simulate(&log, Config::default());
+        assert!(out.ok(), "{:?}", out.failed);
+    }
+
+    #[test]
+    fn weight_gradients_stay_live() {
+        let log = mlp(4);
+        // No RELEASE of any gw_* identifier.
+        for ins in &log.instrs {
+            if let crate::sim::log::Instr::Release { t } = ins {
+                assert!(!t.starts_with("gw_"), "weight gradient {t} was released");
+            }
+        }
+    }
+
+    #[test]
+    fn activations_released_after_backward() {
+        let log = mlp(4);
+        let text = log.to_jsonl();
+        // Every intermediate activation a_i (not the loss) must be released.
+        let n_act_releases = log
+            .instrs
+            .iter()
+            .filter(|i| matches!(i, crate::sim::log::Instr::Release { t } if t.starts_with('a')))
+            .count();
+        assert!(n_act_releases >= 4, "expected activation releases, log:\n{text}");
+    }
+
+    #[test]
+    fn tight_budget_forces_remat_and_succeeds() {
+        let log = mlp(16);
+        let b = baseline(&log);
+        let budget = b.budget_at(0.35);
+        let out = simulate(
+            &log,
+            Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() },
+        );
+        assert!(out.ok(), "{:?}", out.failed);
+        assert!(out.stats.remat_count > 0);
+        assert!(out.stats.slowdown() < 3.0, "slowdown {}", out.stats.slowdown());
+    }
+}

@@ -1,0 +1,27 @@
+//! # dtr — Dynamic Tensor Rematerialization (ICLR 2021)
+//!
+//! A full reproduction of *Dynamic Tensor Rematerialization* (Kirisame et
+//! al., ICLR 2021) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **rust (this crate)** — the DTR runtime (greedy online checkpointing
+//!   under a memory budget), the Appendix-C simulator, workload generators
+//!   for the paper's eight models, static-checkpointing baselines
+//!   (Chen √N, Revolve/Treeverse, optimal), and a real training engine that
+//!   executes AOT-compiled HLO artifacts through PJRT with DTR managing the
+//!   actual buffers.
+//! * **JAX (`python/compile/model.py`)** — the transformer ops (fwd/bwd),
+//!   lowered once to HLO text; never imported at run time.
+//! * **Pallas (`python/compile/kernels/`)** — fused attention + layernorm
+//!   kernels inside the JAX ops.
+//!
+//! Quickstart: see `examples/quickstart.rs`; experiments: `dtr-repro --help`.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod dtr;
+pub mod exec;
+pub mod graphs;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,8 @@
+//! `dtr-repro` — experiment launcher. Subcommands regenerate each paper
+//! table/figure; see DESIGN.md §4 for the experiment index.
+fn main() {
+    if let Err(e) = dtr::repro::dispatch() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

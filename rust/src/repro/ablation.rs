@@ -1,0 +1,158 @@
+//! Appendix-D experiments: the s × m × c ablation grid (Figs. 7–10), the
+//! deallocation-policy comparison (Fig. 11), and the metadata/storage-access
+//! overhead comparison (Fig. 12).
+
+use anyhow::Result;
+
+use crate::dtr::{Config, DeallocPolicy, Heuristic};
+use crate::graphs::models::by_name;
+use crate::sim::replay::{baseline, simulate};
+use crate::util::csv::{f, CsvOut};
+
+/// Figs. 7–10: every (cost, size, staleness) combination on each model.
+pub fn ablation(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> Result<()> {
+    out.row(&["model", "heuristic", "budget_ratio", "slowdown", "remats"])?;
+    for &model in models {
+        let log = by_name(model, scale).unwrap();
+        let b = baseline(&log);
+        for h in Heuristic::ablation_grid() {
+            for &ratio in ratios {
+                let budget = (b.peak_memory as f64 * ratio) as u64;
+                let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+                out.row(&[
+                    model.to_string(),
+                    h.name(),
+                    f(ratio),
+                    o.failed
+                        .is_none()
+                        .then(|| f(o.stats.slowdown()))
+                        .unwrap_or_else(|| "oom".to_string()),
+                    o.stats.remat_count.to_string(),
+                ])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 11: h_dtr under ignore / eager-evict / banish deallocation.
+pub fn fig11(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> Result<()> {
+    out.row(&["model", "policy", "budget_ratio", "slowdown", "banishes"])?;
+    for &model in models {
+        let log = by_name(model, scale).unwrap();
+        let b = baseline(&log);
+        for policy in DeallocPolicy::all() {
+            for &ratio in ratios {
+                let budget = (b.peak_memory as f64 * ratio) as u64;
+                let o = simulate(
+                    &log,
+                    Config { budget, heuristic: Heuristic::dtr(), policy, ..Config::default() },
+                );
+                out.row(&[
+                    model.to_string(),
+                    policy.name().to_string(),
+                    f(ratio),
+                    o.failed
+                        .is_none()
+                        .then(|| f(o.stats.slowdown()))
+                        .unwrap_or_else(|| "oom".to_string()),
+                    o.stats.banish_count.to_string(),
+                ])?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 12: metadata/storage accesses per heuristic and budget.
+pub fn fig12(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> Result<()> {
+    out.row(&["model", "heuristic", "budget_ratio", "metadata_accesses", "evictions"])?;
+    for &model in models {
+        let log = by_name(model, scale).unwrap();
+        let b = baseline(&log);
+        for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()] {
+            for &ratio in ratios {
+                let budget = (b.peak_memory as f64 * ratio) as u64;
+                let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+                if o.ok() {
+                    out.row(&[
+                        model.to_string(),
+                        h.name(),
+                        f(ratio),
+                        o.stats.metadata_accesses.to_string(),
+                        o.stats.evict_count.to_string(),
+                    ])?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::Config;
+    use crate::sim::replay::simulate;
+
+    #[test]
+    fn fig12_access_ordering_holds_on_models() {
+        // Appendix D.3: h_dtr >> h_dtr_eq >> h_dtr_local in metadata
+        // accesses (1-2 orders of magnitude each in the paper).
+        // Needs real memory pressure: large evicted neighborhoods are what
+        // make the exact-e* DFS expensive (Appendix D.3's regime).
+        let log = by_name("mlp", 1).unwrap();
+        let b = baseline(&log);
+        let budget = b.budget_at(0.08);
+        // Normalize per victim-search pass: raw totals also reflect how
+        // *many* searches each heuristic's decisions caused, which is the
+        // overhead-vs-quality tradeoff the paper plots separately.
+        let acc = |h: Heuristic| {
+            let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+            assert!(o.ok(), "{}: {:?}", h.name(), o.failed);
+            o.stats.metadata_accesses as f64 / o.stats.eviction_searches.max(1) as f64
+        };
+        let full = acc(Heuristic::dtr());
+        let eq = acc(Heuristic::dtr_eq());
+        let local = acc(Heuristic::dtr_local());
+        assert!(full > 2.0 * eq, "e* {full} vs eq {eq} per search");
+        assert!(eq > local, "eq {eq} vs local {local} per search");
+    }
+
+    #[test]
+    fn fig11_dealloc_aware_policies_beat_ignore() {
+        // Appendix D.2's robust claim: both deallocation-aware policies
+        // (eager, banish) achieve lower overhead than ignoring deallocation
+        // events, which wastes the liveness information. (The eager-vs-
+        // banish ordering is log-specific in the paper — banish loses badly
+        // on *their* UNet logs — so we assert the weaker, robust property
+        // and report the full comparison in the fig11 CSV.)
+        let log = by_name("unet", 1).unwrap();
+        let b = baseline(&log);
+        let lowest_ok = |policy: DeallocPolicy| {
+            let mut lowest = f64::INFINITY;
+            for i in (2..=10).rev() {
+                let ratio = i as f64 / 10.0;
+                let budget = (b.peak_memory as f64 * ratio) as u64;
+                let o = simulate(
+                    &log,
+                    Config { budget, heuristic: Heuristic::dtr(), policy, ..Config::default() },
+                );
+                if o.ok() {
+                    lowest = ratio;
+                } else {
+                    break;
+                }
+            }
+            lowest
+        };
+        let eager = lowest_ok(DeallocPolicy::EagerEvict);
+        let banish = lowest_ok(DeallocPolicy::Banish);
+        let ignore = lowest_ok(DeallocPolicy::Ignore);
+        assert!(
+            eager <= ignore && banish <= ignore,
+            "dealloc-aware policies (eager {eager}, banish {banish}) must \
+             reach budgets at least as low as ignore ({ignore})"
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Figure 2: simulated slowdown vs memory-budget ratio for every heuristic
+//! on every model. Also emits the black/gray floor columns (constant bytes,
+//! largest-op bytes) the paper shades, and marks OOM points.
+
+use anyhow::Result;
+
+use crate::dtr::{Config, Heuristic};
+use crate::graphs::models::{by_name, ALL_MODELS};
+use crate::sim::replay::{baseline, simulate};
+use crate::util::csv::{f, CsvOut};
+
+pub struct Fig2Row {
+    pub model: String,
+    pub heuristic: String,
+    pub ratio: f64,
+    /// `None` = OOM at this budget.
+    pub slowdown: Option<f64>,
+    pub remats: u64,
+}
+
+pub fn run(
+    models: &[&str],
+    heuristics: &[Heuristic],
+    ratios: &[f64],
+    scale: u64,
+) -> Result<Vec<Fig2Row>> {
+    let mut rows = Vec::new();
+    for &model in models {
+        let log = by_name(model, scale)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        let b = baseline(&log);
+        for &h in heuristics {
+            for &ratio in ratios {
+                let budget = (b.peak_memory as f64 * ratio) as u64;
+                let out = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+                rows.push(Fig2Row {
+                    model: model.to_string(),
+                    heuristic: h.name(),
+                    ratio,
+                    slowdown: if out.ok() { Some(out.stats.slowdown()) } else { None },
+                    remats: out.stats.remat_count,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+pub fn emit(out: &mut CsvOut, rows: &[Fig2Row], models: &[&str], scale: u64) -> Result<()> {
+    out.row(&["model", "heuristic", "budget_ratio", "slowdown", "remats"])?;
+    for r in rows {
+        out.row(&[
+            r.model.clone(),
+            r.heuristic.clone(),
+            f(r.ratio),
+            r.slowdown.map(f).unwrap_or_else(|| "oom".to_string()),
+            r.remats.to_string(),
+        ])?;
+    }
+    // Floor metadata (the paper's shaded regions), one row per model.
+    out.row(&["#model", "constant_bytes", "max_op_bytes", "peak_bytes", "calls"])?;
+    for &m in models {
+        let b = baseline(&by_name(m, scale).unwrap());
+        out.row(&[
+            format!("#{m}"),
+            b.constant_bytes.to_string(),
+            b.max_op_bytes.to_string(),
+            b.peak_memory.to_string(),
+            b.calls.to_string(),
+        ])?;
+    }
+    Ok(())
+}
+
+/// Default Fig. 2 sweep.
+pub fn default_run(out: &mut CsvOut, scale: u64) -> Result<()> {
+    let ratios: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+    let hs = Heuristic::fig2_set();
+    let rows = run(&ALL_MODELS, &hs, &ratios, scale)?;
+    emit(out, &rows, &ALL_MODELS, scale)?;
+    summarize(&rows);
+    Ok(())
+}
+
+/// Print the paper's qualitative claims as a quick check.
+fn summarize(rows: &[Fig2Row]) {
+    // Lowest feasible ratio per heuristic, averaged over models.
+    println!("\n# lowest feasible budget ratio (mean over models):");
+    for h in Heuristic::fig2_set() {
+        let name = h.name();
+        let mut lows = Vec::new();
+        for model in rows.iter().map(|r| r.model.clone()).collect::<std::collections::BTreeSet<_>>() {
+            let low = rows
+                .iter()
+                .filter(|r| r.model == model && r.heuristic == name && r.slowdown.is_some())
+                .map(|r| r.ratio)
+                .fold(f64::INFINITY, f64::min);
+            if low.is_finite() {
+                lows.push(low);
+            }
+        }
+        let mean = lows.iter().sum::<f64>() / lows.len().max(1) as f64;
+        println!("  {name:<14} {mean:.2}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_small_sweep_has_expected_shape() {
+        let rows = run(&["mlp"], &[Heuristic::dtr_eq(), Heuristic::lru()], &[0.5, 0.9], 1).unwrap();
+        assert_eq!(rows.len(), 4);
+        // At 0.9 everything must succeed with low slowdown.
+        for r in rows.iter().filter(|r| r.ratio == 0.9) {
+            let s = r.slowdown.expect("0.9 budget must be feasible");
+            assert!(s < 1.5, "{}: slowdown {s}", r.heuristic);
+        }
+    }
+
+    #[test]
+    fn informed_heuristics_reach_lower_budgets() {
+        // The paper's headline: neighborhood-aware heuristics (h_dtr_eq)
+        // support budgets at least as low as metadata-free ones (h_rand).
+        let ratios: Vec<f64> = (2..=10).map(|i| i as f64 / 10.0).collect();
+        let rows = run(
+            &["mlp", "lstm"],
+            &[Heuristic::dtr_eq(), Heuristic::Random],
+            &ratios,
+            1,
+        )
+        .unwrap();
+        for model in ["mlp", "lstm"] {
+            let low = |h: &str| {
+                rows.iter()
+                    .filter(|r| r.model == model && r.heuristic == h && r.slowdown.is_some())
+                    .map(|r| r.ratio)
+                    .fold(f64::INFINITY, f64::min)
+            };
+            assert!(
+                low("h_dtr_eq") <= low("h_rand") + 1e-9,
+                "{model}: eq {} vs rand {}",
+                low("h_dtr_eq"),
+                low("h_rand")
+            );
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Figure 3: DTR vs static checkpointing (Checkmate-optimal = Revolve DP on
+//! chains, Chen √N, Chen greedy) — total operator executions vs memory
+//! budget on linear networks, the setting where every comparator is exactly
+//! defined. DTR runs the real runtime (`run_linear`); baselines are
+//! analytic/DP (DESIGN.md §5).
+
+use anyhow::Result;
+
+use crate::baselines::{chen_greedy, chen_sqrt, Revolve};
+use crate::dtr::Heuristic;
+use crate::graphs::linear::run_linear;
+use crate::util::csv::{f, CsvOut};
+
+pub struct Fig3Row {
+    pub n: usize,
+    pub budget: u64,
+    pub scheme: String,
+    pub ops: Option<u64>,
+}
+
+pub fn run(n: usize, budgets: &[u64]) -> Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    let mut revolve = Revolve::new(n, n);
+    for &b in budgets {
+        // Optimal (Checkmate-equivalent on chains).
+        rows.push(Fig3Row {
+            n,
+            budget: b,
+            scheme: "checkmate_optimal".into(),
+            ops: revolve.total_ops(n, b),
+        });
+        rows.push(Fig3Row {
+            n,
+            budget: b,
+            scheme: "chen_sqrt".into(),
+            ops: chen_sqrt(n, b).map(|(ops, _)| ops),
+        });
+        rows.push(Fig3Row {
+            n,
+            budget: b,
+            scheme: "chen_greedy".into(),
+            ops: chen_greedy(n, b).map(|(ops, _)| ops),
+        });
+        for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::lru()] {
+            let ops = run_linear(n, b, h, false).ok().map(|r| r.total_ops);
+            rows.push(Fig3Row {
+                n,
+                budget: b,
+                scheme: format!("dtr_{}", h.name()),
+                ops,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn emit(out: &mut CsvOut, rows: &[Fig3Row]) -> Result<()> {
+    out.row(&["n", "budget", "scheme", "total_ops", "overhead_vs_2n"])?;
+    for r in rows {
+        let (ops, overhead) = match r.ops {
+            Some(o) => (o.to_string(), f(o as f64 / (2.0 * r.n as f64))),
+            None => ("oom".to_string(), "oom".to_string()),
+        };
+        out.row(&[r.n.to_string(), r.budget.to_string(), r.scheme.clone(), ops, overhead])?;
+    }
+    Ok(())
+}
+
+pub fn default_run(out: &mut CsvOut, n: usize) -> Result<()> {
+    let sqrt_n = (n as f64).sqrt().ceil() as u64;
+    let budgets: Vec<u64> = [
+        sqrt_n,
+        sqrt_n * 3 / 2,
+        2 * sqrt_n,
+        3 * sqrt_n,
+        4 * sqrt_n,
+        6 * sqrt_n,
+        8 * sqrt_n,
+        (n as u64) / 2,
+        n as u64 + 3,
+    ]
+    .into_iter()
+    .filter(|&b| b >= 4)
+    .collect();
+    let rows = run(n, &budgets)?;
+    emit(out, &rows)?;
+    // Headline check: DTR h_dtr within a small factor of optimal.
+    println!("\n# DTR/optimal overhead ratio by budget:");
+    for &b in &budgets {
+        let get = |s: &str| {
+            rows.iter()
+                .find(|r| r.budget == b && r.scheme == s)
+                .and_then(|r| r.ops)
+        };
+        if let (Some(d), Some(o)) = (get("dtr_h_dtr"), get("checkmate_optimal")) {
+            println!("  b={b:<5} dtr={d:<8} optimal={o:<8} ratio={:.3}", d as f64 / o as f64);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtr_close_to_optimal_on_chains() {
+        // The paper's Fig. 3 claim: DTR's overhead is competitive with the
+        // ILP optimum. Check h_dtr stays within 1.6x of optimal ops at
+        // moderate budgets.
+        let n = 256;
+        let budgets = [48u64, 64, 96, 128];
+        let rows = run(n, &budgets).unwrap();
+        for &b in &budgets {
+            let get = |s: &str| {
+                rows.iter().find(|r| r.budget == b && r.scheme == s).and_then(|r| r.ops)
+            };
+            let dtr = get("dtr_h_dtr").expect("dtr feasible") as f64;
+            let opt = get("checkmate_optimal").expect("optimal feasible") as f64;
+            assert!(
+                dtr <= opt * 1.6 + 8.0,
+                "b={b}: dtr {dtr} not close to optimal {opt}"
+            );
+        }
+    }
+
+    #[test]
+    fn dtr_beats_or_matches_chen_at_low_budgets() {
+        let n = 256;
+        let rows = run(n, &[40, 64]).unwrap();
+        for &b in &[40u64, 64] {
+            let get = |s: &str| {
+                rows.iter().find(|r| r.budget == b && r.scheme == s).and_then(|r| r.ops)
+            };
+            if let (Some(d), Some(c)) = (get("dtr_h_dtr"), get("chen_sqrt")) {
+                assert!(d <= c * 13 / 10, "b={b}: dtr {d} much worse than chen {c}");
+            }
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Figure 4: prototype runtime-overhead profile on the *real* engine —
+//! per-batch wall time decomposed into operator compute, heuristic score
+//! evaluation ("cost compute"), victim search ("eviction loop"), and
+//! unprofiled remainder, across memory budgets. Requires `make artifacts`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::dtr::{self, Heuristic};
+use crate::exec::{Engine, Optimizer};
+use crate::util::csv::{f, CsvOut};
+
+pub struct Fig4Row {
+    pub ratio: f64,
+    pub wall_ms: f64,
+    pub op_ms: f64,
+    pub cost_compute_ms: f64,
+    pub eviction_search_ms: f64,
+    pub unprofiled_ms: f64,
+    pub remats: u64,
+    pub failed: bool,
+}
+
+pub fn run(artifacts: &Path, ratios: &[f64], steps: usize, h: Heuristic) -> Result<Vec<Fig4Row>> {
+    let base_cfg = dtr::Config { heuristic: h, profile: true, ..dtr::Config::default() };
+    let mut engine = Engine::new(artifacts, base_cfg.clone(), Optimizer::Sgd)?;
+    let peak = engine.measure_peak()?;
+    let mut rows = Vec::new();
+    for &ratio in ratios {
+        engine.dtr_cfg = dtr::Config { budget: (peak as f64 * ratio) as u64, ..base_cfg.clone() };
+        let mut wall = 0u64;
+        let mut op = 0u64;
+        let mut cost = 0u64;
+        let mut search = 0u64;
+        let mut remats = 0u64;
+        let mut failed = false;
+        for _ in 0..steps {
+            match engine.train_step() {
+                Ok(r) => {
+                    wall += r.wall_ns;
+                    op += r.exec_ns;
+                    cost += r.stats.cost_compute_ns;
+                    search += r.stats.eviction_loop_ns - r.stats.cost_compute_ns;
+                    remats += r.stats.remat_count;
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        let n = steps as f64;
+        rows.push(Fig4Row {
+            ratio,
+            wall_ms: wall as f64 / 1e6 / n,
+            op_ms: op as f64 / 1e6 / n,
+            cost_compute_ms: cost as f64 / 1e6 / n,
+            eviction_search_ms: search as f64 / 1e6 / n,
+            unprofiled_ms: (wall.saturating_sub(op + cost + search)) as f64 / 1e6 / n,
+            remats: remats / steps as u64,
+            failed,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn emit(out: &mut CsvOut, rows: &[Fig4Row]) -> Result<()> {
+    out.row(&[
+        "budget_ratio",
+        "wall_ms",
+        "operator_ms",
+        "cost_compute_ms",
+        "eviction_loop_ms",
+        "unprofiled_ms",
+        "remats_per_step",
+        "status",
+    ])?;
+    for r in rows {
+        out.row(&[
+            f(r.ratio),
+            f(r.wall_ms),
+            f(r.op_ms),
+            f(r.cost_compute_ms),
+            f(r.eviction_search_ms),
+            f(r.unprofiled_ms),
+            r.remats.to_string(),
+            if r.failed { "oom".into() } else { "ok".to_string() },
+        ])?;
+    }
+    Ok(())
+}
+
+pub fn default_run(out: &mut CsvOut, artifacts: &Path, steps: usize) -> Result<()> {
+    let ratios = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4];
+    let rows = run(artifacts, &ratios, steps, Heuristic::dtr_eq())?;
+    emit(out, &rows)
+}

@@ -1,0 +1,143 @@
+//! Experiment harnesses: one subcommand per paper table/figure
+//! (DESIGN.md §4), plus `train` (the coordinator) and `gen-log` utilities.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod formal;
+pub mod tables;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::{self, TrainConfig};
+use crate::graphs::models::{by_name, ALL_MODELS};
+use crate::util::cli::Args;
+use crate::util::csv::CsvOut;
+
+const USAGE: &str = "\
+dtr-repro — Dynamic Tensor Rematerialization (ICLR 2021) reproduction
+
+USAGE: dtr-repro <command> [--out results/x.csv] [options]
+
+experiment commands (regenerate paper tables/figures):
+  fig2       heuristic comparison: slowdown vs budget ratio, 8 models
+             [--models a,b --ratios 0.1,..,1.0 --scale 1]
+  fig3       DTR vs static checkpointing on linear networks [--n 512]
+  fig4       real-engine runtime overhead profile [--steps 3 --artifacts artifacts]
+  table1     largest supported input size, baseline vs DTR
+  fig5       memory-trace visualization (N=200, B=2*sqrt(N), h_e*) [--n 200]
+  thm31      Theorem 3.1 O(N) sweep [--ns 64,256,1024,4096]
+  thm32      Theorem 3.2 adversarial lower bound [--ns 64,128,256,512 --b 8]
+  ablation   Appendix D.1 s*m*c heuristic grid (Figs. 7-10)
+  fig11      deallocation-policy comparison (ignore/eager/banish)
+  fig12      metadata-access overhead per heuristic
+
+system commands:
+  train      train the transformer LM under a DTR budget
+             [--config cfg.json --steps 50 --budget-ratio 0.6
+              --heuristic h_dtr_eq --optimizer adam --curve-out loss.csv]
+  gen-log    dump a model's operation log [--model resnet --scale 1 --out m.jsonl]
+  models     list available workload models
+";
+
+pub fn dispatch() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let out_path = args.get("out").map(PathBuf::from);
+    let mut out = CsvOut::create(out_path.as_deref(), true)?;
+    let scale = args.u64_or("scale", 1);
+
+    match cmd {
+        "fig2" => {
+            let models: Vec<String> = args
+                .list("models")
+                .unwrap_or_else(|| ALL_MODELS.iter().map(|s| s.to_string()).collect());
+            let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            let ratios =
+                args.f64_list_or("ratios", &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]);
+            let hs = crate::dtr::Heuristic::fig2_set();
+            let rows = fig2::run(&model_refs, &hs, &ratios, scale)?;
+            fig2::emit(&mut out, &rows, &model_refs, scale)?;
+        }
+        "fig3" => fig3::default_run(&mut out, args.usize_or("n", 512))?,
+        "fig4" => {
+            let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+            fig4::default_run(&mut out, &artifacts, args.usize_or("steps", 3))?;
+        }
+        "table1" => tables::default_run(&mut out)?,
+        "fig5" => formal::fig5(&mut out, args.usize_or("n", 200))?,
+        "thm31" => {
+            let ns: Vec<usize> = args
+                .list("ns")
+                .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+                .unwrap_or_else(|| vec![64, 128, 256, 512, 1024, 2048, 4096]);
+            formal::thm31(&mut out, &ns)?;
+        }
+        "thm32" => {
+            let ns: Vec<usize> = args
+                .list("ns")
+                .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+                .unwrap_or_else(|| vec![64, 128, 256, 512]);
+            formal::thm32(&mut out, &ns, args.usize_or("b", 8))?;
+        }
+        "ablation" => {
+            let models: Vec<String> = args
+                .list("models")
+                .unwrap_or_else(|| vec!["mlp".into(), "resnet".into(), "lstm".into(), "unet".into()]);
+            let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            let ratios = args.f64_list_or("ratios", &[0.3, 0.4, 0.5, 0.6, 0.8]);
+            ablation::ablation(&mut out, &model_refs, &ratios, scale)?;
+        }
+        "fig11" => {
+            let models: Vec<String> = args
+                .list("models")
+                .unwrap_or_else(|| vec!["mlp".into(), "resnet".into(), "unet".into(), "lstm".into()]);
+            let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            let ratios = args.f64_list_or("ratios", &[0.3, 0.4, 0.5, 0.6, 0.8, 0.9]);
+            ablation::fig11(&mut out, &model_refs, &ratios, scale)?;
+        }
+        "fig12" => {
+            let models: Vec<String> = args
+                .list("models")
+                .unwrap_or_else(|| vec!["mlp".into(), "resnet".into(), "densenet".into(), "lstm".into()]);
+            let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            let ratios = args.f64_list_or("ratios", &[0.4, 0.5, 0.6, 0.8]);
+            ablation::fig12(&mut out, &model_refs, &ratios, scale)?;
+        }
+        "train" => {
+            let cfg = TrainConfig::load(&args)?;
+            coordinator::train(&cfg)?;
+        }
+        "gen-log" => {
+            let model = args.str_or("model", "resnet");
+            let log = by_name(&model, scale)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+            match args.get("out") {
+                Some(p) => {
+                    log.save(Path::new(p))?;
+                    println!("wrote {} instructions to {p}", log.instrs.len());
+                }
+                None => print!("{}", log.to_jsonl()),
+            }
+        }
+        "models" => {
+            for m in ALL_MODELS {
+                let log = by_name(m, scale).unwrap();
+                let b = crate::sim::replay::baseline(&log);
+                println!(
+                    "{m:<14} {:>5} calls  peak {:>12} B  constants {:>12} B",
+                    b.calls, b.peak_memory, b.constant_bytes
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

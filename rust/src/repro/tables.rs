@@ -1,0 +1,146 @@
+//! Table 1: the largest input size each model supports on a fixed-capacity
+//! "device", with and without DTR, and the per-batch compute at each size.
+//!
+//! The paper's Titan V is replaced by a simulated device whose capacity is
+//! pegged to 2x the scale-1 model's unbudgeted peak (DESIGN.md §5): the
+//! baseline ("PT") fits only while its peak stays under capacity, while DTR
+//! keeps training by rematerializing — the table's qualitative shape
+//! (baseline OOMs at small inputs, DTR continues with modest slowdown).
+
+use anyhow::Result;
+
+use crate::dtr::{Config, Heuristic};
+use crate::graphs::models::by_name;
+use crate::sim::replay::{baseline, simulate};
+use crate::util::csv::{f, CsvOut};
+
+pub struct Table1Row {
+    pub model: String,
+    pub scale: u64,
+    pub peak: u64,
+    pub capacity: u64,
+    /// Baseline (no checkpointing): compute if it fits, None if OOM.
+    pub baseline_cost: Option<u64>,
+    /// DTR at device capacity: compute, None if infeasible even with remat.
+    pub dtr_cost: Option<u64>,
+}
+
+pub fn run(models: &[&str], scales: &[u64], h: Heuristic) -> Result<Vec<Table1Row>> {
+    let mut rows = Vec::new();
+    for &model in models {
+        // Device capacity pegged to the scale-1 workload.
+        let small = baseline(&by_name(model, 1).unwrap());
+        let capacity = small.peak_memory * 2;
+        for &scale in scales {
+            let log = by_name(model, scale).unwrap();
+            let b = baseline(&log);
+            let baseline_cost = if b.peak_memory <= capacity { Some(b.total_compute) } else { None };
+            let out = simulate(
+                &log,
+                Config { budget: capacity, heuristic: h, ..Config::default() },
+            );
+            rows.push(Table1Row {
+                model: model.to_string(),
+                scale,
+                peak: b.peak_memory,
+                capacity,
+                baseline_cost,
+                dtr_cost: if out.ok() { Some(out.stats.total_compute()) } else { None },
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn emit(out: &mut CsvOut, rows: &[Table1Row]) -> Result<()> {
+    out.row(&[
+        "model",
+        "input_scale",
+        "peak_bytes",
+        "device_capacity",
+        "baseline_compute",
+        "dtr_compute",
+        "dtr_slowdown_vs_baseline_need",
+    ])?;
+    for r in rows {
+        out.row(&[
+            r.model.clone(),
+            r.scale.to_string(),
+            r.peak.to_string(),
+            r.capacity.to_string(),
+            r.baseline_cost.map(|c| c.to_string()).unwrap_or_else(|| "X".into()),
+            r.dtr_cost.map(|c| c.to_string()).unwrap_or_else(|| "X".into()),
+            match r.dtr_cost {
+                Some(d) => {
+                    // Slowdown vs the compute the baseline *would* need.
+                    let base = r.baseline_cost.unwrap_or_else(|| {
+                        // Unbudgeted compute equals the log's base compute.
+                        d.min(d) // placeholder replaced below
+                    });
+                    if r.baseline_cost.is_some() {
+                        f(d as f64 / base as f64)
+                    } else {
+                        "n/a(baseline OOM)".to_string()
+                    }
+                }
+                None => "X".into(),
+            },
+        ])?;
+    }
+    Ok(())
+}
+
+pub fn default_run(out: &mut CsvOut) -> Result<()> {
+    let models = ["resnet", "transformer", "unet", "treelstm"];
+    let scales = [1u64, 2, 3, 4, 6];
+    let rows = run(&models, &scales, Heuristic::dtr_eq())?;
+    emit(out, &rows)?;
+    // Headline: largest supported scale per scheme.
+    println!("\n# largest supported input scale (baseline vs DTR):");
+    for m in models {
+        let max_base = rows
+            .iter()
+            .filter(|r| r.model == m && r.baseline_cost.is_some())
+            .map(|r| r.scale)
+            .max()
+            .unwrap_or(0);
+        let max_dtr = rows
+            .iter()
+            .filter(|r| r.model == m && r.dtr_cost.is_some())
+            .map(|r| r.scale)
+            .max()
+            .unwrap_or(0);
+        println!("  {m:<12} baseline={max_base}  dtr={max_dtr}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtr_supports_larger_inputs_than_baseline() {
+        let rows = run(&["transformer"], &[1, 2, 3, 4], Heuristic::dtr_eq()).unwrap();
+        let max_base = rows
+            .iter()
+            .filter(|r| r.baseline_cost.is_some())
+            .map(|r| r.scale)
+            .max()
+            .unwrap();
+        let max_dtr =
+            rows.iter().filter(|r| r.dtr_cost.is_some()).map(|r| r.scale).max().unwrap();
+        assert!(
+            max_dtr > max_base,
+            "DTR ({max_dtr}) must outscale the baseline ({max_base})"
+        );
+    }
+
+    #[test]
+    fn dtr_matches_baseline_when_memory_ample() {
+        let rows = run(&["treelstm"], &[1], Heuristic::dtr_eq()).unwrap();
+        let r = &rows[0];
+        // At scale 1 capacity is 2x peak: no rematerialization needed.
+        assert_eq!(r.baseline_cost, r.dtr_cost);
+    }
+}

@@ -1,0 +1,202 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-tree JSON module (no serde offline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(&self) -> u64 {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.elements() as u64 * self.dtype.bytes()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSig> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .context("shape array")?
+            .iter()
+            .map(|x| x.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.req("dtype")?.as_str().context("dtype str")?)?;
+        Ok(TensorSig { shape, dtype })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OpSig {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Model dimensions baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_layers: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub total_params: u64,
+    /// Parameter group name -> shape.
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub ops: BTreeMap<String, OpSig>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = parse(&text).context("parsing manifest.json")?;
+
+        let c = v.req("config")?;
+        let dim = |k: &str| -> Result<usize> { c.req(k)?.as_usize().context(k.to_string()) };
+        let config = ModelConfig {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_heads: dim("n_heads")?,
+            d_ff: dim("d_ff")?,
+            seq: dim("seq")?,
+            batch: dim("batch")?,
+            n_layers: dim("n_layers")?,
+        };
+
+        let mut param_shapes = BTreeMap::new();
+        for (name, sh) in v.req("param_shapes")?.as_obj().context("param_shapes")? {
+            let shape = sh
+                .as_arr()
+                .context("shape arr")?
+                .iter()
+                .map(|x| x.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            param_shapes.insert(name.clone(), shape);
+        }
+
+        let mut ops = BTreeMap::new();
+        for (name, op) in v.req("ops")?.as_obj().context("ops")? {
+            let file = dir.join(op.req("file")?.as_str().context("file")?);
+            let inputs = op
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = op
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            ops.insert(name.clone(), OpSig { file, inputs, outputs });
+        }
+
+        Ok(Manifest {
+            config,
+            total_params: v.req("total_params")?.as_u64().context("total_params")?,
+            param_shapes,
+            ops,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn op(&self, name: &str) -> Result<&OpSig> {
+        self.ops.get(name).with_context(|| format!("op '{name}' not in manifest"))
+    }
+
+    /// Parameter groups per transformer block, in block_fwd argument order.
+    pub fn block_param_order() -> [&'static str; 6] {
+        ["ln", "wqkv", "wo", "ln", "w1", "w2"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.total_params > 0);
+        assert!(m.ops.contains_key("block_fwd"));
+        assert!(m.ops.contains_key("block_bwd"));
+        assert!(m.ops.contains_key("adam_emb"));
+        let bf = m.op("block_fwd").unwrap();
+        assert_eq!(bf.inputs.len(), 7);
+        assert_eq!(bf.outputs.len(), 1);
+        assert_eq!(
+            bf.inputs[0].shape,
+            vec![m.config.batch, m.config.seq, m.config.d_model]
+        );
+        // HLO artifact files exist.
+        for op in m.ops.values() {
+            assert!(op.file.exists(), "{:?} missing", op.file);
+        }
+    }
+
+    #[test]
+    fn tensor_sig_bytes() {
+        let s = TensorSig { shape: vec![2, 3, 4], dtype: DType::F32 };
+        assert_eq!(s.elements(), 24);
+        assert_eq!(s.bytes(), 96);
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT artifact runtime (the only consumer of the `xla` crate): manifest
+//! parsing + executable loading + literal helpers.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{DType, Manifest, ModelConfig, OpSig, TensorSig};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,219 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once on the CPU
+//! client, and executes them with host literals. This is the only module
+//! that touches the `xla` crate; everything above it speaks in `Literal`s.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{DType, Manifest, TensorSig};
+use crate::util::rng::Rng;
+
+pub struct PjrtRuntime {
+    pub client: PjRtClient,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Load + compile every artifact in the manifest. Compilation happens
+    /// once at startup; the training path only calls `execute`.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, op) in &manifest.ops {
+            let proto = xla::HloModuleProto::from_text_file(
+                op.file.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime { client, executables, manifest })
+    }
+
+    /// Execute op `name` on host literals; outputs are un-tupled
+    /// (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("no executable for op '{name}'"))?;
+        let result = exe.execute::<Literal>(
+            &inputs.iter().map(|l| (*l).clone()).collect::<Vec<_>>(),
+        )?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    pub fn op_names(&self) -> Vec<String> {
+        self.executables.keys().cloned().collect()
+    }
+}
+
+// ------------------------------------------------------ literal utilities
+
+/// Standard-normal f32 literal via Box–Muller on our deterministic RNG.
+pub fn randn_literal(rng: &mut Rng, shape: &[usize], scale: f32) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    while data.len() < n {
+        let u1 = rng.f64().max(1e-12);
+        let u2 = rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        data.push((r * th.cos()) as f32 * scale);
+        if data.len() < n {
+            data.push((r * th.sin()) as f32 * scale);
+        }
+    }
+    reshape(Literal::vec1(&data), shape)
+}
+
+pub fn zeros_literal(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    reshape(Literal::vec1(&vec![0f32; n]), shape)
+}
+
+pub fn ones_literal(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    reshape(Literal::vec1(&vec![1f32; n]), shape)
+}
+
+/// LayerNorm parameter init: gamma=1 row, beta=0 row -> [2, d].
+pub fn ln_literal(d: usize) -> Result<Literal> {
+    let mut data = vec![1f32; d];
+    data.extend(std::iter::repeat(0f32).take(d));
+    reshape(Literal::vec1(&data), &[2, d])
+}
+
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    reshape(Literal::vec1(data), shape)
+}
+
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    reshape(Literal::vec1(data), shape)
+}
+
+fn reshape(l: Literal, shape: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Size in bytes a literal of this signature occupies (device accounting).
+pub fn sig_bytes(sig: &TensorSig) -> u64 {
+    sig.bytes()
+}
+
+/// Scalar-ish read: first element of an f32 literal.
+pub fn first_f32(l: &Literal) -> Result<f32> {
+    Ok(l.to_vec::<f32>()?[0])
+}
+
+/// Build an init literal for a parameter group by name convention.
+pub fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Result<Literal> {
+    if name.starts_with("ln") {
+        ln_literal(shape[1])
+    } else {
+        randn_literal(rng, shape, 0.02)
+    }
+}
+
+pub fn dtype_zeros(sig: &TensorSig) -> Result<Literal> {
+    match sig.dtype {
+        DType::F32 => zeros_literal(&sig.shape),
+        DType::I32 => i32_literal(&vec![0; sig.elements()], &sig.shape),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn literal_round_trips() {
+        let mut rng = Rng::new(1);
+        let l = randn_literal(&mut rng, &[4, 8], 1.0).unwrap();
+        assert_eq!(l.size_bytes(), 4 * 8 * 4);
+        let v = l.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), 32);
+        // Standard normal-ish: values within a sane envelope.
+        assert!(v.iter().all(|x| x.abs() < 6.0));
+    }
+
+    #[test]
+    fn ln_literal_layout() {
+        let l = ln_literal(4).unwrap();
+        let v = l.to_vec::<f32>().unwrap();
+        assert_eq!(v, vec![1., 1., 1., 1., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn loads_and_runs_sgd_artifact() {
+        let Some(rt) = runtime() else { return };
+        let sig = &rt.manifest.op("sgd_wo").unwrap().inputs[0];
+        let p = ones_literal(&sig.shape).unwrap();
+        let g = ones_literal(&sig.shape).unwrap();
+        let out = rt.execute("sgd_wo", &[&p, &g]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        // p - lr*g with lr=0.1 -> 0.9
+        assert!((v[0] - 0.9).abs() < 1e-6, "{}", v[0]);
+    }
+
+    #[test]
+    fn embed_fwd_gathers_rows() {
+        let Some(rt) = runtime() else { return };
+        let cfg = rt.manifest.config;
+        let tokens: Vec<i32> = (0..(cfg.batch * cfg.seq) as i32)
+            .map(|i| i % cfg.vocab as i32)
+            .collect();
+        let tok = i32_literal(&tokens, &[cfg.batch, cfg.seq]).unwrap();
+        // Embedding row v = constant v.
+        let mut emb = Vec::with_capacity(cfg.vocab * cfg.d_model);
+        for v in 0..cfg.vocab {
+            emb.extend(std::iter::repeat(v as f32).take(cfg.d_model));
+        }
+        let emb = f32_literal(&emb, &[cfg.vocab, cfg.d_model]).unwrap();
+        let out = rt.execute("embed_fwd", &[&tok, &emb]).unwrap();
+        let x = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[cfg.d_model], 1.0); // second token -> row 1
+    }
+
+    #[test]
+    fn adam_matches_formula() {
+        let Some(rt) = runtime() else { return };
+        let shape = rt.manifest.op("adam_wo").unwrap().inputs[0].shape.clone();
+        let p = zeros_literal(&shape).unwrap();
+        let g = ones_literal(&shape).unwrap();
+        let m = zeros_literal(&shape).unwrap();
+        let v = zeros_literal(&shape).unwrap();
+        let t = f32_literal(&[1.0], &[1]).unwrap();
+        let out = rt.execute("adam_wo", &[&p, &g, &m, &v, &t]).unwrap();
+        assert_eq!(out.len(), 3);
+        let pv = out[0].to_vec::<f32>().unwrap();
+        // First step with unit grad: p ≈ -lr.
+        assert!((pv[0] + 1e-3).abs() < 1e-5, "{}", pv[0]);
+    }
+}

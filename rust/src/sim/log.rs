@@ -1,0 +1,312 @@
+//! The operation-log format (Appendix C.6).
+//!
+//! The paper instruments PyTorch to emit JSON records of every tensor event;
+//! our workload generators emit the same instruction stream (and the real
+//! PJRT engine can emit measured logs in this format too). Instructions:
+//!
+//! * `CONSTANT(t, size)` — non-rematerializable input/weight;
+//! * `CALL(op, cost, inputs, outputs)` — pure operator call; each output
+//!   declares its size and optional alias target (folding the paper's
+//!   separate `MEMORY`/`ALIAS` records into the output declaration);
+//! * `MUTATE(op, cost, inputs, mutated)` — in-place op, replayed through the
+//!   copy-on-write rewrite;
+//! * `COPY(dst, src)` — new identifier for the same view (refcount++);
+//! * `COPYFROM(dst, src)` — Python rebinding of an existing identifier;
+//! * `RELEASE(t)` — destructor (refcount--).
+
+use crate::util::json::{parse_lines, Json};
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutDecl {
+    pub name: String,
+    pub size: u64,
+    /// Aliases the storage of this *input* identifier if set.
+    pub alias_of: Option<String>,
+}
+
+impl OutDecl {
+    pub fn sized(name: &str, size: u64) -> Self {
+        OutDecl { name: name.to_string(), size, alias_of: None }
+    }
+    pub fn alias(name: &str, of: &str) -> Self {
+        OutDecl { name: name.to_string(), size: 0, alias_of: Some(of.to_string()) }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    Constant { t: String, size: u64 },
+    Call { op: String, cost: u64, inputs: Vec<String>, outputs: Vec<OutDecl> },
+    Mutate { op: String, cost: u64, inputs: Vec<String>, mutated: Vec<String> },
+    Copy { dst: String, src: String },
+    CopyFrom { dst: String, src: String },
+    Release { t: String },
+}
+
+/// A complete single-batch operation log (forward + loss + backward, in the
+/// paper's experiments), plus a model name for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct Log {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+}
+
+impl Log {
+    pub fn new(name: &str) -> Self {
+        Log { name: name.to_string(), instrs: Vec::new() }
+    }
+
+    // ---- builder helpers used by the workload generators ----
+
+    pub fn constant(&mut self, t: &str, size: u64) {
+        self.instrs.push(Instr::Constant { t: t.to_string(), size });
+    }
+
+    /// Single-output pure call.
+    pub fn call1(&mut self, op: &str, cost: u64, inputs: &[&str], out: &str, size: u64) {
+        self.instrs.push(Instr::Call {
+            op: op.to_string(),
+            cost,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs: vec![OutDecl::sized(out, size)],
+        });
+    }
+
+    pub fn call(&mut self, op: &str, cost: u64, inputs: &[&str], outputs: Vec<OutDecl>) {
+        self.instrs.push(Instr::Call {
+            op: op.to_string(),
+            cost,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            outputs,
+        });
+    }
+
+    pub fn mutate(&mut self, op: &str, cost: u64, inputs: &[&str], mutated: &[&str]) {
+        self.instrs.push(Instr::Mutate {
+            op: op.to_string(),
+            cost,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            mutated: mutated.iter().map(|s| s.to_string()).collect(),
+        });
+    }
+
+    pub fn release(&mut self, t: &str) {
+        self.instrs.push(Instr::Release { t: t.to_string() });
+    }
+
+    pub fn copy(&mut self, dst: &str, src: &str) {
+        self.instrs.push(Instr::Copy { dst: dst.to_string(), src: src.to_string() });
+    }
+
+    pub fn copy_from(&mut self, dst: &str, src: &str) {
+        self.instrs.push(Instr::CopyFrom { dst: dst.to_string(), src: src.to_string() });
+    }
+
+    // ---- JSON (de)serialization: one record per line ----
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &Json::from_pairs(vec![("kind", "header".into()), ("name", self.name.as_str().into())])
+                .to_string(),
+        );
+        out.push('\n');
+        for ins in &self.instrs {
+            out.push_str(&instr_to_json(ins).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Log> {
+        let values = parse_lines(text).context("parsing log jsonl")?;
+        let mut log = Log::default();
+        for v in values {
+            let kind = v.req("kind")?.as_str().unwrap_or_default().to_string();
+            if kind == "header" {
+                log.name = v.req("name")?.as_str().unwrap_or_default().to_string();
+                continue;
+            }
+            log.instrs.push(instr_from_json(&kind, &v)?);
+        }
+        Ok(log)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_jsonl())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Log> {
+        Log::from_jsonl(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn strs(xs: &[String]) -> Json {
+    Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+}
+
+fn instr_to_json(ins: &Instr) -> Json {
+    match ins {
+        Instr::Constant { t, size } => Json::from_pairs(vec![
+            ("kind", "constant".into()),
+            ("t", t.as_str().into()),
+            ("size", (*size).into()),
+        ]),
+        Instr::Call { op, cost, inputs, outputs } => {
+            let outs = Json::Arr(
+                outputs
+                    .iter()
+                    .map(|o| {
+                        let mut j = Json::from_pairs(vec![
+                            ("t", o.name.as_str().into()),
+                            ("size", o.size.into()),
+                        ]);
+                        if let Some(a) = &o.alias_of {
+                            j.set("alias", a.as_str().into());
+                        }
+                        j
+                    })
+                    .collect(),
+            );
+            Json::from_pairs(vec![
+                ("kind", "call".into()),
+                ("op", op.as_str().into()),
+                ("cost", (*cost).into()),
+                ("inputs", strs(inputs)),
+                ("outputs", outs),
+            ])
+        }
+        Instr::Mutate { op, cost, inputs, mutated } => Json::from_pairs(vec![
+            ("kind", "mutate".into()),
+            ("op", op.as_str().into()),
+            ("cost", (*cost).into()),
+            ("inputs", strs(inputs)),
+            ("mutated", strs(mutated)),
+        ]),
+        Instr::Copy { dst, src } => Json::from_pairs(vec![
+            ("kind", "copy".into()),
+            ("dst", dst.as_str().into()),
+            ("src", src.as_str().into()),
+        ]),
+        Instr::CopyFrom { dst, src } => Json::from_pairs(vec![
+            ("kind", "copyfrom".into()),
+            ("dst", dst.as_str().into()),
+            ("src", src.as_str().into()),
+        ]),
+        Instr::Release { t } => Json::from_pairs(vec![
+            ("kind", "release".into()),
+            ("t", t.as_str().into()),
+        ]),
+    }
+}
+
+fn req_str(v: &Json, k: &str) -> Result<String> {
+    Ok(v.req(k)?.as_str().context("expected string")?.to_string())
+}
+
+fn req_strs(v: &Json, k: &str) -> Result<Vec<String>> {
+    v.req(k)?
+        .as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|x| Ok(x.as_str().context("expected string")?.to_string()))
+        .collect()
+}
+
+fn instr_from_json(kind: &str, v: &Json) -> Result<Instr> {
+    Ok(match kind {
+        "constant" => Instr::Constant {
+            t: req_str(v, "t")?,
+            size: v.req("size")?.as_u64().context("size")?,
+        },
+        "call" => {
+            let outputs = v
+                .req("outputs")?
+                .as_arr()
+                .context("outputs array")?
+                .iter()
+                .map(|o| {
+                    Ok(OutDecl {
+                        name: req_str(o, "t")?,
+                        size: o.req("size")?.as_u64().context("size")?,
+                        alias_of: o.get("alias").and_then(|a| a.as_str()).map(|s| s.to_string()),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Instr::Call {
+                op: req_str(v, "op")?,
+                cost: v.req("cost")?.as_u64().context("cost")?,
+                inputs: req_strs(v, "inputs")?,
+                outputs,
+            }
+        }
+        "mutate" => Instr::Mutate {
+            op: req_str(v, "op")?,
+            cost: v.req("cost")?.as_u64().context("cost")?,
+            inputs: req_strs(v, "inputs")?,
+            mutated: req_strs(v, "mutated")?,
+        },
+        "copy" => Instr::Copy { dst: req_str(v, "dst")?, src: req_str(v, "src")? },
+        "copyfrom" => Instr::CopyFrom { dst: req_str(v, "dst")?, src: req_str(v, "src")? },
+        "release" => Instr::Release { t: req_str(v, "t")? },
+        other => bail!("unknown log instruction kind: {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_log() -> Log {
+        let mut log = Log::new("sample");
+        log.constant("w", 64);
+        log.constant("x", 32);
+        log.call1("mul", 100, &["x", "w"], "y", 32);
+        log.call(
+            "split",
+            10,
+            &["y"],
+            vec![OutDecl::sized("a", 16), OutDecl::sized("b", 16), OutDecl::alias("v", "y")],
+        );
+        log.mutate("add_", 5, &["a", "b"], &["a"]);
+        log.copy("a2", "a");
+        log.copy_from("b", "a");
+        log.release("y");
+        log
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let log = sample_log();
+        let text = log.to_jsonl();
+        let back = Log::from_jsonl(&text).unwrap();
+        assert_eq!(back.name, "sample");
+        assert_eq!(back.instrs, log.instrs);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let log = sample_log();
+        let path = std::env::temp_dir().join("dtr_log_test").join("l.jsonl");
+        log.save(&path).unwrap();
+        let back = Log::load(&path).unwrap();
+        assert_eq!(back.instrs, log.instrs);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        assert!(Log::from_jsonl("{\"kind\":\"bogus\"}").is_err());
+    }
+
+    #[test]
+    fn alias_declared_in_outputs() {
+        let log = sample_log();
+        let text = log.to_jsonl();
+        assert!(text.contains("\"alias\":\"y\""));
+    }
+}

@@ -1,0 +1,8 @@
+//! The Appendix-C simulator: operation-log format + replayer over the DTR
+//! runtime with pure cost accounting.
+
+pub mod log;
+pub mod replay;
+
+pub use log::{Instr, Log, OutDecl};
+pub use replay::{baseline, simulate, Baseline, Replayer, SimOutcome};

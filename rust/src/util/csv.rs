@@ -1,0 +1,70 @@
+//! Tiny CSV writer used by every figure harness: rows print both to stdout
+//! (so `dtr-repro figN` shows the paper's series directly) and to an output
+//! file for plotting.
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvOut {
+    file: Option<std::fs::File>,
+    echo: bool,
+}
+
+impl CsvOut {
+    /// `path = None` prints to stdout only.
+    pub fn create(path: Option<&Path>, echo: bool) -> anyhow::Result<Self> {
+        let file = match path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                Some(std::fs::File::create(p)?)
+            }
+            None => None,
+        };
+        Ok(CsvOut { file, echo })
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> anyhow::Result<()> {
+        let line = cells.iter().map(|c| c.as_ref()).collect::<Vec<_>>().join(",");
+        if self.echo {
+            println!("{line}");
+        }
+        if let Some(f) = &mut self.file {
+            writeln!(f, "{line}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Format a float with enough digits for plotting but stable output.
+pub fn f(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{:.4}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let dir = std::env::temp_dir().join("dtr_csv_test");
+        let path = dir.join("x.csv");
+        let mut out = CsvOut::create(Some(&path), false).unwrap();
+        out.row(&["a", "b"]).unwrap();
+        out.row(&[f(1.0), f(2.5)]).unwrap();
+        drop(out);
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(s, "a,b\n1,2.5000\n");
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(3.0), "3");
+        assert_eq!(f(0.12345), "0.1235");
+    }
+}

@@ -1,0 +1,8 @@
+//! Dependency-free support utilities (the offline crate cache has no serde /
+//! rand / proptest / criterion — see DESIGN.md §6).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod miniprop;
+pub mod rng;

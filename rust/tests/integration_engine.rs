@@ -1,0 +1,115 @@
+//! Integration: the real three-layer stack. Requires `make artifacts`
+//! (tests self-skip when artifacts are absent so `cargo test` works
+//! pre-build, but `make test` always builds them first).
+
+use std::path::PathBuf;
+
+use dtr::coordinator::{train, TrainConfig};
+use dtr::dtr as dtr_core;
+use dtr::dtr::Heuristic;
+use dtr::exec::{Engine, Optimizer};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn trainer_end_to_end_under_budget() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = TrainConfig {
+        artifacts_dir: artifacts_dir(),
+        steps: 6,
+        budget_ratio: Some(0.7),
+        heuristic: Heuristic::dtr_eq(),
+        optimizer: Optimizer::Sgd,
+        log_every: 100,
+        curve_out: None,
+        ..TrainConfig::default()
+    };
+    let report = train(&cfg).unwrap();
+    assert_eq!(report.losses.len(), 6);
+    assert!(report.peak_budgeted <= report.budget, "budget violated");
+    assert!(
+        report.losses.last().unwrap() < report.losses.first().unwrap(),
+        "loss must descend: {:?}",
+        report.losses
+    );
+}
+
+#[test]
+fn heuristics_agree_numerically_on_real_training() {
+    if !have_artifacts() {
+        return;
+    }
+    // Different eviction heuristics change *what* is rematerialized but can
+    // never change the numbers (pure ops, exact replay).
+    let run = |h: Heuristic| -> Vec<f32> {
+        let mut e = Engine::new(&artifacts_dir(), dtr_core::Config::default(), Optimizer::Sgd).unwrap();
+        let peak = e.measure_peak().unwrap();
+        e.dtr_cfg = dtr_core::Config { budget: peak * 3 / 4, heuristic: h, ..dtr_core::Config::default() };
+        (0..2).map(|_| e.train_step().unwrap().loss).collect()
+    };
+    let a = run(Heuristic::dtr_eq());
+    let b = run(Heuristic::lru());
+    assert_eq!(a, b, "heuristic changed numerics");
+}
+
+#[test]
+fn engine_reports_remats_under_pressure_but_not_at_full_memory() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut e = Engine::new(&artifacts_dir(), dtr_core::Config::default(), Optimizer::Sgd).unwrap();
+    let full = e.train_step().unwrap();
+    assert_eq!(full.stats.remat_count, 0);
+    let peak = e.measure_peak().unwrap();
+    e.dtr_cfg = dtr_core::Config {
+        budget: peak * 7 / 10,
+        heuristic: Heuristic::dtr_eq(),
+        ..dtr_core::Config::default()
+    };
+    let tight = e.train_step().unwrap();
+    assert!(tight.stats.evict_count > 0);
+    assert!(tight.stats.peak_memory <= peak * 7 / 10);
+}
+
+#[test]
+fn profile_mode_accounts_eviction_time() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut e = Engine::new(
+        &artifacts_dir(),
+        dtr_core::Config { profile: true, ..dtr_core::Config::default() },
+        Optimizer::Sgd,
+    )
+    .unwrap();
+    let peak = e.measure_peak().unwrap();
+    e.dtr_cfg = dtr_core::Config {
+        budget: peak * 7 / 10,
+        heuristic: Heuristic::dtr_eq(),
+        profile: true,
+        ..dtr_core::Config::default()
+    };
+    let r = e.train_step().unwrap();
+    assert!(r.stats.eviction_searches > 0);
+    assert!(r.stats.eviction_loop_ns > 0, "profiling must record search time");
+    assert!(r.stats.cost_compute_ns <= r.stats.eviction_loop_ns);
+    // DTR bookkeeping must be a small fraction of operator time here.
+    assert!(
+        r.stats.eviction_loop_ns < r.exec_ns,
+        "eviction loop ({}) dominated compute ({})",
+        r.stats.eviction_loop_ns,
+        r.exec_ns
+    );
+}

@@ -1,0 +1,146 @@
+//! Integration: workload generators -> JSONL logs -> simulator -> figures,
+//! exercising the full simulation pipeline across modules.
+
+use dtr::dtr::{Config, DeallocPolicy, Heuristic};
+use dtr::graphs::models::{by_name, ALL_MODELS};
+use dtr::sim::log::Log;
+use dtr::sim::replay::{baseline, simulate};
+
+#[test]
+fn logs_roundtrip_through_jsonl_and_simulate_identically() {
+    for model in ["resnet", "treelstm", "unrolled_gan"] {
+        let log = by_name(model, 1).unwrap();
+        let text = log.to_jsonl();
+        let back = Log::from_jsonl(&text).unwrap();
+        let b = baseline(&log);
+        let cfg = Config { budget: b.budget_at(0.5), ..Config::default() };
+        let a = simulate(&log, cfg.clone());
+        let bb = simulate(&back, cfg);
+        assert!(a.ok() && bb.ok());
+        assert_eq!(a.stats.total_compute(), bb.stats.total_compute(), "{model}");
+        assert_eq!(a.stats.remat_count, bb.stats.remat_count, "{model}");
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let log = by_name("lstm", 1).unwrap();
+    let b = baseline(&log);
+    let cfg = Config { budget: b.budget_at(0.4), heuristic: Heuristic::dtr(), ..Config::default() };
+    let x = simulate(&log, cfg.clone());
+    let y = simulate(&log, cfg);
+    assert_eq!(x.stats.total_compute(), y.stats.total_compute());
+    assert_eq!(x.stats.evict_count, y.stats.evict_count);
+    assert_eq!(x.stats.metadata_accesses, y.stats.metadata_accesses);
+}
+
+#[test]
+fn slowdown_monotone_in_budget_roughly() {
+    // More memory should never make things *much* worse (greedy heuristics
+    // are not strictly monotone, but the trend must hold).
+    let log = by_name("mlp", 1).unwrap();
+    let b = baseline(&log);
+    let mut prev = f64::INFINITY;
+    for ratio in [0.3, 0.5, 0.7, 0.9, 1.0] {
+        let out = simulate(
+            &log,
+            Config { budget: b.budget_at(ratio), heuristic: Heuristic::dtr_eq(), ..Config::default() },
+        );
+        assert!(out.ok(), "ratio {ratio}: {:?}", out.failed);
+        let s = out.stats.slowdown();
+        assert!(s <= prev * 1.25 + 0.05, "slowdown jumped at ratio {ratio}: {s} vs {prev}");
+        prev = s.min(prev);
+    }
+}
+
+#[test]
+fn full_budget_means_no_remat() {
+    for model in ALL_MODELS {
+        let log = by_name(model, 1).unwrap();
+        let b = baseline(&log);
+        let out = simulate(&log, Config { budget: b.peak_memory, ..Config::default() });
+        assert!(out.ok(), "{model}: {:?}", out.failed);
+        assert_eq!(out.stats.remat_count, 0, "{model} rematerialized at full budget");
+        assert_eq!(out.stats.total_compute(), b.total_compute, "{model}");
+    }
+}
+
+#[test]
+fn informed_heuristics_dominate_random_on_average() {
+    // Aggregate Fig. 2 claim across models at a moderate budget.
+    let mut eq_total = 0.0;
+    let mut rand_total = 0.0;
+    for model in ["mlp", "resnet", "lstm", "densenet"] {
+        let log = by_name(model, 1).unwrap();
+        let b = baseline(&log);
+        let budget = b.budget_at(0.35);
+        let run = |h: Heuristic| {
+            let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+            o.ok().then(|| o.stats.slowdown()).unwrap_or(10.0)
+        };
+        eq_total += run(Heuristic::dtr_eq());
+        rand_total += run(Heuristic::Random);
+    }
+    assert!(
+        eq_total <= rand_total,
+        "h_dtr_eq total {eq_total} worse than h_rand {rand_total}"
+    );
+}
+
+#[test]
+fn policies_all_complete_at_moderate_budget() {
+    let log = by_name("resnet", 1).unwrap();
+    let b = baseline(&log);
+    for policy in DeallocPolicy::all() {
+        let out = simulate(
+            &log,
+            Config {
+                budget: b.budget_at(0.6),
+                heuristic: Heuristic::dtr(),
+                policy,
+                ..Config::default()
+            },
+        );
+        assert!(out.ok(), "{}: {:?}", policy.name(), out.failed);
+    }
+}
+
+#[test]
+fn dealloc_awareness_beats_ignoring() {
+    // Appendix D.2: eager eviction / banishing beat ignoring deallocations.
+    let log = by_name("mlp", 1).unwrap();
+    let b = baseline(&log);
+    // `ignore` keeps dead tensors around, raising pressure: compare at the
+    // same absolute budget (relative to the eager-policy peak).
+    let budget = b.budget_at(0.45);
+    let run = |policy: DeallocPolicy| {
+        let o = simulate(
+            &log,
+            Config { budget, heuristic: Heuristic::dtr(), policy, ..Config::default() },
+        );
+        o.ok().then(|| o.stats.total_compute()).unwrap_or(u64::MAX)
+    };
+    let eager = run(DeallocPolicy::EagerEvict);
+    let ignore = run(DeallocPolicy::Ignore);
+    assert!(eager <= ignore, "eager {eager} worse than ignore {ignore}");
+}
+
+#[test]
+fn sqrt_sampling_approximation_stays_close() {
+    // Appendix E.2: the √n sampling optimization must not blow up overhead
+    // at moderate budgets.
+    let log = by_name("resnet", 1).unwrap();
+    let b = baseline(&log);
+    let budget = b.budget_at(0.5);
+    let full = simulate(
+        &log,
+        Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() },
+    );
+    let sampled = simulate(
+        &log,
+        Config { budget, heuristic: Heuristic::dtr_eq(), sqrt_sample: true, ..Config::default() },
+    );
+    assert!(full.ok() && sampled.ok());
+    let (f, s) = (full.stats.slowdown(), sampled.stats.slowdown());
+    assert!(s <= f * 2.0 + 0.2, "sampling degraded too much: {s} vs {f}");
+}

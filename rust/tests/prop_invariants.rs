@@ -1,0 +1,179 @@
+//! Property tests (DESIGN.md §7): random training-shaped DAGs replayed
+//! under random budgets and every heuristic/policy must preserve the DTR
+//! invariants — budget safety, lock hygiene, output condition, determinism,
+//! and accounting consistency. Uses the in-tree miniprop harness (proptest
+//! is not in the offline crate cache).
+
+use dtr::dtr::{Config, DeallocPolicy, Heuristic};
+use dtr::graphs::tape::{R, Tape};
+use dtr::sim::log::Log;
+use dtr::sim::replay::{baseline, simulate};
+use dtr::util::miniprop::check;
+use dtr::util::rng::Rng;
+
+/// Random layered training DAG via the Tape (fan-out, weights, releases).
+fn random_model(rng: &mut Rng, size: usize) -> Log {
+    let mut t = Tape::new("prop");
+    let x = t.data("x", 64 + rng.below(512));
+    let mut frontier: Vec<R> = vec![x];
+    let mut nodes = 0usize;
+    while nodes < size {
+        let k = 1 + rng.index(2.min(frontier.len()));
+        let mut inputs: Vec<R> = (0..k).map(|_| *rng.choose(&frontier)).collect();
+        if rng.chance(0.5) {
+            let w = t.weight(&format!("w{nodes}"), 16 + rng.below(128));
+            inputs.push(w);
+        }
+        let out = t.op(
+            &format!("op{nodes}"),
+            1 + rng.below(50),
+            &inputs,
+            32 + rng.below(1024),
+        );
+        frontier.push(out);
+        if frontier.len() > 4 {
+            frontier.remove(0);
+        }
+        nodes += 1;
+    }
+    let last = *frontier.last().unwrap();
+    let loss = t.op("loss", 1, &[last], 8);
+    t.finish(loss)
+}
+
+#[test]
+fn prop_budget_safety_and_invariants_all_heuristics() {
+    check("budget_safety", 60, 5, 40, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let h = *rng.choose(&Heuristic::fig2_set());
+        let ratio = 0.3 + rng.f64() * 0.7;
+        let budget = b.budget_at(ratio);
+        let out = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+        if let Some(fail) = &out.failed {
+            // OOM is legal at low ratios; anything else is a bug.
+            if fail.contains("out of memory") {
+                return Ok(());
+            }
+            return Err(format!("{} at ratio {ratio:.2}: {fail}", h.name()));
+        }
+        if out.stats.peak_memory > budget {
+            return Err(format!(
+                "{}: peak {} exceeded budget {budget}",
+                h.name(),
+                out.stats.peak_memory
+            ));
+        }
+        if out.stats.total_compute() < b.total_compute {
+            return Err("computed less than the baseline?!".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_policies_sound() {
+    check("policy_soundness", 45, 5, 30, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let policy = *rng.choose(&DeallocPolicy::all());
+        let budget = b.budget_at(0.5 + rng.f64() * 0.5);
+        let out = simulate(
+            &log,
+            Config { budget, heuristic: Heuristic::dtr(), policy, ..Config::default() },
+        );
+        if let Some(fail) = &out.failed {
+            if fail.contains("out of memory") {
+                return Ok(());
+            }
+            return Err(format!("{}: {fail}", policy.name()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism() {
+    check("determinism", 25, 5, 30, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let cfg = Config {
+            budget: b.budget_at(0.45),
+            heuristic: Heuristic::dtr_eq(),
+            ..Config::default()
+        };
+        let x = simulate(&log, cfg.clone());
+        let y = simulate(&log, cfg);
+        if x.stats.total_compute() != y.stats.total_compute()
+            || x.stats.evict_count != y.stats.evict_count
+        {
+            return Err("two identical runs diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unbudgeted_equals_baseline_compute() {
+    check("unbudgeted_baseline", 30, 5, 40, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let out = simulate(&log, Config::default());
+        if !out.ok() {
+            return Err(format!("unbudgeted failed: {:?}", out.failed));
+        }
+        if out.stats.total_compute() != b.total_compute {
+            return Err("unbudgeted run recomputed something".into());
+        }
+        if out.stats.remat_count != 0 {
+            return Err("unbudgeted run rematerialized".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_jsonl_roundtrip_preserves_simulation() {
+    check("jsonl_roundtrip", 25, 5, 25, |rng, size| {
+        let log = random_model(rng, size);
+        let back = Log::from_jsonl(&log.to_jsonl()).map_err(|e| e.to_string())?;
+        let b = baseline(&log);
+        let cfg = Config { budget: b.budget_at(0.5), ..Config::default() };
+        let x = simulate(&log, cfg.clone());
+        let y = simulate(&back, cfg);
+        if x.ok() != y.ok() {
+            return Err("roundtrip changed feasibility".into());
+        }
+        if x.ok() && x.stats.total_compute() != y.stats.total_compute() {
+            return Err("roundtrip changed compute".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lower_budget_never_lowers_compute() {
+    check("budget_monotone_compute", 30, 8, 30, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let tight = simulate(
+            &log,
+            Config { budget: b.budget_at(0.4), heuristic: Heuristic::dtr_eq(), ..Config::default() },
+        );
+        let loose = simulate(
+            &log,
+            Config { budget: b.budget_at(0.9), heuristic: Heuristic::dtr_eq(), ..Config::default() },
+        );
+        if !tight.ok() || !loose.ok() {
+            return Ok(()); // OOM cases covered elsewhere
+        }
+        if tight.stats.total_compute() < loose.stats.total_compute() {
+            return Err(format!(
+                "tighter budget computed less: {} < {}",
+                tight.stats.total_compute(),
+                loose.stats.total_compute()
+            ));
+        }
+        Ok(())
+    });
+}
