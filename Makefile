@@ -1,0 +1,34 @@
+# Dynamic Tensor Rematerialization reproduction — top-level targets.
+#
+# `make verify` is the tier-1 gate (hermetic: no network, no Python, no
+# artifacts needed — the engine runs on the pure-Rust interpreter backend).
+
+.PHONY: verify build test bench fmt e2e artifacts clean
+
+verify:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+fmt:
+	cargo fmt --check
+
+# Hermetic end-to-end training run (interpreter backend).
+e2e:
+	cargo run --release --example train_transformer -- --steps 100
+
+# AOT-lower the JAX+Pallas ops to HLO artifacts for the optional PJRT
+# backend (requires JAX; see python/compile/aot.py for dimension flags).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+clean:
+	cargo clean
+	rm -rf results

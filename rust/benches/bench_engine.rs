@@ -1,38 +1,40 @@
 //! Real-engine benchmarks (Table 1 / Fig. 4 end-to-end): per-step wall time
 //! of the transformer training step at several budgets, with the DTR
-//! runtime-overhead fraction. Requires `make artifacts`; prints a notice
-//! and exits cleanly when they are absent (so `cargo bench` works anywhere).
+//! runtime-overhead fraction. Hermetic: runs on the pure-Rust interpreter
+//! executor, so `cargo bench` works anywhere with zero external deps.
 
-use std::path::PathBuf;
 use std::time::Instant;
 
 use dtr::dtr::{Config, Heuristic};
 use dtr::exec::{Engine, Optimizer};
+use dtr::runtime::ModelConfig;
 
 fn main() {
-    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        println!("# bench_engine: artifacts not built (run `make artifacts`); skipping");
-        return;
-    }
-    println!("# bench_engine — real training step under DTR budgets\n");
+    println!("# bench_engine — real training step under DTR budgets (interp backend)\n");
 
-    let mut engine = Engine::new(
-        &artifacts,
+    let model = ModelConfig::small();
+    let mut engine = Engine::interp(
+        model,
         Config { profile: true, ..Config::default() },
         Optimizer::Sgd,
     )
     .expect("engine");
     let peak = engine.measure_peak().expect("peak");
+    let pinned = engine.pinned_bytes();
     println!(
-        "model: {} params; unbudgeted peak {:.1} MiB\n",
+        "model: {} params; unbudgeted peak {:.1} MiB ({:.1} MiB pinned)\n",
         engine.total_params(),
-        peak as f64 / (1 << 20) as f64
+        peak as f64 / (1 << 20) as f64,
+        pinned as f64 / (1 << 20) as f64,
     );
 
-    for ratio in [1.0f64, 0.9, 0.8, 0.7] {
+    // Sweep fractions of the non-pinned headroom (100% = never evicts under
+    // pressure; lower = more rematerialization).
+    let pcts = [100u64, 90, 80, 70, 60];
+    let budgets = engine.budgets_from_peak(peak, &pcts);
+    for (&pct, &budget) in pcts.iter().zip(&budgets) {
         engine.dtr_cfg = Config {
-            budget: (peak as f64 * ratio) as u64,
+            budget,
             heuristic: Heuristic::dtr_eq(),
             profile: true,
             ..Config::default()
@@ -57,15 +59,15 @@ fn main() {
                 }
             }
         }
-        if failed {
-            println!("budget {ratio:>4.1}x  OOM");
+        if failed || walls.is_empty() {
+            println!("headroom {pct:>3}%  OOM");
             continue;
         }
         walls.sort();
         let median = walls[walls.len() / 2];
         let ov: u64 = overhead.iter().sum::<u64>() / overhead.len() as u64;
         println!(
-            "budget {ratio:>4.1}x  step {:>8.1} ms  eviction-loop {:>8.3} ms ({:.2}%)  remats/step {:.1}",
+            "headroom {pct:>3}%  step {:>8.2} ms  eviction-loop {:>8.3} ms ({:.2}%)  remats/step {:.1}",
             median as f64 / 1e6,
             ov as f64 / 1e6,
             100.0 * ov as f64 / median as f64,

@@ -1,4 +1,5 @@
-//! Training configuration: JSON file + CLI-flag overrides.
+//! Training configuration: JSON file + CLI-flag overrides, plus executor
+//! construction (the coordinator-level end of the backend seam).
 
 use std::path::{Path, PathBuf};
 
@@ -6,14 +7,22 @@ use anyhow::{Context, Result};
 
 use crate::dtr::{DeallocPolicy, Heuristic};
 use crate::exec::Optimizer;
+use crate::runtime::{BackendKind, Executor, InterpExecutor, ModelConfig};
 use crate::util::cli::Args;
 use crate::util::json::parse;
 
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Which executor to construct (interp is hermetic; pjrt needs the
+    /// `pjrt` cargo feature and compiled artifacts).
+    pub backend: BackendKind,
+    /// Model dimensions for the interpreter backend (the pjrt backend reads
+    /// dimensions from the artifact manifest instead).
+    pub model: ModelConfig,
     pub artifacts_dir: PathBuf,
     pub steps: usize,
-    /// Memory budget as a fraction of the measured unbudgeted peak;
+    /// Memory budget as a fraction of the non-pinned headroom between the
+    /// pinned-constant floor and the measured unbudgeted peak (1.0 = peak);
     /// `None` = unlimited.
     pub budget_ratio: Option<f64>,
     pub heuristic: Heuristic,
@@ -29,14 +38,20 @@ pub struct TrainConfig {
 impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
+            backend: BackendKind::Interp,
+            model: ModelConfig::small(),
             artifacts_dir: PathBuf::from("artifacts"),
             steps: 50,
-            budget_ratio: Some(0.65),
+            // Headroom fraction (see Engine::budgets_from_peak): the
+            // largest single-op working set (block_bwd's 7 outputs) puts
+            // the feasibility floor near 0.6 of the headroom; 0.9 evicts
+            // and rematerializes while staying comfortably feasible.
+            budget_ratio: Some(0.9),
             heuristic: Heuristic::dtr_eq(),
             policy: DeallocPolicy::EagerEvict,
             // SGD by default: Adam's m/v state triples the pinned constant
-            // footprint, which dominates small models and raises the
-            // feasible-budget floor to ~0.8 of peak (see EXPERIMENTS.md).
+            // footprint, which dominates small models and shrinks the
+            // evictable headroom the budget ladder sweeps.
             optimizer: Optimizer::Sgd,
             sqrt_sample: false,
             small_filter: false,
@@ -46,7 +61,28 @@ impl Default for TrainConfig {
     }
 }
 
+#[cfg(feature = "pjrt")]
+fn build_pjrt(dir: &Path) -> Result<Box<dyn Executor>> {
+    Ok(Box::new(crate::runtime::pjrt::PjrtExecutor::load(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(_dir: &Path) -> Result<Box<dyn Executor>> {
+    anyhow::bail!(
+        "backend 'pjrt' requires building with `--features pjrt` \
+         (and the real xla crate; see rust/Cargo.toml)"
+    )
+}
+
 impl TrainConfig {
+    /// Construct the executor this config selects.
+    pub fn build_executor(&self) -> Result<Box<dyn Executor>> {
+        match self.backend {
+            BackendKind::Interp => Ok(Box::new(InterpExecutor::new(self.model)?)),
+            BackendKind::Pjrt => build_pjrt(&self.artifacts_dir),
+        }
+    }
+
     /// Load from a JSON file; unknown keys are rejected to catch typos.
     pub fn from_file(path: &Path) -> Result<TrainConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
@@ -55,6 +91,27 @@ impl TrainConfig {
         let obj = v.as_obj().context("config must be a JSON object")?;
         for (key, val) in obj {
             match key.as_str() {
+                "backend" => {
+                    let name = val.as_str().context("backend")?;
+                    cfg.backend = BackendKind::parse(name)
+                        .with_context(|| format!("unknown backend {name}"))?;
+                }
+                "model" => {
+                    let m = val.as_obj().context("model must be a JSON object")?;
+                    for (mk, mv) in m {
+                        let dim = mv.as_usize().with_context(|| format!("model.{mk}"))?;
+                        match mk.as_str() {
+                            "vocab" => cfg.model.vocab = dim,
+                            "d_model" => cfg.model.d_model = dim,
+                            "n_heads" => cfg.model.n_heads = dim,
+                            "d_ff" => cfg.model.d_ff = dim,
+                            "seq" => cfg.model.seq = dim,
+                            "batch" => cfg.model.batch = dim,
+                            "n_layers" => cfg.model.n_layers = dim,
+                            other => anyhow::bail!("unknown model key '{other}'"),
+                        }
+                    }
+                }
                 "artifacts_dir" => {
                     cfg.artifacts_dir = PathBuf::from(val.as_str().context("artifacts_dir")?)
                 }
@@ -89,14 +146,27 @@ impl TrainConfig {
                 other => anyhow::bail!("unknown config key '{other}'"),
             }
         }
+        cfg.model.validate()?;
         Ok(cfg)
     }
 
     /// Apply CLI overrides on top (flags win over file).
     pub fn apply_args(mut self, args: &Args) -> Result<TrainConfig> {
+        if let Some(b) = args.get("backend") {
+            self.backend =
+                BackendKind::parse(b).with_context(|| format!("unknown backend {b}"))?;
+        }
         if let Some(d) = args.get("artifacts") {
             self.artifacts_dir = PathBuf::from(d);
         }
+        self.model.vocab = args.usize_or("vocab", self.model.vocab);
+        self.model.d_model = args.usize_or("d-model", self.model.d_model);
+        self.model.n_heads = args.usize_or("n-heads", self.model.n_heads);
+        self.model.d_ff = args.usize_or("d-ff", self.model.d_ff);
+        self.model.seq = args.usize_or("seq", self.model.seq);
+        self.model.batch = args.usize_or("batch", self.model.batch);
+        self.model.n_layers = args.usize_or("layers", self.model.n_layers);
+        self.model.validate()?;
         self.steps = args.usize_or("steps", self.steps);
         if let Some(r) = args.get("budget-ratio") {
             let r: f64 = r.parse().context("budget-ratio")?;
@@ -153,15 +223,20 @@ mod tests {
     #[test]
     fn defaults_sane() {
         let c = TrainConfig::default();
-        assert_eq!(c.budget_ratio, Some(0.65));
+        assert_eq!(c.budget_ratio, Some(0.9));
         assert_eq!(c.heuristic, Heuristic::dtr_eq());
+        assert_eq!(c.backend, BackendKind::Interp);
+        assert!(c.model.validate().is_ok());
     }
 
     #[test]
     fn parses_file() {
         let p = write_tmp(
             r#"{"steps": 7, "budget_ratio": 0.4, "heuristic": "h_lru",
-                "policy": "banish", "optimizer": "sgd", "log_every": 2}"#,
+                "policy": "banish", "optimizer": "sgd", "log_every": 2,
+                "backend": "interp",
+                "model": {"vocab": 32, "d_model": 16, "n_heads": 2,
+                          "d_ff": 32, "seq": 8, "batch": 2, "n_layers": 1}}"#,
         );
         let c = TrainConfig::from_file(&p).unwrap();
         assert_eq!(c.steps, 7);
@@ -169,11 +244,21 @@ mod tests {
         assert_eq!(c.heuristic, Heuristic::lru());
         assert_eq!(c.policy, DeallocPolicy::Banish);
         assert_eq!(c.optimizer, Optimizer::Sgd);
+        assert_eq!(c.model.vocab, 32);
+        assert_eq!(c.model.n_layers, 1);
     }
 
     #[test]
     fn rejects_unknown_keys() {
         let p = write_tmp(r#"{"stepz": 7}"#);
+        assert!(TrainConfig::from_file(&p).is_err());
+        let p2 = write_tmp(r#"{"model": {"wocab": 9}}"#);
+        assert!(TrainConfig::from_file(&p2).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_model_dims() {
+        let p = write_tmp(r#"{"model": {"d_model": 30, "n_heads": 4}}"#);
         assert!(TrainConfig::from_file(&p).is_err());
     }
 
@@ -188,12 +273,15 @@ mod tests {
                 "99".to_string(),
                 "--heuristic".to_string(),
                 "h_dtr".to_string(),
+                "--layers".to_string(),
+                "3".to_string(),
             ]
             .into_iter(),
         );
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.steps, 99);
         assert_eq!(c.heuristic, Heuristic::dtr());
+        assert_eq!(c.model.n_layers, 3);
     }
 
     #[test]
@@ -201,5 +289,21 @@ mod tests {
         let args = crate::util::cli::Args::parse(vec!["--no-budget".to_string()].into_iter());
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.budget_ratio, None);
+    }
+
+    #[test]
+    fn interp_executor_builds_without_artifacts() {
+        let c = TrainConfig::default();
+        let exec = c.build_executor().unwrap();
+        assert_eq!(exec.name(), "interp");
+        assert_eq!(exec.manifest().config, c.model);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let c = TrainConfig { backend: BackendKind::Pjrt, ..TrainConfig::default() };
+        let err = c.build_executor().unwrap_err();
+        assert!(format!("{err:#}").contains("--features pjrt"));
     }
 }

@@ -48,10 +48,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         profile: true,
         ..dtr::Config::default()
     };
-    let mut engine = Engine::new(&cfg.artifacts_dir, dtr_cfg.clone(), cfg.optimizer)?;
+    let mut engine = Engine::new(cfg.build_executor()?, dtr_cfg.clone(), cfg.optimizer)?;
     let mcfg = engine.cfg;
     println!(
-        "model: {} params, {} layers, d_model={}, seq={}, batch={}",
+        "backend: {} | model: {} params, {} layers, d_model={}, seq={}, batch={}",
+        engine.backend_name(),
         engine.total_params(),
         mcfg.n_layers,
         mcfg.d_model,
@@ -59,23 +60,28 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         mcfg.batch
     );
 
-    // Resolve the budget from the measured unbudgeted peak.
+    // Resolve the budget from the measured unbudgeted peak. The ratio is a
+    // fraction of the non-pinned headroom above the pinned-constant floor
+    // (params + optimizer state + batch): raw-peak ratios would sit below
+    // the feasibility floor on small models where pinned constants
+    // dominate.
     let peak = engine.measure_peak()?;
     let budget = match cfg.budget_ratio {
-        Some(r) => ((peak as f64) * r) as u64,
+        Some(r) => engine.budgets_from_peak(peak, &[(r * 100.0).round() as u64])[0],
         None => u64::MAX,
     };
     engine.dtr_cfg = dtr::Config { budget, ..dtr_cfg };
     println!(
-        "unbudgeted peak = {:.1} MiB; budget = {}",
+        "unbudgeted peak = {:.1} MiB ({:.1} MiB pinned); budget = {}",
         peak as f64 / (1 << 20) as f64,
+        engine.pinned_bytes() as f64 / (1 << 20) as f64,
         if budget == u64::MAX {
             "unlimited".to_string()
         } else {
             format!(
-                "{:.1} MiB ({}%)",
+                "{:.1} MiB ({}% of headroom)",
                 budget as f64 / (1 << 20) as f64,
-                (cfg.budget_ratio.unwrap() * 100.0) as u32
+                (cfg.budget_ratio.unwrap() * 100.0).round() as u32
             )
         }
     );

@@ -1,7 +1,8 @@
 //! Compute backends. The DTR runtime is backend-agnostic: the simulator uses
 //! `NullBackend` (pure cost accounting, Appendix C), while the real engine
-//! plugs in a PJRT-backed implementation (`crate::runtime::PjrtBackend`) that
-//! executes AOT-compiled HLO artifacts and holds actual buffers.
+//! plugs in `crate::exec::ExecBackend`, which holds actual host buffers and
+//! delegates operator execution to a pluggable `crate::runtime::Executor`
+//! (pure-Rust interpreter by default, PJRT under the `pjrt` feature).
 
 use super::ids::TensorId;
 use anyhow::Result;

@@ -1,5 +1,6 @@
-//! Real execution: the DTR-managed training engine over PJRT artifacts.
+//! Real execution: the DTR-managed training engine over a pluggable
+//! [`crate::runtime::Executor`] backend.
 
 pub mod engine;
 
-pub use engine::{Engine, Optimizer, PjrtBackend, StepResult};
+pub use engine::{Engine, ExecBackend, Optimizer, SharedExecutor, StepResult};

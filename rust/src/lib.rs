@@ -1,18 +1,35 @@
 //! # dtr — Dynamic Tensor Rematerialization (ICLR 2021)
 //!
 //! A full reproduction of *Dynamic Tensor Rematerialization* (Kirisame et
-//! al., ICLR 2021) as a three-layer rust + JAX + Pallas system:
+//! al., ICLR 2021) as a rust system with a backend-pluggable execution
+//! layer:
 //!
-//! * **rust (this crate)** — the DTR runtime (greedy online checkpointing
-//!   under a memory budget), the Appendix-C simulator, workload generators
-//!   for the paper's eight models, static-checkpointing baselines
-//!   (Chen √N, Revolve/Treeverse, optimal), and a real training engine that
-//!   executes AOT-compiled HLO artifacts through PJRT with DTR managing the
-//!   actual buffers.
-//! * **JAX (`python/compile/model.py`)** — the transformer ops (fwd/bwd),
-//!   lowered once to HLO text; never imported at run time.
-//! * **Pallas (`python/compile/kernels/`)** — fused attention + layernorm
-//!   kernels inside the JAX ops.
+//! * **DTR runtime** (`dtr::`) — greedy online checkpointing under a memory
+//!   budget: eviction heuristics (Sec. 4.1 / Appendix D), deallocation
+//!   policies, the Appendix-C simulator contract.
+//! * **Execution layer** (`runtime::`) — the [`runtime::Executor`] trait is
+//!   the seam between DTR (which only sees tensor ids, sizes, and costs)
+//!   and real compute. Implementations:
+//!   - [`runtime::InterpExecutor`] — hermetic pure-Rust interpreter of the
+//!     transformer op set (matmul/attention/layernorm/GELU/cross-entropy +
+//!     hand-derived backward, Adam/SGD). The default: `cargo test` runs
+//!     real training end-to-end with zero external dependencies.
+//!   - `runtime::PjrtExecutor` (cargo feature `pjrt`, off by default) —
+//!     executes AOT-compiled HLO artifacts through the `xla` crate. Offline
+//!     builds type-check against the in-tree stub in `rust/vendor/xla`;
+//!     swap that path dependency for the real crate to run on XLA.
+//!   - [`runtime::NullExecutor`] — accounting-only; DTR's decisions must be
+//!     identical under it and any real executor (backend-equivalence
+//!     property in `tests/prop_invariants.rs`).
+//! * **Engine + coordinator** (`exec::`, `coordinator::`) — a real
+//!   transformer-LM training step driven through DTR, with deterministic
+//!   analytic op costs so budgeted runs reproduce exactly.
+//! * **Experiments** (`repro::`, `sim::`, `graphs::`, `baselines::`) — the
+//!   paper's figures/tables over the simulator and the engine.
+//!
+//! The JAX/Pallas sources (`python/compile/`) define the op semantics the
+//! interpreter mirrors and lower the PJRT artifacts; Python is never needed
+//! at run time.
 //!
 //! Quickstart: see `examples/quickstart.rs`; experiments: `dtr-repro --help`.
 

@@ -1,12 +1,12 @@
 //! Figure 4: prototype runtime-overhead profile on the *real* engine —
 //! per-batch wall time decomposed into operator compute, heuristic score
 //! evaluation ("cost compute"), victim search ("eviction loop"), and
-//! unprofiled remainder, across memory budgets. Requires `make artifacts`.
-
-use std::path::Path;
+//! unprofiled remainder, across memory budgets. Hermetic on the interpreter
+//! backend (default); `--backend pjrt` profiles compiled artifacts instead.
 
 use anyhow::Result;
 
+use crate::coordinator::TrainConfig;
 use crate::dtr::{self, Heuristic};
 use crate::exec::{Engine, Optimizer};
 use crate::util::csv::{f, CsvOut};
@@ -22,13 +22,18 @@ pub struct Fig4Row {
     pub failed: bool,
 }
 
-pub fn run(artifacts: &Path, ratios: &[f64], steps: usize, h: Heuristic) -> Result<Vec<Fig4Row>> {
+/// `ratios` are fractions of the non-pinned headroom above the pinned
+/// parameter floor (1.0 = the unbudgeted peak). Raw-peak ratios would sit
+/// mostly below the feasibility floor on small models, where pinned
+/// parameters dominate, and the sweep would degenerate to OOM rows.
+pub fn run(tc: &TrainConfig, ratios: &[f64], steps: usize, h: Heuristic) -> Result<Vec<Fig4Row>> {
     let base_cfg = dtr::Config { heuristic: h, profile: true, ..dtr::Config::default() };
-    let mut engine = Engine::new(artifacts, base_cfg.clone(), Optimizer::Sgd)?;
+    let mut engine = Engine::new(tc.build_executor()?, base_cfg.clone(), Optimizer::Sgd)?;
     let peak = engine.measure_peak()?;
     let mut rows = Vec::new();
     for &ratio in ratios {
-        engine.dtr_cfg = dtr::Config { budget: (peak as f64 * ratio) as u64, ..base_cfg.clone() };
+        let budget = engine.budgets_from_peak(peak, &[(ratio * 100.0).round() as u64])[0];
+        engine.dtr_cfg = dtr::Config { budget, ..base_cfg.clone() };
         let mut wall = 0u64;
         let mut op = 0u64;
         let mut cost = 0u64;
@@ -67,7 +72,7 @@ pub fn run(artifacts: &Path, ratios: &[f64], steps: usize, h: Heuristic) -> Resu
 
 pub fn emit(out: &mut CsvOut, rows: &[Fig4Row]) -> Result<()> {
     out.row(&[
-        "budget_ratio",
+        "headroom_ratio",
         "wall_ms",
         "operator_ms",
         "cost_compute_ms",
@@ -91,8 +96,8 @@ pub fn emit(out: &mut CsvOut, rows: &[Fig4Row]) -> Result<()> {
     Ok(())
 }
 
-pub fn default_run(out: &mut CsvOut, artifacts: &Path, steps: usize) -> Result<()> {
+pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, steps: usize) -> Result<()> {
     let ratios = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4];
-    let rows = run(artifacts, &ratios, steps, Heuristic::dtr_eq())?;
+    let rows = run(tc, &ratios, steps, Heuristic::dtr_eq())?;
     emit(out, &rows)
 }

@@ -26,7 +26,8 @@ experiment commands (regenerate paper tables/figures):
   fig2       heuristic comparison: slowdown vs budget ratio, 8 models
              [--models a,b --ratios 0.1,..,1.0 --scale 1]
   fig3       DTR vs static checkpointing on linear networks [--n 512]
-  fig4       real-engine runtime overhead profile [--steps 3 --artifacts artifacts]
+  fig4       real-engine runtime overhead profile [--steps 3]
+             [--backend interp|pjrt --artifacts artifacts]
   table1     largest supported input size, baseline vs DTR
   fig5       memory-trace visualization (N=200, B=2*sqrt(N), h_e*) [--n 200]
   thm31      Theorem 3.1 O(N) sweep [--ns 64,256,1024,4096]
@@ -36,9 +37,13 @@ experiment commands (regenerate paper tables/figures):
   fig12      metadata-access overhead per heuristic
 
 system commands:
-  train      train the transformer LM under a DTR budget
-             [--config cfg.json --steps 50 --budget-ratio 0.6
+  train      train the transformer LM under a DTR budget (budget-ratio is
+             a fraction of the non-pinned headroom; floor is ~0.6)
+             [--config cfg.json --steps 50 --budget-ratio 0.8
               --heuristic h_dtr_eq --optimizer adam --curve-out loss.csv]
+             [--backend interp|pjrt] (interp is hermetic; pjrt needs
+             `--features pjrt` + artifacts) [--vocab N --d-model N
+              --n-heads N --d-ff N --seq N --batch N --layers N]
   gen-log    dump a model's operation log [--model resnet --scale 1 --out m.jsonl]
   models     list available workload models
 ";
@@ -64,8 +69,8 @@ pub fn dispatch() -> Result<()> {
         }
         "fig3" => fig3::default_run(&mut out, args.usize_or("n", 512))?,
         "fig4" => {
-            let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-            fig4::default_run(&mut out, &artifacts, args.usize_or("steps", 3))?;
+            let tc = TrainConfig::load(&args)?;
+            fig4::default_run(&mut out, &tc, args.usize_or("steps", 3))?;
         }
         "table1" => tables::default_run(&mut out)?,
         "fig5" => formal::fig5(&mut out, args.usize_or("n", 200))?,

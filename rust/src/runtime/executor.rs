@@ -1,0 +1,257 @@
+//! The pluggable execution seam: `Executor` is the boundary between the DTR
+//! engine (which only sees tensor ids, sizes, and costs) and whatever
+//! actually computes operator outputs.
+//!
+//! The paper's claim is that DTR works "merely by interposing on tensor
+//! allocations and operator calls"; this trait is that interposition point.
+//! Three implementations exist:
+//!
+//! * [`crate::runtime::InterpExecutor`] — hermetic pure-Rust reference
+//!   interpreter of the manifest op set (default everywhere);
+//! * [`NullExecutor`] — accounting-only executor producing zero buffers,
+//!   used to prove DTR decisions are backend-independent;
+//! * `PjrtExecutor` (behind the `pjrt` cargo feature) — executes
+//!   AOT-compiled HLO artifacts through the `xla` crate.
+
+use anyhow::Result;
+
+use super::manifest::{Manifest, ModelConfig, OpSig};
+use crate::util::rng::Rng;
+
+/// A host tensor: shape + row-major f32 data. Integer tensors (token ids)
+/// are carried as exactly-representable f32 values; the manifest's
+/// `TensorSig` dtype records the logical type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        self.data.len() as u64 * 4
+    }
+}
+
+/// Executes manifest operators on host tensors. Implementations own any
+/// compiled state (executables, scratch buffers); the DTR engine owns the
+/// tensors themselves.
+pub trait Executor {
+    /// Short backend name for logs and CSV output.
+    fn name(&self) -> &'static str;
+
+    /// The op/shape contract this executor serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute operator `op` on `inputs`, returning one tensor per manifest
+    /// output signature. Must be a pure function of its inputs: DTR replays
+    /// ops to rematerialize, and replays must reproduce identical values.
+    fn execute(&mut self, op: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Which executor the coordinator should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Hermetic pure-Rust interpreter (default).
+    Interp,
+    /// PJRT-compiled HLO artifacts (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Interp => "interp",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "interp" | "interpreter" | "host" => BackendKind::Interp,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            _ => return None,
+        })
+    }
+}
+
+/// Accounting-only executor: outputs are zero tensors of the manifest
+/// shapes. DTR's decisions (evictions, rematerializations, peak memory)
+/// must be identical under this executor and any real one — the
+/// backend-equivalence property tested in `tests/prop_invariants.rs`.
+pub struct NullExecutor {
+    manifest: Manifest,
+    pub executed: u64,
+}
+
+impl NullExecutor {
+    pub fn new(cfg: ModelConfig) -> Result<NullExecutor> {
+        Ok(NullExecutor { manifest: Manifest::synthesize(cfg)?, executed: 0 })
+    }
+}
+
+impl Executor for NullExecutor {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&mut self, op: &str, _inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.executed += 1;
+        let sig = self.manifest.op(op)?;
+        Ok(sig.outputs.iter().map(|o| HostTensor::zeros(&o.shape)).collect())
+    }
+}
+
+// ------------------------------------------------------- host-side helpers
+
+/// Standard-normal f32 tensor via Box–Muller on the deterministic RNG.
+/// This is the single source of truth for parameter init: the PJRT
+/// literal helpers in `runtime/pjrt.rs` delegate here, so every backend
+/// trains from bit-identical initial parameters.
+pub fn randn_host(rng: &mut Rng, shape: &[usize], scale: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let mut data = Vec::with_capacity(n);
+    while data.len() < n {
+        let u1 = rng.f64().max(1e-12);
+        let u2 = rng.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        data.push((r * th.cos()) as f32 * scale);
+        if data.len() < n {
+            data.push((r * th.sin()) as f32 * scale);
+        }
+    }
+    HostTensor::new(shape.to_vec(), data)
+}
+
+/// Parameter initialization by group convention: layernorm groups get
+/// gamma=1 / beta=0 rows, everything else N(0, 0.02).
+pub fn init_param(group: &str, shape: &[usize], rng: &mut Rng) -> HostTensor {
+    if group.starts_with("ln") {
+        let d = shape[1];
+        let mut data = vec![1.0f32; d];
+        data.extend(std::iter::repeat(0.0f32).take(d));
+        HostTensor::new(vec![2, d], data)
+    } else {
+        randn_host(rng, shape, 0.02)
+    }
+}
+
+/// Deterministic per-op compute cost (flop estimate from manifest shapes).
+/// The engine feeds these to DTR's heuristics instead of wall-clock
+/// timings, making budgeted runs reproducible and backend-independent.
+pub fn analytic_cost(name: &str, op: &OpSig, cfg: &ModelConfig) -> u64 {
+    let (b, s, d, f, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.vocab);
+    let el_in: usize = op.inputs.iter().map(|t| t.elements()).sum();
+    let el_out: usize = op.outputs.iter().map(|t| t.elements()).sum();
+    let touch = (el_in + el_out) as u64;
+    let block_flops =
+        (2 * b * s * d * 3 * d + 4 * b * s * s * d + 2 * b * s * d * d + 4 * b * s * d * f) as u64;
+    let flops = if name.starts_with("embed_") {
+        (b * s * d) as u64
+    } else if name == "block_fwd" {
+        block_flops
+    } else if name == "block_bwd" {
+        3 * block_flops
+    } else if name == "loss_fwd" {
+        (2 * b * s * d * v + 3 * b * s * v) as u64
+    } else if name == "loss_bwd" {
+        (4 * b * s * d * v + 3 * b * s * v) as u64
+    } else if name.starts_with("adam_") {
+        12 * op.inputs[0].elements() as u64
+    } else if name.starts_with("sgd_") {
+        2 * op.inputs[0].elements() as u64
+    } else {
+        0
+    };
+    flops.max(touch).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accounting() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(HostTensor::scalar(2.5).data, vec![2.5]);
+    }
+
+    #[test]
+    fn randn_is_deterministic_and_sane() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        let x = randn_host(&mut a, &[4, 8], 1.0);
+        let y = randn_host(&mut b, &[4, 8], 1.0);
+        assert_eq!(x.data, y.data);
+        assert!(x.data.iter().all(|v| v.abs() < 6.0));
+    }
+
+    #[test]
+    fn ln_init_layout() {
+        let mut rng = Rng::new(1);
+        let t = init_param("ln", &[2, 4], &mut rng);
+        assert_eq!(t.data, vec![1., 1., 1., 1., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for k in [BackendKind::Interp, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn null_executor_produces_manifest_shapes() {
+        let cfg = ModelConfig::tiny();
+        let mut ex = NullExecutor::new(cfg).unwrap();
+        let tok = HostTensor::zeros(&[cfg.batch, cfg.seq]);
+        let emb = HostTensor::zeros(&[cfg.vocab, cfg.d_model]);
+        let outs = ex.execute("embed_fwd", &[&tok, &emb]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![cfg.batch, cfg.seq, cfg.d_model]);
+        assert_eq!(ex.executed, 1);
+    }
+
+    #[test]
+    fn analytic_costs_positive_and_deterministic() {
+        let cfg = ModelConfig::tiny();
+        let m = Manifest::synthesize(cfg).unwrap();
+        for (name, op) in &m.ops {
+            let c1 = analytic_cost(name, op, &cfg);
+            let c2 = analytic_cost(name, op, &cfg);
+            assert!(c1 > 0, "{name} has zero cost");
+            assert_eq!(c1, c2);
+        }
+        // Relative ordering: block backward dominates forward; loss matmul
+        // over the vocab dominates an optimizer elementwise pass.
+        let cost = |n: &str| analytic_cost(n, m.op(n).unwrap(), &cfg);
+        assert!(cost("block_bwd") > cost("block_fwd"));
+        assert!(cost("loss_fwd") > cost("sgd_wo"));
+    }
+}

@@ -63,7 +63,8 @@ pub struct OpSig {
     pub outputs: Vec<TensorSig>,
 }
 
-/// Model dimensions baked into the artifacts.
+/// Model dimensions baked into the artifacts (or synthesized for the
+/// interpreter backend).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelConfig {
     pub vocab: usize,
@@ -73,6 +74,70 @@ pub struct ModelConfig {
     pub seq: usize,
     pub batch: usize,
     pub n_layers: usize,
+}
+
+impl ModelConfig {
+    /// Smallest config exercising every code path; the test fixture.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig { vocab: 64, d_model: 32, n_heads: 4, d_ff: 64, seq: 16, batch: 4, n_layers: 2 }
+    }
+
+    /// Default training config for the hermetic interpreter backend.
+    pub fn small() -> ModelConfig {
+        ModelConfig {
+            vocab: 256,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            seq: 32,
+            batch: 8,
+            n_layers: 2,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.vocab > 0
+                && self.d_model > 0
+                && self.n_heads > 0
+                && self.d_ff > 0
+                && self.seq > 0
+                && self.batch > 0
+                && self.n_layers > 0,
+            "model dimensions must all be positive: {self:?}"
+        );
+        anyhow::ensure!(
+            self.d_model % self.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            self.d_model,
+            self.n_heads
+        );
+        Ok(())
+    }
+
+    /// Parameter group name -> shape for this config.
+    pub fn param_shapes(&self) -> BTreeMap<String, Vec<usize>> {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".to_string(), vec![v, d]);
+        shapes.insert("ln".to_string(), vec![2, d]);
+        shapes.insert("wqkv".to_string(), vec![d, 3 * d]);
+        shapes.insert("wo".to_string(), vec![d, d]);
+        shapes.insert("w1".to_string(), vec![d, f]);
+        shapes.insert("w2".to_string(), vec![f, d]);
+        shapes.insert("w_out".to_string(), vec![d, v]);
+        shapes
+    }
+
+    pub fn total_params(&self) -> u64 {
+        let (d, f, v) = (self.d_model as u64, self.d_ff as u64, self.vocab as u64);
+        let per_block = 2 * d + d * 3 * d + d * d + 2 * d + d * f + f * d;
+        v * d + self.n_layers as u64 * per_block + d * v
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -86,6 +151,85 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Build the op/shape contract for `cfg` programmatically — the
+    /// interpreter and null backends need no artifacts on disk. The op set
+    /// and signatures mirror what `python/compile/aot.py` emits.
+    pub fn synthesize(cfg: ModelConfig) -> Result<Manifest> {
+        cfg.validate()?;
+        let (b, s, d, f, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.vocab);
+        let f32s = |shape: &[usize]| TensorSig { shape: shape.to_vec(), dtype: DType::F32 };
+        let i32s = |shape: &[usize]| TensorSig { shape: shape.to_vec(), dtype: DType::I32 };
+        let op = |inputs: Vec<TensorSig>, outputs: Vec<TensorSig>| OpSig {
+            file: PathBuf::new(),
+            inputs,
+            outputs,
+        };
+
+        let x = f32s(&[b, s, d]);
+        let tok = i32s(&[b, s]);
+        let block_params = vec![
+            f32s(&[2, d]),
+            f32s(&[d, 3 * d]),
+            f32s(&[d, d]),
+            f32s(&[2, d]),
+            f32s(&[d, f]),
+            f32s(&[f, d]),
+        ];
+
+        let mut ops = BTreeMap::new();
+        ops.insert(
+            "embed_fwd".to_string(),
+            op(vec![tok.clone(), f32s(&[v, d])], vec![x.clone()]),
+        );
+        ops.insert(
+            "embed_bwd".to_string(),
+            op(vec![tok.clone(), x.clone()], vec![f32s(&[v, d])]),
+        );
+        let mut block_in = vec![x.clone()];
+        block_in.extend(block_params.iter().cloned());
+        ops.insert("block_fwd".to_string(), op(block_in.clone(), vec![x.clone()]));
+        let mut bwd_in = block_in;
+        bwd_in.push(x.clone());
+        let mut bwd_out = vec![x.clone()];
+        bwd_out.extend(block_params.iter().cloned());
+        ops.insert("block_bwd".to_string(), op(bwd_in, bwd_out));
+        ops.insert(
+            "loss_fwd".to_string(),
+            op(vec![x.clone(), f32s(&[d, v]), tok.clone()], vec![f32s(&[1])]),
+        );
+        ops.insert(
+            "loss_bwd".to_string(),
+            op(
+                vec![x.clone(), f32s(&[d, v]), tok.clone()],
+                vec![x.clone(), f32s(&[d, v])],
+            ),
+        );
+
+        let param_shapes = cfg.param_shapes();
+        for (group, shape) in &param_shapes {
+            let p = f32s(shape);
+            ops.insert(
+                format!("sgd_{group}"),
+                op(vec![p.clone(), p.clone()], vec![p.clone()]),
+            );
+            ops.insert(
+                format!("adam_{group}"),
+                op(
+                    vec![p.clone(), p.clone(), p.clone(), p.clone(), f32s(&[1])],
+                    vec![p.clone(), p.clone(), p.clone()],
+                ),
+            );
+        }
+
+        Ok(Manifest {
+            config: cfg,
+            total_params: cfg.total_params(),
+            param_shapes,
+            ops,
+            dir: PathBuf::new(),
+        })
+    }
+
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -198,5 +342,36 @@ mod tests {
     fn missing_manifest_is_actionable() {
         let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn synthesized_manifest_matches_engine_contract() {
+        let cfg = ModelConfig::tiny();
+        let m = Manifest::synthesize(cfg).unwrap();
+        assert_eq!(m.total_params, cfg.total_params());
+        let bf = m.op("block_fwd").unwrap();
+        assert_eq!(bf.inputs.len(), 7);
+        assert_eq!(bf.outputs.len(), 1);
+        assert_eq!(bf.inputs[0].shape, vec![cfg.batch, cfg.seq, cfg.d_model]);
+        let bb = m.op("block_bwd").unwrap();
+        assert_eq!(bb.inputs.len(), 8);
+        assert_eq!(bb.outputs.len(), 7);
+        let lb = m.op("loss_bwd").unwrap();
+        assert_eq!(lb.outputs.len(), 2);
+        // Optimizer artifacts exist for every parameter group.
+        for group in m.param_shapes.keys() {
+            assert!(m.ops.contains_key(&format!("sgd_{group}")), "sgd_{group}");
+            assert!(m.ops.contains_key(&format!("adam_{group}")), "adam_{group}");
+        }
+        assert_eq!(m.op("adam_wo").unwrap().inputs.len(), 5);
+    }
+
+    #[test]
+    fn model_config_validation() {
+        assert!(ModelConfig::tiny().validate().is_ok());
+        assert!(ModelConfig::small().validate().is_ok());
+        let bad = ModelConfig { n_heads: 3, ..ModelConfig::tiny() };
+        assert!(bad.validate().is_err());
+        assert_eq!(ModelConfig::tiny().d_head(), 8);
     }
 }

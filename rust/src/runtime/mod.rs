@@ -1,8 +1,16 @@
-//! PJRT artifact runtime (the only consumer of the `xla` crate): manifest
-//! parsing + executable loading + literal helpers.
+//! The execution layer: manifest (op/shape contract), the pluggable
+//! [`Executor`] seam, the hermetic pure-Rust interpreter (default), and —
+//! behind the `pjrt` cargo feature — the PJRT artifact runtime, the only
+//! consumer of the `xla` crate.
 
+pub mod executor;
+pub mod interp;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
+pub use executor::{BackendKind, Executor, HostTensor, NullExecutor};
+pub use interp::InterpExecutor;
 pub use manifest::{DType, Manifest, ModelConfig, OpSig, TensorSig};
-pub use pjrt::PjrtRuntime;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{PjrtExecutor, PjrtRuntime};

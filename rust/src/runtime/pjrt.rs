@@ -1,6 +1,8 @@
 //! PJRT runtime: loads HLO-text artifacts, compiles them once on the CPU
 //! client, and executes them with host literals. This is the only module
-//! that touches the `xla` crate; everything above it speaks in `Literal`s.
+//! that touches the `xla` crate (compiled only under the `pjrt` cargo
+//! feature); everything above it speaks through the [`Executor`] trait via
+//! [`PjrtExecutor`].
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -8,6 +10,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
+use super::executor::{Executor, HostTensor};
 use super::manifest::{DType, Manifest, TensorSig};
 use crate::util::rng::Rng;
 
@@ -57,23 +60,70 @@ impl PjrtRuntime {
     }
 }
 
+/// [`Executor`] adapter over [`PjrtRuntime`]: converts `HostTensor`s to
+/// literals per the manifest dtypes (token tensors travel as i32), executes
+/// the compiled artifact, and reads results back to the host. The engine is
+/// oblivious to which executor it drives.
+pub struct PjrtExecutor {
+    rt: PjrtRuntime,
+}
+
+impl PjrtExecutor {
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtExecutor> {
+        Ok(PjrtExecutor { rt: PjrtRuntime::load(artifacts_dir)? })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.rt.manifest
+    }
+
+    fn execute(&mut self, op: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let sig = self.rt.manifest.op(op)?.clone();
+        anyhow::ensure!(
+            inputs.len() == sig.inputs.len(),
+            "{op}: {} inputs given, {} expected",
+            inputs.len(),
+            sig.inputs.len()
+        );
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(t, s)| match s.dtype {
+                DType::F32 => f32_literal(&t.data, &s.shape),
+                DType::I32 => {
+                    let ints: Vec<i32> = t.data.iter().map(|&v| v as i32).collect();
+                    i32_literal(&ints, &s.shape)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&Literal> = lits.iter().collect();
+        let outs = self.rt.execute(op, &refs)?;
+        anyhow::ensure!(
+            outs.len() == sig.outputs.len(),
+            "{op}: {} outputs from PJRT, {} expected",
+            outs.len(),
+            sig.outputs.len()
+        );
+        outs.into_iter()
+            .zip(&sig.outputs)
+            .map(|(l, s)| Ok(HostTensor::new(s.shape.clone(), l.to_vec::<f32>()?)))
+            .collect()
+    }
+}
+
 // ------------------------------------------------------ literal utilities
 
-/// Standard-normal f32 literal via Box–Muller on our deterministic RNG.
+/// Standard-normal f32 literal — delegates to the canonical host-side
+/// generator so PJRT and interpreter runs initialize bit-identically.
 pub fn randn_literal(rng: &mut Rng, shape: &[usize], scale: f32) -> Result<Literal> {
-    let n: usize = shape.iter().product();
-    let mut data = Vec::with_capacity(n);
-    while data.len() < n {
-        let u1 = rng.f64().max(1e-12);
-        let u2 = rng.f64();
-        let r = (-2.0 * u1.ln()).sqrt();
-        let th = 2.0 * std::f64::consts::PI * u2;
-        data.push((r * th.cos()) as f32 * scale);
-        if data.len() < n {
-            data.push((r * th.sin()) as f32 * scale);
-        }
-    }
-    reshape(Literal::vec1(&data), shape)
+    let t = super::executor::randn_host(rng, shape, scale);
+    reshape(Literal::vec1(&t.data), shape)
 }
 
 pub fn zeros_literal(shape: &[usize]) -> Result<Literal> {
@@ -86,11 +136,12 @@ pub fn ones_literal(shape: &[usize]) -> Result<Literal> {
     reshape(Literal::vec1(&vec![1f32; n]), shape)
 }
 
-/// LayerNorm parameter init: gamma=1 row, beta=0 row -> [2, d].
+/// LayerNorm parameter init: gamma=1 row, beta=0 row -> [2, d]
+/// (delegates to the canonical host-side initializer).
 pub fn ln_literal(d: usize) -> Result<Literal> {
-    let mut data = vec![1f32; d];
-    data.extend(std::iter::repeat(0f32).take(d));
-    reshape(Literal::vec1(&data), &[2, d])
+    let mut rng = Rng::new(0); // unused by the ln path
+    let t = super::executor::init_param("ln", &[2, d], &mut rng);
+    reshape(Literal::vec1(&t.data), &[2, d])
 }
 
 pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
@@ -116,13 +167,12 @@ pub fn first_f32(l: &Literal) -> Result<f32> {
     Ok(l.to_vec::<f32>()?[0])
 }
 
-/// Build an init literal for a parameter group by name convention.
+/// Build an init literal for a parameter group by name convention —
+/// literally `executor::init_param` converted to a `Literal`, so PJRT and
+/// interpreter training start from identical parameters.
 pub fn init_param(name: &str, shape: &[usize], rng: &mut Rng) -> Result<Literal> {
-    if name.starts_with("ln") {
-        ln_literal(shape[1])
-    } else {
-        randn_literal(rng, shape, 0.02)
-    }
+    let t = super::executor::init_param(name, shape, rng);
+    reshape(Literal::vec1(&t.data), &t.shape)
 }
 
 pub fn dtype_zeros(sig: &TensorSig) -> Result<Literal> {

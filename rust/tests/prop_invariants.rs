@@ -5,7 +5,9 @@
 //! is not in the offline crate cache).
 
 use dtr::dtr::{Config, DeallocPolicy, Heuristic};
+use dtr::exec::{Engine, Optimizer};
 use dtr::graphs::tape::{R, Tape};
+use dtr::runtime::{InterpExecutor, ModelConfig, NullExecutor};
 use dtr::sim::log::Log;
 use dtr::sim::replay::{baseline, simulate};
 use dtr::util::miniprop::check;
@@ -146,6 +148,88 @@ fn prop_jsonl_roundtrip_preserves_simulation() {
         }
         if x.ok() && x.stats.total_compute() != y.stats.total_compute() {
             return Err("roundtrip changed compute".into());
+        }
+        Ok(())
+    });
+}
+
+/// Backend-equivalence: replaying the same training-step op log through the
+/// accounting-only NullExecutor and the real interpreter executor must
+/// produce identical DTR `Stats` — eviction/rematerialization decisions
+/// depend only on sizes, costs, and the heuristic, never on buffer values
+/// or on which backend computes them.
+#[test]
+fn prop_backend_equivalence_null_vs_interp() {
+    let model = ModelConfig {
+        vocab: 32,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 32,
+        seq: 8,
+        batch: 2,
+        n_layers: 2,
+    };
+    check("backend_equivalence", 10, 1, 100, |rng, _size| {
+        let h = *rng.choose(&Heuristic::fig2_set());
+        let pct = 55 + rng.below(40); // 55..95% of the non-pinned headroom
+        let opt = if rng.chance(0.5) { Optimizer::Adam } else { Optimizer::Sgd };
+
+        let mk = |null: bool| -> Engine {
+            let exec: Box<dyn dtr::runtime::Executor> = if null {
+                Box::new(NullExecutor::new(model).unwrap())
+            } else {
+                Box::new(InterpExecutor::new(model).unwrap())
+            };
+            Engine::new(exec, Config::default(), opt).unwrap()
+        };
+
+        let mut interp = mk(false);
+        let mut null = mk(true);
+        let peak_i = interp.measure_peak().map_err(|e| e.to_string())?;
+        let peak_n = null.measure_peak().map_err(|e| e.to_string())?;
+        if peak_i != peak_n {
+            return Err(format!("unbudgeted peaks differ: interp {peak_i} vs null {peak_n}"));
+        }
+        let budget = interp.budgets_from_peak(peak_i, &[pct])[0];
+        let cfg = Config { budget, heuristic: h, ..Config::default() };
+        interp.dtr_cfg = cfg.clone();
+        null.dtr_cfg = cfg;
+
+        for step in 0..2 {
+            let a = interp.train_step();
+            let b = null.train_step();
+            match (a, b) {
+                // OOM is legal at tight budgets, but both backends must
+                // agree on feasibility.
+                (Err(_), Err(_)) => return Ok(()),
+                (Ok(_), Err(e)) => {
+                    return Err(format!("{}: null OOMed but interp ran: {e:#}", h.name()))
+                }
+                (Err(e), Ok(_)) => {
+                    return Err(format!("{}: interp OOMed but null ran: {e:#}", h.name()))
+                }
+                (Ok(ra), Ok(rb)) => {
+                    let key = |s: &dtr::dtr::Stats| {
+                        (
+                            s.clock,
+                            s.base_compute,
+                            s.remat_compute,
+                            s.remat_count,
+                            s.evict_count,
+                            s.peak_memory,
+                            s.memory,
+                        )
+                    };
+                    if key(&ra.stats) != key(&rb.stats) {
+                        return Err(format!(
+                            "{} step {step}: stats diverged\n interp: {:?}\n null:   {:?}",
+                            h.name(),
+                            ra.stats,
+                            rb.stats
+                        ));
+                    }
+                }
+            }
         }
         Ok(())
     });

@@ -1,0 +1,178 @@
+//! Unit tests for the eviction-heuristic family over hand-built pools
+//! where the victim is known by construction, plus round-trips of every
+//! heuristic name through the CLI flag parser.
+
+use dtr::coordinator::TrainConfig;
+use dtr::dtr::evicted::EvictedScratch;
+use dtr::dtr::graph::Graph;
+use dtr::dtr::heuristics::{score, ScoreCtx};
+use dtr::dtr::ids::{StorageId, TensorId};
+use dtr::dtr::unionfind::UnionFind;
+use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, Runtime};
+use dtr::util::cli::Args;
+use dtr::util::rng::Rng;
+
+/// Linear chain s0 -> s1 -> ... with given per-node op costs and storage
+/// sizes; every storage starts resident with last_access 0.
+fn chain(costs: &[u64], sizes: &[u64]) -> (Graph, Vec<StorageId>, UnionFind) {
+    assert_eq!(costs.len(), sizes.len());
+    let mut g = Graph::new();
+    let mut uf = UnionFind::new();
+    let mut ss = Vec::new();
+    let mut prev: Option<TensorId> = None;
+    for i in 0..costs.len() {
+        let h = uf.make_set();
+        let s = g.new_storage(sizes[i], h);
+        let t = if let Some(p) = prev {
+            let op = g.new_op(&format!("f{i}"), costs[i], vec![p]);
+            let t = g.new_tensor(s, Some(op), false);
+            g.ops[op.idx()].outputs.push(t);
+            t
+        } else {
+            g.new_tensor(s, None, false)
+        };
+        g.storage_mut(s).resident = true;
+        ss.push(s);
+        prev = Some(t);
+    }
+    (g, ss, uf)
+}
+
+fn score_of(h: Heuristic, g: &Graph, uf: &mut UnionFind, clock: u64, s: StorageId) -> f64 {
+    let mut scratch = EvictedScratch::new();
+    let mut rng = Rng::new(1);
+    let mut acc = 0u64;
+    let mut roots = Vec::new();
+    let mut ctx = ScoreCtx {
+        graph: g,
+        uf,
+        scratch: &mut scratch,
+        clock,
+        rng: &mut rng,
+        accesses: &mut acc,
+        root_buf: &mut roots,
+    };
+    score(h, s, &mut ctx)
+}
+
+/// Argmin of the heuristic over a pool (the victim DTR would select).
+fn victim(h: Heuristic, g: &Graph, uf: &mut UnionFind, clock: u64, pool: &[StorageId]) -> StorageId {
+    let mut best: Option<(f64, StorageId)> = None;
+    for &s in pool {
+        let sc = score_of(h, g, uf, clock, s);
+        if best.map_or(true, |(b, _)| sc < b) {
+            best = Some((sc, s));
+        }
+    }
+    best.unwrap().1
+}
+
+#[test]
+fn lru_victim_is_stalest() {
+    let (mut g, ss, mut uf) = chain(&[0, 1, 1, 1], &[1, 1, 1, 1]);
+    g.storage_mut(ss[1]).last_access = 5;
+    g.storage_mut(ss[2]).last_access = 1; // stalest
+    g.storage_mut(ss[3]).last_access = 9;
+    let v = victim(Heuristic::lru(), &g, &mut uf, 10, &ss[1..]);
+    assert_eq!(v, ss[2]);
+}
+
+#[test]
+fn size_victim_is_largest() {
+    let (g, ss, mut uf) = chain(&[0, 1, 1, 1], &[1, 10, 40, 20]);
+    let v = victim(Heuristic::size(), &g, &mut uf, 10, &ss[1..]);
+    assert_eq!(v, ss[2]); // 40 bytes
+}
+
+#[test]
+fn dtr_victim_accounts_for_evicted_neighborhood() {
+    // s2 (cost 50) is evicted. s1 and s3 border it, so their e* includes
+    // its cost; s4 is isolated and cheap to replay overall.
+    //   h_dtr:   s1 = (2+50+1)/2, s3 = (60+50+1)/2, s4 = (10+1)/2 -> s4
+    //   h_local: s1 = (2+1)/2,    s3 = (60+1)/2,    s4 = (10+1)/2 -> s1
+    let (mut g, ss, mut uf) = chain(&[0, 2, 50, 60, 10], &[1, 1, 1, 1, 1]);
+    g.storage_mut(ss[2]).resident = false;
+    let pool = [ss[1], ss[3], ss[4]];
+    assert_eq!(victim(Heuristic::dtr(), &g, &mut uf, 1, &pool), ss[4]);
+    assert_eq!(victim(Heuristic::dtr_local(), &g, &mut uf, 1, &pool), ss[1]);
+}
+
+#[test]
+fn dtr_eq_matches_exact_estar_on_single_component() {
+    // With the union-find bookkeeping the runtime performs on eviction,
+    // the equivalence-class approximation is exact for one evicted node.
+    let (mut g, ss, mut uf) = chain(&[0, 2, 50, 60, 10], &[1, 1, 1, 1, 1]);
+    g.storage_mut(ss[2]).resident = false;
+    let h2 = g.storage(ss[2]).uf;
+    uf.add_cost(h2, g.storage(ss[2]).local_cost as f64);
+    let pool = [ss[1], ss[3], ss[4]];
+    assert_eq!(victim(Heuristic::dtr_eq(), &g, &mut uf, 1, &pool), ss[4]);
+    for &s in &pool {
+        let exact = score_of(Heuristic::dtr(), &g, &mut uf, 1, s);
+        let approx = score_of(Heuristic::dtr_eq(), &g, &mut uf, 1, s);
+        assert!((exact - approx).abs() < 1e-9, "{s}: {exact} vs {approx}");
+    }
+}
+
+#[test]
+fn msps_victim_is_cheap_large_with_no_evicted_ancestors() {
+    // s1 evicted: s2's rematerialization set includes it; s3 is large,
+    // locally cheap, and has resident ancestors.
+    //   s2 = (6+6+1)/1 = 13, s3 = (2+0+1)/4 = 0.75 -> s3
+    let (mut g, ss, mut uf) = chain(&[0, 6, 6, 2], &[1, 1, 1, 4]);
+    g.storage_mut(ss[1]).resident = false;
+    let pool = [ss[2], ss[3]];
+    assert_eq!(victim(Heuristic::Msps, &g, &mut uf, 1, &pool), ss[3]);
+}
+
+// ------------------------------------------------- runtime-driven victims
+
+#[test]
+fn runtime_evicts_stalest_under_lru() {
+    let cfg = Config { budget: 4, heuristic: Heuristic::lru(), ..Config::default() };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let c = rt.constant(1);
+    // Three unit outputs of c, touched at clocks 1, 2, 3.
+    let a1 = rt.call("f1", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+    let a2 = rt.call("f2", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+    let a3 = rt.call("f3", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+    // Memory is full (1+3); the next output must evict exactly a1.
+    let a4 = rt.call("f4", 1, &[c], &[OutSpec::sized(1)]).unwrap()[0];
+    assert!(!rt.is_resident(a1), "stalest tensor must be the victim");
+    assert!(rt.is_resident(a2) && rt.is_resident(a3) && rt.is_resident(a4));
+    rt.check_invariants().unwrap();
+}
+
+#[test]
+fn runtime_evicts_largest_under_size() {
+    let cfg = Config { budget: 10, heuristic: Heuristic::size(), ..Config::default() };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let c = rt.constant(1);
+    let a1 = rt.call("f1", 1, &[c], &[OutSpec::sized(2)]).unwrap()[0];
+    let a2 = rt.call("f2", 1, &[c], &[OutSpec::sized(5)]).unwrap()[0];
+    // 1+2+5 resident; a 3-byte output must evict the 5-byte storage.
+    let a3 = rt.call("f3", 1, &[c], &[OutSpec::sized(3)]).unwrap()[0];
+    assert!(!rt.is_resident(a2), "largest tensor must be the victim");
+    assert!(rt.is_resident(a1) && rt.is_resident(a3));
+    rt.check_invariants().unwrap();
+}
+
+// ------------------------------------------------------ CLI name round-trip
+
+#[test]
+fn heuristic_names_roundtrip_through_cli_parser() {
+    let mut all = Heuristic::fig2_set();
+    all.push(Heuristic::EStarCount);
+    for h in all {
+        let args = Args::parse(vec!["--heuristic".to_string(), h.name()].into_iter());
+        let cfg = TrainConfig::load(&args)
+            .unwrap_or_else(|e| panic!("flag parser rejected {}: {e:#}", h.name()));
+        assert_eq!(cfg.heuristic, h, "{} did not round-trip", h.name());
+    }
+}
+
+#[test]
+fn unknown_heuristic_flag_is_rejected() {
+    let args = Args::parse(vec!["--heuristic".to_string(), "h_bogus".to_string()].into_iter());
+    assert!(TrainConfig::load(&args).is_err());
+}

@@ -1,0 +1,200 @@
+//! Offline stub of the `xla` crate: exactly the API surface `dtr`'s `pjrt`
+//! feature consumes, so `cargo build --features pjrt` type-checks without
+//! the real PJRT bindings (unavailable offline).
+//!
+//! Host-side `Literal` construction and inspection are fully functional
+//! (they are plain buffers); everything that would touch a PJRT client
+//! returns an [`Error`] at runtime with an actionable message. To execute
+//! compiled HLO artifacts for real, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the real crate — no `dtr` source changes needed.
+
+use std::fmt;
+
+/// Stub error type, shaped like the real crate's (`std::error::Error`,
+/// `Send + Sync`) so `anyhow` context chains compose identically.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real xla crate (PJRT bindings are not vendored \
+         offline); point the `xla` path dependency at the real crate"
+    )))
+}
+
+/// Element types the in-tree code stores in literals.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Marker trait for element types accepted by [`Literal::vec1`] /
+/// [`Literal::to_vec`].
+pub trait NativeType: Sized + Clone {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Data {
+        Data::I32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+/// A host tensor literal (dims + flat data), functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims,
+                n,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Destructure a tuple literal; the stub never produces tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("tuple literals")
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// Computation handle built from a parsed module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by executions.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Clone>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a compiled module")
+    }
+}
+
+/// PJRT client handle; construction fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("creating a PJRT CPU client")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling a computation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.size_bytes(), 16);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_with_actionable_error() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("real xla crate"), "{err}");
+    }
+}
