@@ -3,10 +3,11 @@
 # `make verify` is the tier-1 gate (hermetic: no network, no Python, no
 # artifacts needed — the engine runs on the pure-Rust interpreter backend).
 
-.PHONY: verify build test bench fmt e2e artifacts clean
+.PHONY: verify build test bench fmt clippy e2e artifacts clean
 
+# Tier-1 first (build + test), then the lint gates (same jobs CI runs).
 verify:
-	cargo build --release && cargo test -q
+	cargo build --release && cargo test -q && cargo fmt --check && cargo clippy -- -D warnings
 
 build:
 	cargo build --release
@@ -19,6 +20,9 @@ bench:
 
 fmt:
 	cargo fmt --check
+
+clippy:
+	cargo clippy -- -D warnings
 
 # Hermetic end-to-end training run (interpreter backend).
 e2e:

@@ -1,53 +1,61 @@
 //! Quickstart: the DTR public API in five minutes.
 //!
-//! Builds a small computation through the runtime under a tight memory
-//! budget, watches DTR evict and rematerialize, and prints the stats.
+//! Builds a small computation through a `dtr::api::Session` under a tight
+//! memory budget, watches DTR evict and rematerialize behind RAII tensor
+//! handles, and prints the stats. No raw tensor ids, no manual releases:
+//! dropping a handle *is* the deallocation event.
 //!
 //!     cargo run --release --example quickstart
 
-use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, Runtime};
+use dtr::api::{Session, Tensor};
+use dtr::dtr::{Config, Heuristic};
 
 fn main() -> anyhow::Result<()> {
-    // A runtime with a 6-unit memory budget using the paper's h_DTR^eq
-    // heuristic (the prototype default).
+    // An accounting session with a 6-unit memory budget using the paper's
+    // h_DTR^eq heuristic (the prototype default). Accounting sessions track
+    // sizes and costs only — perfect for exploring DTR's decisions.
     let cfg = Config { budget: 6, heuristic: Heuristic::dtr_eq(), ..Config::default() };
-    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let s = Session::accounting(cfg);
 
     // A constant input (weights/data are pinned: never evicted).
-    let x0 = rt.constant(1);
+    let x0 = s.constant_sized(1);
 
     // A chain of 32 unit-cost, unit-size operators. With only 6 units of
     // memory, DTR must evict intermediate tensors as it goes.
-    let mut xs = vec![x0];
+    let mut xs: Vec<Tensor> = vec![x0];
     for i in 0..32 {
-        let t = rt.call(&format!("f{i}"), /*cost=*/ 1, &[xs[i]], &[OutSpec::sized(1)])?[0];
+        let t = s.call_sized(&format!("f{i}"), /*cost=*/ 1, &[&xs[i]], &[1])?.remove(0);
         xs.push(t);
     }
-    println!("after forward: {} evictions, memory = {}/6", rt.stats.evict_count, rt.stats.memory);
+    let stats = s.stats();
+    println!("after forward: {} evictions, memory = {}/6", stats.evict_count, stats.memory);
 
     // Touch an early tensor: it was evicted, so DTR transparently replays
     // its parent operators (recursively) to bring it back.
-    assert!(!rt.is_defined(xs[4]));
-    rt.access(xs[4])?;
-    assert!(rt.is_defined(xs[4]));
+    assert!(!s.is_defined(&xs[4]));
+    s.touch(&xs[4])?;
+    assert!(s.is_defined(&xs[4]));
+    let stats = s.stats();
     println!(
-        "after access(t4): {} rematerializations ({} extra compute units)",
-        rt.stats.remat_count, rt.stats.remat_compute
+        "after touch(t4): {} rematerializations ({} extra compute units)",
+        stats.remat_count, stats.remat_compute
     );
 
-    // Deallocation: dropping the last reference lets the eager policy free
-    // tensors immediately (Sec. 2 "Deallocation").
-    for &t in &xs[1..16] {
-        rt.release(t);
-    }
-    println!("after releases: memory = {}", rt.stats.memory);
+    // Deallocation is just Drop: truncating the vector releases the handles
+    // and the eager policy frees their storage immediately (Sec. 2
+    // "Deallocation"). Cloning a handle would retain it instead.
+    drop(xs.drain(1..16));
+    println!("after drops: memory = {}", s.memory());
 
-    // Every heuristic from the paper is available:
+    // Every heuristic from the paper is available, and each name parses
+    // back with FromStr (the CLI/CSV contract).
     for h in Heuristic::fig2_set() {
+        let parsed: Heuristic = h.name().parse().unwrap();
+        assert_eq!(parsed, h);
         println!("heuristic available: {}", h.name());
     }
 
-    rt.check_invariants()?;
-    println!("ok: slowdown = {:.2}x", rt.stats.slowdown());
+    s.check_invariants()?;
+    println!("ok: slowdown = {:.2}x", s.stats().slowdown());
     Ok(())
 }

@@ -6,8 +6,9 @@
 use std::time::Instant;
 
 use dtr::dtr::{Config, Heuristic};
+use dtr::exec::dynamic::{headroom_budget, LstmTrainer};
 use dtr::exec::{Engine, Optimizer};
-use dtr::runtime::ModelConfig;
+use dtr::runtime::{ModelConfig, RnnConfig};
 
 fn main() {
     println!("# bench_engine — real training step under DTR budgets (interp backend)\n");
@@ -72,6 +73,63 @@ fn main() {
             ov as f64 / 1e6,
             100.0 * ov as f64 / median as f64,
             remats as f64 / walls.len() as f64,
+        );
+    }
+
+    // --- dynamic-LSTM variant: per-batch random sequence lengths through
+    // the `dtr::api` session path (the workload class static planners
+    // cannot schedule) ---
+    println!("\n# dynamic LSTM — data-dependent unroll lengths under DTR budgets\n");
+    let rnn = RnnConfig::small();
+    let mk = |budget: u64| -> LstmTrainer {
+        let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), profile: true, ..Config::default() };
+        let mut t = LstmTrainer::interp(rnn, cfg).expect("lstm trainer");
+        t.min_len = 8;
+        t.max_len = 24;
+        t
+    };
+    let (peak, floor) = mk(u64::MAX).measure_envelope(5).expect("envelope");
+    println!(
+        "dynamic envelope: floor {:.2} MiB, peak {:.2} MiB\n",
+        floor as f64 / (1 << 20) as f64,
+        peak as f64 / (1 << 20) as f64,
+    );
+    for pct in [100u64, 80, 60, 40] {
+        let mut t = mk(headroom_budget(peak, floor, pct));
+        let _ = t.train_step(); // warmup
+        let mut walls = Vec::new();
+        let mut overhead = Vec::new();
+        let mut remats = 0u64;
+        let mut units = 0u64;
+        let mut failed = false;
+        for _ in 0..5 {
+            match t.train_step() {
+                Ok(r) => {
+                    walls.push(r.wall_ns);
+                    overhead.push(r.stats.eviction_loop_ns);
+                    remats += r.stats.remat_count;
+                    units += r.units;
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if failed || walls.is_empty() {
+            println!("headroom {pct:>3}%  OOM");
+            continue;
+        }
+        walls.sort();
+        let median = walls[walls.len() / 2];
+        let ov: u64 = overhead.iter().sum::<u64>() / overhead.len() as u64;
+        println!(
+            "headroom {pct:>3}%  step {:>8.2} ms  eviction-loop {:>8.3} ms ({:.2}%)  remats/step {:.1}  mean-len {:.1}",
+            median as f64 / 1e6,
+            ov as f64 / 1e6,
+            100.0 * ov as f64 / median as f64,
+            remats as f64 / walls.len() as f64,
+            units as f64 / walls.len() as f64,
         );
     }
 }

@@ -1,0 +1,71 @@
+//! The executor-facing DTR backend: owns the host buffers (keyed by the
+//! typed [`TensorId`] end-to-end) and delegates operator execution to a
+//! pluggable [`Executor`]. This is interposition machinery — the only
+//! place outside the core runtime that touches raw tensor ids — so it
+//! lives inside `dtr::api` with the session that drives it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::dtr::{Backend, TensorId};
+use crate::runtime::executor::{Executor, HostTensor};
+
+/// Shared handle to the executor: the engine keeps it across steps while
+/// each per-step session's backend borrows it for operator execution.
+pub type SharedExecutor = Rc<RefCell<Box<dyn Executor>>>;
+
+/// Buffer store implementing the DTR backend trait over any [`Executor`].
+pub struct ExecBackend {
+    exec: SharedExecutor,
+    bufs: HashMap<TensorId, HostTensor>,
+    /// Wall time spent executing operators (Fig. 4's "operator time").
+    pub exec_ns: u64,
+    pub exec_count: u64,
+}
+
+impl ExecBackend {
+    pub fn new(exec: SharedExecutor) -> Self {
+        ExecBackend { exec, bufs: HashMap::new(), exec_ns: 0, exec_count: 0 }
+    }
+
+    pub fn put(&mut self, t: TensorId, v: HostTensor) {
+        self.bufs.insert(t, v);
+    }
+
+    pub fn get(&self, t: TensorId) -> Option<&HostTensor> {
+        self.bufs.get(&t)
+    }
+}
+
+impl Backend for ExecBackend {
+    fn execute(&mut self, name: &str, inputs: &[TensorId], outputs: &[TensorId]) -> Result<()> {
+        let t0 = Instant::now();
+        let ins: Vec<&HostTensor> = inputs
+            .iter()
+            .map(|t| self.bufs.get(t).with_context(|| format!("missing buffer {t}")))
+            .collect::<Result<_>>()?;
+        let outs = self.exec.borrow_mut().execute(name, &ins)?;
+        anyhow::ensure!(
+            outs.len() == outputs.len(),
+            "{name}: {} outputs from executor, {} expected",
+            outs.len(),
+            outputs.len()
+        );
+        for (&t, v) in outputs.iter().zip(outs) {
+            self.bufs.insert(t, v);
+        }
+        self.exec_ns += t0.elapsed().as_nanos() as u64;
+        self.exec_count += 1;
+        Ok(())
+    }
+
+    fn free(&mut self, roots: &[TensorId]) {
+        for t in roots {
+            self.bufs.remove(t);
+        }
+    }
+}

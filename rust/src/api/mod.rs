@@ -1,0 +1,71 @@
+//! # `dtr::api` — the interposition-first public API
+//!
+//! The paper's central claim is that DTR needs nothing but interposition
+//! "on tensor allocations and operator calls" plus lightweight metadata.
+//! This module is that interposition surface: a [`Session`] facade over the
+//! DTR runtime plus an RAII [`Tensor`] handle that owns a refcount on its
+//! underlying storage. `Clone` retains, `Drop` releases through the
+//! configured `DeallocPolicy`, [`Session::call`] interposes every operator
+//! (sizes from the executor manifest, costs from the analytic model), and
+//! [`Session::constant`] / [`Session::get`] handle host I/O. User code
+//! cannot leak pins, double-release, or touch raw ids — and because the
+//! program drives the session *online*, arbitrary dynamic models (LSTMs
+//! over data-dependent sequence lengths, per-sample tree shapes — see
+//! [`crate::exec::dynamic`]) run under a budget with zero ahead-of-time
+//! planning, which no static checkpointing planner can do.
+//!
+//! ## Train your own model under a budget
+//!
+//! Pick an executor (the hermetic interpreter here), choose a budget, and
+//! issue operator calls; DTR evicts and rematerializes behind the API:
+//!
+//! ```
+//! use dtr::api::Session;
+//! use dtr::dtr::{Config, Heuristic};
+//! use dtr::runtime::{HostTensor, InterpExecutor, RnnConfig};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // One LSTM cell + readout, trained under a 64 KiB budget.
+//! let rnn = RnnConfig { batch: 2, input: 4, hidden: 8, classes: 4 };
+//! let cfg = Config { budget: 64 << 10, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+//! let s = Session::new(Box::new(InterpExecutor::rnn(rnn)?), cfg);
+//!
+//! // Constants: weights and the data batch (pinned, never evicted).
+//! let wx = s.constant(HostTensor::zeros(&[4, 32])); // [input, 4*hidden]
+//! let wh = s.constant(HostTensor::zeros(&[8, 32]));
+//! let b = s.constant(HostTensor::zeros(&[1, 32]));
+//! let w_out = s.constant(HostTensor::zeros(&[8, 4]));
+//! let x = s.constant(HostTensor::zeros(&[2, 4]));
+//! let h0 = s.constant(HostTensor::zeros(&[2, 8]));
+//! let c0 = s.constant(HostTensor::zeros(&[2, 8]));
+//! let tgt = s.constant(HostTensor::zeros(&[2]));
+//!
+//! // Forward, loss, backward, update — every call interposed by DTR.
+//! let hc = s.call("lstm_cell_fwd", &[&x, &h0, &c0, &wx, &wh, &b])?;
+//! let loss = s.call("rnn_loss_fwd", &[&hc[0], &w_out, &tgt])?;
+//! let grads = s.call("rnn_loss_bwd", &[&hc[0], &w_out, &tgt])?;
+//! let updated = s.call("sgd_wout", &[&w_out, &grads[1]])?;
+//!
+//! println!("loss = {}", s.scalar(&loss[0])?); // remats transparently if evicted
+//! let _new_weights = s.get(&updated[0])?;     // read back for the next step
+//! s.check_invariants()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Dropping a `Tensor` releases its reference — when the last handle goes,
+//! the deallocation policy runs (eager eviction frees the buffer
+//! immediately). Cloning a handle is the log format's COPY. There is no
+//! way to forget a release or issue one twice.
+//!
+//! For accounting-only studies (no executor, explicit sizes) use
+//! [`Session::accounting`] with [`Session::call_sized`]; its DTR decisions
+//! are bit-identical to a real executor issuing the same op stream.
+
+mod backend;
+mod session;
+mod tensor;
+
+pub use backend::{ExecBackend, SharedExecutor};
+pub use session::{OpContract, Session};
+pub use tensor::Tensor;

@@ -1,0 +1,239 @@
+//! The `Session` facade: the single interposition point between user
+//! programs and the DTR runtime.
+//!
+//! A session wraps a `Runtime<B>` behind shared ownership so that every
+//! [`Tensor`] handle it hands out can route its `Drop` back through the
+//! runtime's deallocation policy. User code never sees raw `TensorId`s,
+//! `OutSpec`s, or the `Runtime` itself: operator interposition happens in
+//! [`Session::call`] (sizes and costs derived from the executor's manifest)
+//! or [`Session::call_sized`] (explicit sizes, for accounting workloads),
+//! and host I/O happens in [`Session::constant`] / [`Session::get`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::backend::{ExecBackend, SharedExecutor};
+use super::tensor::{Releaser, Tensor};
+use crate::dtr::{Backend, Config, NullBackend, OutSpec, Runtime, Stats, TensorId};
+use crate::runtime::executor::{analytic_cost, HostTensor};
+use crate::runtime::{Executor, Manifest};
+
+/// The op/shape/cost contract a session serves, precomputed once per
+/// executor and shared (cheap `Rc` clones) across the per-step sessions of
+/// a long-lived driver — building it is O(op-set), which must not recur in
+/// every step's wall-clock window.
+#[derive(Clone)]
+pub struct OpContract {
+    manifest: Rc<Manifest>,
+    op_cost: Rc<HashMap<String, u64>>,
+}
+
+impl OpContract {
+    /// Derive the contract from an executor's manifest, with deterministic
+    /// analytic per-op costs.
+    pub fn of(exec: &SharedExecutor) -> OpContract {
+        let manifest = exec.borrow().manifest().clone();
+        let mut op_cost = HashMap::new();
+        for (name, op) in &manifest.ops {
+            op_cost.insert(name.clone(), analytic_cost(name, op, &manifest.config));
+        }
+        OpContract { manifest: Rc::new(manifest), op_cost: Rc::new(op_cost) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+/// A DTR session: one runtime, one budget, one stream of interposed
+/// operator calls. See the module docs of [`crate::api`] for a complete
+/// training example.
+pub struct Session<B: Backend + 'static> {
+    rt: Rc<RefCell<Runtime<B>>>,
+    /// The op/shape contract, present on executor-backed sessions; `None`
+    /// for accounting sessions driven via [`Session::call_sized`].
+    manifest: Option<Rc<Manifest>>,
+    /// Deterministic analytic per-op costs derived from the manifest.
+    op_cost: Rc<HashMap<String, u64>>,
+}
+
+impl<B: Backend + 'static> Session<B> {
+    fn from_runtime(
+        rt: Runtime<B>,
+        manifest: Option<Rc<Manifest>>,
+        op_cost: Rc<HashMap<String, u64>>,
+    ) -> Session<B> {
+        Session { rt: Rc::new(RefCell::new(rt)), manifest, op_cost }
+    }
+
+    fn wrap(&self, id: TensorId) -> Tensor {
+        Tensor::from_parts(Rc::clone(&self.rt) as Rc<dyn Releaser>, id)
+    }
+
+    /// Register a pinned, never-rematerializable constant of `bytes` bytes
+    /// (weights and inputs in accounting workloads).
+    pub fn constant_sized(&self, bytes: u64) -> Tensor {
+        let id = self.rt.borrow_mut().constant(bytes);
+        self.wrap(id)
+    }
+
+    /// Interpose an operator call with explicit cost and output sizes — the
+    /// raw, size-level interface used by accounting sessions (simulation
+    /// logs) where no executor manifest describes the op set.
+    pub fn call_sized(
+        &self,
+        op: &str,
+        cost: u64,
+        inputs: &[&Tensor],
+        out_bytes: &[u64],
+    ) -> Result<Vec<Tensor>> {
+        let ids: Vec<TensorId> = inputs.iter().map(|t| t.id()).collect();
+        let specs: Vec<OutSpec> = out_bytes.iter().map(|&b| OutSpec::sized(b)).collect();
+        let outs = self.rt.borrow_mut().call(op, cost, &ids, &specs)?;
+        Ok(outs.into_iter().map(|id| self.wrap(id)).collect())
+    }
+
+    /// Rematerialize (if evicted) and touch a tensor — the prototype's
+    /// `decheckpoint()`.
+    pub fn touch(&self, t: &Tensor) -> Result<()> {
+        self.rt.borrow_mut().access(t.id())
+    }
+
+    /// Is the tensor currently materialized?
+    pub fn is_defined(&self, t: &Tensor) -> bool {
+        self.rt.borrow().is_defined(t.id())
+    }
+
+    /// Output condition (Appendix C.6): rematerialize and pin everything
+    /// still referenced by live handles.
+    pub fn pin_live(&self) -> Result<()> {
+        self.rt.borrow_mut().pin_live_outputs()
+    }
+
+    pub fn stats(&self) -> Stats {
+        self.rt.borrow().stats.clone()
+    }
+
+    /// Currently resident bytes.
+    pub fn memory(&self) -> u64 {
+        self.rt.borrow().stats.memory
+    }
+
+    pub fn peak_memory(&self) -> u64 {
+        self.rt.borrow().stats.peak_memory
+    }
+
+    /// Verify the runtime's internal accounting.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.rt.borrow().check_invariants()
+    }
+}
+
+impl Session<NullBackend> {
+    /// Accounting-only session: DTR decisions (evictions, remats, peak
+    /// memory) without any executor. Drive it with [`Session::call_sized`];
+    /// its stats must be identical to a real-executor session issuing the
+    /// same op stream (the backend-equivalence property).
+    pub fn accounting(cfg: Config) -> Session<NullBackend> {
+        Session::from_runtime(Runtime::new(cfg, NullBackend::new()), None, Rc::new(HashMap::new()))
+    }
+}
+
+impl Session<ExecBackend> {
+    /// A session owning its executor.
+    pub fn new(exec: Box<dyn Executor>, cfg: Config) -> Session<ExecBackend> {
+        Session::over(Rc::new(RefCell::new(exec)), cfg)
+    }
+
+    /// A session over a shared executor, deriving a fresh [`OpContract`].
+    /// Long-lived drivers that build one session per training step should
+    /// precompute the contract once and use [`Session::with_contract`].
+    pub fn over(exec: SharedExecutor, cfg: Config) -> Session<ExecBackend> {
+        let contract = OpContract::of(&exec);
+        Session::with_contract(exec, cfg, &contract)
+    }
+
+    /// A session over a shared executor and a precomputed contract — the
+    /// per-step constructor: the executor (compiled state, scratch buffers)
+    /// and the contract persist across steps; only the runtime is fresh.
+    pub fn with_contract(
+        exec: SharedExecutor,
+        cfg: Config,
+        contract: &OpContract,
+    ) -> Session<ExecBackend> {
+        let backend = ExecBackend::new(exec);
+        Session::from_runtime(
+            Runtime::new(cfg, backend),
+            Some(Rc::clone(&contract.manifest)),
+            Rc::clone(&contract.op_cost),
+        )
+    }
+
+    /// The op/shape contract this session serves.
+    pub fn manifest(&self) -> &Manifest {
+        self.manifest.as_deref().expect("executor-backed sessions always carry a manifest")
+    }
+
+    /// Deterministic analytic cost of a manifest op.
+    pub fn op_cost(&self, op: &str) -> u64 {
+        self.op_cost.get(op).copied().unwrap_or(1)
+    }
+
+    /// Register a constant with its host value (weights, data batches,
+    /// optimizer state).
+    pub fn constant(&self, v: HostTensor) -> Tensor {
+        let mut rt = self.rt.borrow_mut();
+        let id = rt.constant(v.size_bytes());
+        rt.backend_mut().put(id, v);
+        drop(rt);
+        self.wrap(id)
+    }
+
+    /// Interpose an operator call: output sizes come from the manifest
+    /// signature and the cost from the analytic model, so callers name the
+    /// op and pass inputs — nothing else.
+    pub fn call(&self, op: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let specs: Vec<OutSpec> = {
+            let sig = self.manifest().op(op)?;
+            anyhow::ensure!(
+                inputs.len() == sig.inputs.len(),
+                "{op}: {} inputs given, signature expects {}",
+                inputs.len(),
+                sig.inputs.len()
+            );
+            sig.outputs.iter().map(|o| OutSpec::sized(o.bytes())).collect()
+        };
+        let cost = self.op_cost(op);
+        let ids: Vec<TensorId> = inputs.iter().map(|t| t.id()).collect();
+        let outs = self.rt.borrow_mut().call(op, cost, &ids, &specs)?;
+        Ok(outs.into_iter().map(|id| self.wrap(id)).collect())
+    }
+
+    /// Read a tensor's host value, transparently rematerializing it first
+    /// if DTR evicted it.
+    pub fn get(&self, t: &Tensor) -> Result<HostTensor> {
+        self.rt.borrow_mut().access(t.id())?;
+        let rt = self.rt.borrow();
+        rt.backend()
+            .get(t.id())
+            .cloned()
+            .with_context(|| format!("no buffer for {t:?}"))
+    }
+
+    /// Convenience: read a scalar (loss) value.
+    pub fn scalar(&self, t: &Tensor) -> Result<f32> {
+        Ok(self.get(t)?.data[0])
+    }
+
+    /// Wall time spent executing operators so far (Fig. 4 "operator time").
+    pub fn exec_ns(&self) -> u64 {
+        self.rt.borrow().backend().exec_ns
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        self.rt.borrow().backend().exec_count
+    }
+}

@@ -1,0 +1,75 @@
+//! The RAII tensor handle: the only way user code refers to a DTR-managed
+//! value. A `Tensor` owns exactly one external reference on its underlying
+//! storage — `Clone` retains (the log format's COPY), `Drop` releases
+//! (RELEASE, routed through the configured `DeallocPolicy`). Raw
+//! [`TensorId`]s never escape `dtr::api`, so callers cannot leak pins,
+//! double-release, or touch another session's ids.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::rc::Rc;
+
+use crate::dtr::{Backend, Runtime, TensorId};
+
+/// Type-erased refcount sink: lets `Tensor` stay non-generic while the
+/// session it came from wraps a `Runtime<B>` for any backend `B`.
+pub(crate) trait Releaser {
+    fn retain_id(&self, t: TensorId);
+    fn release_id(&self, t: TensorId);
+}
+
+impl<B: Backend> Releaser for RefCell<Runtime<B>> {
+    fn retain_id(&self, t: TensorId) {
+        self.borrow_mut().retain(t);
+    }
+
+    fn release_id(&self, t: TensorId) {
+        // `try_borrow_mut` only fails while a session call is unwinding with
+        // the runtime borrowed; skipping the release then merely leaks a
+        // refcount in a runtime that is already being torn down.
+        if let Ok(mut rt) = self.try_borrow_mut() {
+            rt.release(t);
+        }
+    }
+}
+
+/// An owned reference to a DTR-managed tensor.
+///
+/// Dropping the last handle to a storage triggers the session's
+/// deallocation policy (eager eviction by default); cloning increments the
+/// external reference count. Handles keep the underlying runtime alive, so
+/// they may safely outlive the [`super::Session`] that created them.
+pub struct Tensor {
+    id: TensorId,
+    rt: Rc<dyn Releaser>,
+}
+
+impl Tensor {
+    pub(crate) fn from_parts(rt: Rc<dyn Releaser>, id: TensorId) -> Tensor {
+        Tensor { id, rt }
+    }
+
+    /// The raw id, visible only inside `dtr::api`.
+    pub(crate) fn id(&self) -> TensorId {
+        self.id
+    }
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Tensor {
+        self.rt.retain_id(self.id);
+        Tensor { id: self.id, rt: Rc::clone(&self.rt) }
+    }
+}
+
+impl Drop for Tensor {
+    fn drop(&mut self) {
+        self.rt.release_id(self.id);
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor({})", self.id)
+    }
+}

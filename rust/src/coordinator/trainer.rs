@@ -1,6 +1,8 @@
 //! The training loop: budget resolution, step iteration, metrics, and the
 //! loss-curve record — the E2E driver behind `examples/train_transformer.rs`
-//! and `dtr-repro train`.
+//! and `dtr-repro train`. Sits entirely on the `Engine`, which drives every
+//! step through the `dtr::api` session surface (no raw tensor ids or
+//! manual releases anywhere in the coordinator stack).
 
 use anyhow::Result;
 

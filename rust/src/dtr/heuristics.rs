@@ -96,18 +96,12 @@ impl Heuristic {
         }
     }
 
+    /// Parse a heuristic name; thin `Option` wrapper over the [`FromStr`]
+    /// impl below, which is the single source of truth shared by CLI flags
+    /// and CSV output (it round-trips [`Heuristic::name`] exactly,
+    /// including the `h_param_*` ablation-grid names).
     pub fn parse(name: &str) -> Option<Heuristic> {
-        Some(match name {
-            "h_dtr" | "dtr" => Heuristic::dtr(),
-            "h_dtr_eq" | "dtr_eq" | "eq" => Heuristic::dtr_eq(),
-            "h_dtr_local" | "dtr_local" | "local" => Heuristic::dtr_local(),
-            "h_lru" | "lru" => Heuristic::lru(),
-            "h_size" | "size" => Heuristic::size(),
-            "h_msps" | "msps" => Heuristic::Msps,
-            "h_rand" | "rand" | "random" => Heuristic::Random,
-            "h_estar_count" | "estar_count" => Heuristic::EStarCount,
-            _ => return None,
-        })
+        name.parse().ok()
     }
 
     /// All heuristics compared in Fig. 2.
@@ -140,6 +134,57 @@ impl Heuristic {
     /// Does this heuristic need union-find evicted-component maintenance?
     pub fn needs_uf(&self) -> bool {
         matches!(self, Heuristic::Param(p) if p.cost == CostKind::EqClass)
+    }
+}
+
+impl std::str::FromStr for Heuristic {
+    type Err = String;
+
+    /// Exact inverse of [`Heuristic::name`] (plus a few short CLI aliases):
+    /// every name `name()` can emit — the canonical five, `h_msps`,
+    /// `h_rand`, `h_estar_count`, and the full `h_param_c*_m*_s*` ablation
+    /// grid — parses back to the same variant.
+    fn from_str(s: &str) -> Result<Heuristic, String> {
+        let known = match s {
+            "h_dtr" | "dtr" => Some(Heuristic::dtr()),
+            "h_dtr_eq" | "dtr_eq" | "eq" => Some(Heuristic::dtr_eq()),
+            "h_dtr_local" | "dtr_local" | "local" => Some(Heuristic::dtr_local()),
+            "h_lru" | "lru" => Some(Heuristic::lru()),
+            "h_size" | "size" => Some(Heuristic::size()),
+            "h_msps" | "msps" => Some(Heuristic::Msps),
+            "h_rand" | "rand" | "random" => Some(Heuristic::Random),
+            "h_estar_count" | "estar_count" => Some(Heuristic::EStarCount),
+            _ => None,
+        };
+        if let Some(h) = known {
+            return Ok(h);
+        }
+        if let Some(rest) = s.strip_prefix("h_param_c") {
+            let (cost_s, rest) = rest
+                .split_once("_m")
+                .ok_or_else(|| format!("malformed parameterized heuristic '{s}'"))?;
+            let (m_s, s_s) = rest
+                .split_once("_s")
+                .ok_or_else(|| format!("malformed parameterized heuristic '{s}'"))?;
+            let cost = match cost_s {
+                "estar" => CostKind::EStar,
+                "eq" => CostKind::EqClass,
+                "local" => CostKind::Local,
+                "no" => CostKind::NoCost,
+                other => return Err(format!("unknown cost kind '{other}' in '{s}'")),
+            };
+            let flag = |v: &str| match v {
+                "yes" => Ok(true),
+                "no" => Ok(false),
+                other => Err(format!("expected yes/no, got '{other}' in '{s}'")),
+            };
+            return Ok(Heuristic::Param(ParamSpec {
+                cost,
+                use_size: flag(m_s)?,
+                use_staleness: flag(s_s)?,
+            }));
+        }
+        Err(format!("unknown heuristic '{s}'"))
     }
 }
 
@@ -345,6 +390,26 @@ mod tests {
         for h in Heuristic::fig2_set() {
             assert_eq!(Heuristic::parse(&h.name()), Some(h), "{}", h.name());
         }
+    }
+
+    /// `FromStr` must invert `name()` over *every* variant: the canonical
+    /// set, the extras, and the full 16-cell ablation grid (whose
+    /// non-canonical cells use the `h_param_c*_m*_s*` scheme).
+    #[test]
+    fn fromstr_roundtrips_every_variant_name() {
+        let mut all = Heuristic::fig2_set();
+        all.extend(Heuristic::ablation_grid());
+        all.push(Heuristic::EStarCount);
+        for h in all {
+            let name = h.name();
+            let parsed: Heuristic = name.parse().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(parsed, h, "{name} did not round-trip");
+            // And the round-trip is stable: name -> parse -> name is fixed.
+            assert_eq!(parsed.name(), name);
+        }
+        assert!("h_param_cbogus_myes_syes".parse::<Heuristic>().is_err());
+        assert!("h_param_ceq_mmaybe_syes".parse::<Heuristic>().is_err());
+        assert!("nonsense".parse::<Heuristic>().is_err());
     }
 
     #[test]

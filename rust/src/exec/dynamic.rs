@@ -1,0 +1,711 @@
+//! Dynamic-model training on the real executor — the paper's headline
+//! capability (Sec. 1, Sec. 4.1): workloads whose computation graph is
+//! *data-dependent*, which no static checkpointing planner (Checkmate's
+//! ILP, optimal chain schedules) can schedule ahead of time, and which DTR
+//! handles online through plain operator interposition.
+//!
+//! Two trainers, both driven purely through the `dtr::api` [`Session`]:
+//!
+//! * [`LstmTrainer`] — an LSTM unrolled over a *per-batch random sequence
+//!   length*; BPTT re-walks exactly the timesteps the data demanded.
+//! * [`TreeLstmTrainer`] — a TreeLSTM over a *per-sample random tree
+//!   shape*; forward and backward recurse over whatever topology this
+//!   batch drew.
+//!
+//! Both train a synthetic but genuinely learnable classification task
+//! (inputs carry a one-hot class signal; the readout and recurrent weights
+//! must align to separate the classes), so the loss provably descends —
+//! under any feasible budget, bitwise-identically to the unbudgeted run,
+//! because rematerialization is exact replay of pure ops.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::api::{ExecBackend, OpContract, Session, SharedExecutor, Tensor};
+use crate::dtr;
+use crate::runtime::executor::{randn_host, Executor, HostTensor};
+use crate::runtime::{InterpExecutor, NullExecutor, RnnConfig};
+use crate::util::rng::Rng;
+
+/// Default weight-init seeds (the data stream derives from them).
+pub const LSTM_SEED: u64 = 0x15D1;
+pub const TREE_SEED: u64 = 0x7133;
+
+const INIT_SCALE: f32 = 0.2;
+
+/// Result of one dynamic training step.
+#[derive(Debug, Clone)]
+pub struct DynStepResult {
+    pub loss: f32,
+    pub stats: dtr::Stats,
+    /// Bytes pinned by this step's constants (weights + data batch): the
+    /// per-step feasibility floor. Dynamic shapes make this vary by step.
+    pub pinned_bytes: u64,
+    /// Size of the dynamic structure this step drew: timesteps for the
+    /// LSTM, leaves for the TreeLSTM.
+    pub units: u64,
+    pub wall_ns: u64,
+    pub exec_ns: u64,
+}
+
+/// Budget at `pct`% of the headroom between a measured pinned floor and a
+/// measured unbudgeted peak (the same formula `Engine::budgets_from_peak`
+/// uses, with the floor taken over the dynamic envelope).
+pub fn headroom_budget(peak: u64, floor: u64, pct: u64) -> u64 {
+    floor + peak.saturating_sub(floor) * pct / 100
+}
+
+fn accumulate(
+    s: &Session<ExecBackend>,
+    op: &str,
+    acc: Option<Tensor>,
+    g: Tensor,
+) -> Result<Tensor> {
+    match acc {
+        None => Ok(g),
+        Some(a) => Ok(s.call(op, &[&a, &g])?.remove(0)), // a and g release here
+    }
+}
+
+// ------------------------------------------------------------------- LSTM
+
+/// LSTM over data-dependent sequence lengths, trained with SGD through a
+/// fresh DTR session per step.
+pub struct LstmTrainer {
+    exec: SharedExecutor,
+    contract: OpContract,
+    pub rnn: RnnConfig,
+    pub dtr_cfg: dtr::Config,
+    /// Per-batch sequence length is uniform in `min_len..=max_len`.
+    pub min_len: usize,
+    pub max_len: usize,
+    wx: HostTensor,
+    wh: HostTensor,
+    b: HostTensor,
+    w_out: HostTensor,
+    step: u64,
+    data_rng: Rng,
+}
+
+impl LstmTrainer {
+    pub fn new(
+        exec: Box<dyn Executor>,
+        rnn: RnnConfig,
+        dtr_cfg: dtr::Config,
+        seed: u64,
+    ) -> Result<LstmTrainer> {
+        rnn.validate()?;
+        let (i, h) = (rnn.input, rnn.hidden);
+        let mut wrng = Rng::new(seed);
+        let wx = randn_host(&mut wrng, &[i, 4 * h], INIT_SCALE);
+        let wh = randn_host(&mut wrng, &[h, 4 * h], INIT_SCALE);
+        let w_out = randn_host(&mut wrng, &[h, rnn.classes], INIT_SCALE);
+        // Zero biases except the forget gate at 1.0 (standard LSTM init).
+        let mut b = HostTensor::zeros(&[1, 4 * h]);
+        for k in h..2 * h {
+            b.data[k] = 1.0;
+        }
+        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let contract = OpContract::of(&exec);
+        Ok(LstmTrainer {
+            exec,
+            contract,
+            rnn,
+            dtr_cfg,
+            min_len: 3,
+            max_len: 10,
+            wx,
+            wh,
+            b,
+            w_out,
+            step: 0,
+            data_rng: Rng::new(seed.wrapping_add(0xDA7A)),
+        })
+    }
+
+    /// Hermetic trainer over the pure-Rust interpreter.
+    pub fn interp(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<LstmTrainer> {
+        LstmTrainer::new(Box::new(InterpExecutor::rnn(rnn)?), rnn, dtr_cfg, LSTM_SEED)
+    }
+
+    /// Accounting-only trainer (zero buffers): DTR stats must match the
+    /// interpreter's exactly.
+    pub fn null(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<LstmTrainer> {
+        LstmTrainer::new(Box::new(NullExecutor::rnn(rnn)?), rnn, dtr_cfg, LSTM_SEED)
+    }
+
+    /// Draw a batch: a random sequence length (the dynamism) and a one-hot
+    /// class signal per batch row, constant across timesteps.
+    fn sample_batch(
+        rnn: RnnConfig,
+        min_len: usize,
+        max_len: usize,
+        rng: &mut Rng,
+    ) -> (usize, HostTensor, HostTensor) {
+        let len = (min_len + rng.below((max_len - min_len + 1) as u64) as usize).max(1);
+        let mut ys = Vec::with_capacity(rnn.batch);
+        for _ in 0..rnn.batch {
+            ys.push(rng.below(rnn.classes as u64) as usize);
+        }
+        let mut x = HostTensor::zeros(&[rnn.batch, rnn.input]);
+        for (bi, &y) in ys.iter().enumerate() {
+            x.data[bi * rnn.input + y % rnn.input] = 1.0;
+        }
+        let tgt = HostTensor::new(vec![rnn.batch], ys.iter().map(|&y| y as f32).collect());
+        (len, x, tgt)
+    }
+
+    /// One BPTT training step under DTR. The unroll length is decided by
+    /// the batch, *after* the budget was fixed — the scenario static
+    /// planners cannot handle.
+    pub fn train_step(&mut self) -> Result<DynStepResult> {
+        let wall0 = Instant::now();
+        self.step += 1;
+        let rnn = self.rnn;
+        let (seq_len, x, tgt) =
+            Self::sample_batch(rnn, self.min_len, self.max_len, &mut self.data_rng);
+
+        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+
+        // --- constants: weights + per-timestep data + BPTT seeds ---
+        let wx = s.constant(self.wx.clone());
+        let wh = s.constant(self.wh.clone());
+        let bias = s.constant(self.b.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let tgt_t = s.constant(tgt);
+        let xs: Vec<Tensor> = (0..seq_len).map(|_| s.constant(x.clone())).collect();
+        let h0 = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        let c0 = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        let dc0 = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        let pinned = s.memory();
+
+        // --- forward over however many steps the data demanded ---
+        let mut hs: Vec<Tensor> = Vec::with_capacity(seq_len + 1);
+        let mut cs: Vec<Tensor> = Vec::with_capacity(seq_len + 1);
+        hs.push(h0);
+        cs.push(c0);
+        for t in 0..seq_len {
+            let mut outs = s
+                .call("lstm_cell_fwd", &[&xs[t], &hs[t], &cs[t], &wx, &wh, &bias])?
+                .into_iter();
+            hs.push(outs.next().unwrap());
+            cs.push(outs.next().unwrap());
+        }
+        let loss_t = s.call("rnn_loss_fwd", &[hs.last().unwrap(), &w_out, &tgt_t])?.remove(0);
+        let loss = s.scalar(&loss_t)?;
+        drop(loss_t);
+
+        // --- backward through time ---
+        let mut louts = s.call("rnn_loss_bwd", &[hs.last().unwrap(), &w_out, &tgt_t])?.into_iter();
+        let mut dh = louts.next().unwrap();
+        let dw_out = louts.next().unwrap();
+        let mut dc = dc0;
+        let mut gwx: Option<Tensor> = None;
+        let mut gwh: Option<Tensor> = None;
+        let mut gb: Option<Tensor> = None;
+        for t in (0..seq_len).rev() {
+            // h_{t+1}/c_{t+1} had their last consumer in the previous
+            // backward iteration (or the loss); dropping them releases.
+            drop(hs.pop());
+            drop(cs.pop());
+            let mut outs = s
+                .call(
+                    "lstm_cell_bwd",
+                    &[&xs[t], hs.last().unwrap(), cs.last().unwrap(), &wx, &wh, &bias, &dh, &dc],
+                )?
+                .into_iter();
+            let _dx = outs.next().unwrap(); // inputs are pinned data: gradient unused
+            dh = outs.next().unwrap(); // reassignment releases the consumed grads
+            dc = outs.next().unwrap();
+            gwx = Some(accumulate(&s, "acc_wx", gwx, outs.next().unwrap())?);
+            gwh = Some(accumulate(&s, "acc_wh", gwh, outs.next().unwrap())?);
+            gb = Some(accumulate(&s, "acc_b", gb, outs.next().unwrap())?);
+        }
+        drop(dh);
+        drop(dc);
+
+        // --- SGD updates, read back immediately (decheckpoint while hot) ---
+        let gwx = gwx.expect("at least one timestep");
+        let gwh = gwh.expect("at least one timestep");
+        let gb = gb.expect("at least one timestep");
+        let up = s.call("sgd_wx", &[&wx, &gwx])?.remove(0);
+        self.wx = s.get(&up)?;
+        drop(up);
+        drop(gwx);
+        let up = s.call("sgd_wh", &[&wh, &gwh])?.remove(0);
+        self.wh = s.get(&up)?;
+        drop(up);
+        drop(gwh);
+        let up = s.call("sgd_b", &[&bias, &gb])?.remove(0);
+        self.b = s.get(&up)?;
+        drop(up);
+        drop(gb);
+        let up = s.call("sgd_wout", &[&w_out, &dw_out])?.remove(0);
+        self.w_out = s.get(&up)?;
+        drop(up);
+        drop(dw_out);
+
+        s.check_invariants()?;
+        Ok(DynStepResult {
+            loss,
+            stats: s.stats(),
+            pinned_bytes: pinned,
+            units: seq_len as u64,
+            wall_ns: wall0.elapsed().as_nanos() as u64,
+            exec_ns: s.exec_ns(),
+        })
+    }
+
+    /// Forward-only loss on a fixed probe batch (deterministic in
+    /// `probe_seed`), run unbudgeted: a noise-free progress measure across
+    /// varying per-step shapes.
+    pub fn probe_loss(&self, probe_seed: u64) -> Result<f32> {
+        let rnn = self.rnn;
+        let mut rng = Rng::new(probe_seed);
+        let (seq_len, x, tgt) = Self::sample_batch(rnn, self.min_len, self.max_len, &mut rng);
+        let cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        let s = Session::with_contract(Rc::clone(&self.exec), cfg, &self.contract);
+        let wx = s.constant(self.wx.clone());
+        let wh = s.constant(self.wh.clone());
+        let bias = s.constant(self.b.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let tgt_t = s.constant(tgt);
+        let x_t = s.constant(x);
+        let mut h = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        let mut c = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        for _ in 0..seq_len {
+            let mut outs =
+                s.call("lstm_cell_fwd", &[&x_t, &h, &c, &wx, &wh, &bias])?.into_iter();
+            h = outs.next().unwrap();
+            c = outs.next().unwrap();
+        }
+        let loss_t = s.call("rnn_loss_fwd", &[&h, &w_out, &tgt_t])?.remove(0);
+        s.scalar(&loss_t)
+    }
+
+    /// Dry-run `steps` unbudgeted steps on a throwaway copy of the state,
+    /// returning the max peak and max pinned floor over the dynamic
+    /// envelope — the inputs to [`headroom_budget`].
+    pub fn measure_envelope(&mut self, steps: usize) -> Result<(u64, u64)> {
+        let saved = (
+            self.wx.clone(),
+            self.wh.clone(),
+            self.b.clone(),
+            self.w_out.clone(),
+            self.step,
+            self.data_rng.clone(),
+            self.dtr_cfg.clone(),
+        );
+        self.dtr_cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        let mut peak = 0u64;
+        let mut floor = 0u64;
+        let mut result = Ok(());
+        for _ in 0..steps {
+            match self.train_step() {
+                Ok(r) => {
+                    peak = peak.max(r.stats.peak_memory);
+                    floor = floor.max(r.pinned_bytes);
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+        }
+        (self.wx, self.wh, self.b, self.w_out, self.step, self.data_rng, self.dtr_cfg) = saved;
+        result.map(|()| (peak, floor))
+    }
+}
+
+// --------------------------------------------------------------- TreeLSTM
+
+/// Random binary tree shape — per *sample*, not per architecture.
+#[derive(Debug, Clone)]
+pub enum TreeShape {
+    Leaf,
+    Comb(Box<TreeShape>, Box<TreeShape>),
+}
+
+impl TreeShape {
+    pub fn leaves(&self) -> u64 {
+        match self {
+            TreeShape::Leaf => 1,
+            TreeShape::Comb(l, r) => l.leaves() + r.leaves(),
+        }
+    }
+}
+
+/// Per-node forward state kept for the backward sweep: each node's output
+/// handle plus its children (whose hidden states the self-contained
+/// backward cell consumes).
+enum EvalNode {
+    Leaf { h: Tensor },
+    Comb { h: Tensor, l: Box<EvalNode>, r: Box<EvalNode> },
+}
+
+impl EvalNode {
+    fn h(&self) -> &Tensor {
+        match self {
+            EvalNode::Leaf { h } | EvalNode::Comb { h, .. } => h,
+        }
+    }
+}
+
+struct TreeGrads {
+    wc: Option<Tensor>,
+    wl: Option<Tensor>,
+    wr: Option<Tensor>,
+}
+
+/// TreeLSTM over per-sample random tree shapes, trained with SGD through a
+/// fresh DTR session per step.
+pub struct TreeLstmTrainer {
+    exec: SharedExecutor,
+    contract: OpContract,
+    pub rnn: RnnConfig,
+    pub dtr_cfg: dtr::Config,
+    /// Trees are random binary trees of at most this depth...
+    pub max_depth: usize,
+    /// ...splitting at each node with this probability.
+    pub split_p: f64,
+    wc: HostTensor,
+    wl: HostTensor,
+    wr: HostTensor,
+    w_out: HostTensor,
+    step: u64,
+    data_rng: Rng,
+}
+
+impl TreeLstmTrainer {
+    pub fn new(
+        exec: Box<dyn Executor>,
+        rnn: RnnConfig,
+        dtr_cfg: dtr::Config,
+        seed: u64,
+    ) -> Result<TreeLstmTrainer> {
+        rnn.validate()?;
+        let (i, h) = (rnn.input, rnn.hidden);
+        let mut wrng = Rng::new(seed);
+        let wc = randn_host(&mut wrng, &[i, h], INIT_SCALE);
+        let wl = randn_host(&mut wrng, &[h, h], INIT_SCALE);
+        let wr = randn_host(&mut wrng, &[h, h], INIT_SCALE);
+        let w_out = randn_host(&mut wrng, &[h, rnn.classes], INIT_SCALE);
+        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let contract = OpContract::of(&exec);
+        Ok(TreeLstmTrainer {
+            exec,
+            contract,
+            rnn,
+            dtr_cfg,
+            max_depth: 4,
+            split_p: 0.75,
+            wc,
+            wl,
+            wr,
+            w_out,
+            step: 0,
+            data_rng: Rng::new(seed.wrapping_add(0xDA7A)),
+        })
+    }
+
+    pub fn interp(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<TreeLstmTrainer> {
+        TreeLstmTrainer::new(Box::new(InterpExecutor::rnn(rnn)?), rnn, dtr_cfg, TREE_SEED)
+    }
+
+    pub fn null(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<TreeLstmTrainer> {
+        TreeLstmTrainer::new(Box::new(NullExecutor::rnn(rnn)?), rnn, dtr_cfg, TREE_SEED)
+    }
+
+    fn gen_tree(rng: &mut Rng, depth: usize, split_p: f64) -> TreeShape {
+        if depth > 0 && rng.chance(split_p) {
+            let l = Self::gen_tree(rng, depth - 1, split_p);
+            let r = Self::gen_tree(rng, depth - 1, split_p);
+            TreeShape::Comb(Box::new(l), Box::new(r))
+        } else {
+            TreeShape::Leaf
+        }
+    }
+
+    /// Draw a batch: per-row class signal plus this step's random tree.
+    fn sample_batch(
+        rnn: RnnConfig,
+        max_depth: usize,
+        split_p: f64,
+        rng: &mut Rng,
+    ) -> (TreeShape, HostTensor, HostTensor) {
+        let mut ys = Vec::with_capacity(rnn.batch);
+        for _ in 0..rnn.batch {
+            ys.push(rng.below(rnn.classes as u64) as usize);
+        }
+        let shape = Self::gen_tree(rng, max_depth, split_p);
+        let mut x = HostTensor::zeros(&[rnn.batch, rnn.input]);
+        for (bi, &y) in ys.iter().enumerate() {
+            x.data[bi * rnn.input + y % rnn.input] = 1.0;
+        }
+        let tgt = HostTensor::new(vec![rnn.batch], ys.iter().map(|&y| y as f32).collect());
+        (shape, x, tgt)
+    }
+
+    fn eval_tree(
+        s: &Session<ExecBackend>,
+        shape: &TreeShape,
+        x: &Tensor,
+        wc: &Tensor,
+        wl: &Tensor,
+        wr: &Tensor,
+    ) -> Result<EvalNode> {
+        match shape {
+            TreeShape::Leaf => {
+                let h = s.call("tree_leaf_fwd", &[x, wc])?.remove(0);
+                Ok(EvalNode::Leaf { h })
+            }
+            TreeShape::Comb(ls, rs) => {
+                let l = Self::eval_tree(s, ls, x, wc, wl, wr)?;
+                let r = Self::eval_tree(s, rs, x, wc, wl, wr)?;
+                let h = s.call("tree_comb_fwd", &[l.h(), r.h(), wl, wr])?.remove(0);
+                Ok(EvalNode::Comb { h, l: Box::new(l), r: Box::new(r) })
+            }
+        }
+    }
+
+    /// Top-down backward sweep: a node's own output handle dies on entry
+    /// (its consumers — parent cell and loss — have already run), then the
+    /// backward cell consumes the children's hidden states, possibly
+    /// rematerializing them.
+    fn backward(
+        s: &Session<ExecBackend>,
+        node: EvalNode,
+        x: &Tensor,
+        wc: &Tensor,
+        wl: &Tensor,
+        wr: &Tensor,
+        dh: Tensor,
+        grads: &mut TreeGrads,
+    ) -> Result<()> {
+        match node {
+            EvalNode::Leaf { h } => {
+                drop(h);
+                let mut outs = s.call("tree_leaf_bwd", &[x, wc, &dh])?.into_iter();
+                drop(dh);
+                let _dx = outs.next().unwrap(); // leaf inputs are pinned data
+                let dwc = outs.next().unwrap();
+                grads.wc = Some(accumulate(s, "acc_wc", grads.wc.take(), dwc)?);
+            }
+            EvalNode::Comb { h, l, r } => {
+                drop(h);
+                let mut outs =
+                    s.call("tree_comb_bwd", &[l.h(), r.h(), wl, wr, &dh])?.into_iter();
+                drop(dh);
+                let dhl = outs.next().unwrap();
+                let dhr = outs.next().unwrap();
+                let dwl = outs.next().unwrap();
+                let dwr = outs.next().unwrap();
+                grads.wl = Some(accumulate(s, "acc_wl", grads.wl.take(), dwl)?);
+                grads.wr = Some(accumulate(s, "acc_wr", grads.wr.take(), dwr)?);
+                Self::backward(s, *l, x, wc, wl, wr, dhl, grads)?;
+                Self::backward(s, *r, x, wc, wl, wr, dhr, grads)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One training step over this batch's random tree.
+    pub fn train_step(&mut self) -> Result<DynStepResult> {
+        let wall0 = Instant::now();
+        self.step += 1;
+        let rnn = self.rnn;
+        let (shape, x, tgt) =
+            Self::sample_batch(rnn, self.max_depth, self.split_p, &mut self.data_rng);
+        let n_leaves = shape.leaves();
+
+        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let wc = s.constant(self.wc.clone());
+        let wl = s.constant(self.wl.clone());
+        let wr = s.constant(self.wr.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let x_t = s.constant(x);
+        let tgt_t = s.constant(tgt);
+        let pinned = s.memory();
+
+        let root = Self::eval_tree(&s, &shape, &x_t, &wc, &wl, &wr)?;
+        let loss_t = s.call("rnn_loss_fwd", &[root.h(), &w_out, &tgt_t])?.remove(0);
+        let loss = s.scalar(&loss_t)?;
+        drop(loss_t);
+
+        let mut louts = s.call("rnn_loss_bwd", &[root.h(), &w_out, &tgt_t])?.into_iter();
+        let dh = louts.next().unwrap();
+        let dw_out = louts.next().unwrap();
+        let mut grads = TreeGrads { wc: None, wl: None, wr: None };
+        Self::backward(&s, root, &x_t, &wc, &wl, &wr, dh, &mut grads)?;
+
+        // SGD updates; wl/wr grads are absent when the tree is one leaf
+        // (mathematically a zero gradient — the update is the identity).
+        if let Some(g) = grads.wc.take() {
+            let up = s.call("sgd_wc", &[&wc, &g])?.remove(0);
+            self.wc = s.get(&up)?;
+        }
+        if let Some(g) = grads.wl.take() {
+            let up = s.call("sgd_wl", &[&wl, &g])?.remove(0);
+            self.wl = s.get(&up)?;
+        }
+        if let Some(g) = grads.wr.take() {
+            let up = s.call("sgd_wr", &[&wr, &g])?.remove(0);
+            self.wr = s.get(&up)?;
+        }
+        let up = s.call("sgd_wout", &[&w_out, &dw_out])?.remove(0);
+        self.w_out = s.get(&up)?;
+        drop(up);
+        drop(dw_out);
+
+        s.check_invariants()?;
+        Ok(DynStepResult {
+            loss,
+            stats: s.stats(),
+            pinned_bytes: pinned,
+            units: n_leaves,
+            wall_ns: wall0.elapsed().as_nanos() as u64,
+            exec_ns: s.exec_ns(),
+        })
+    }
+
+    /// Forward-only loss on a fixed probe tree/batch, run unbudgeted.
+    pub fn probe_loss(&self, probe_seed: u64) -> Result<f32> {
+        let rnn = self.rnn;
+        let mut rng = Rng::new(probe_seed);
+        let (shape, x, tgt) = Self::sample_batch(rnn, self.max_depth, self.split_p, &mut rng);
+        let cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        let s = Session::with_contract(Rc::clone(&self.exec), cfg, &self.contract);
+        let wc = s.constant(self.wc.clone());
+        let wl = s.constant(self.wl.clone());
+        let wr = s.constant(self.wr.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let x_t = s.constant(x);
+        let tgt_t = s.constant(tgt);
+        let root = Self::eval_tree(&s, &shape, &x_t, &wc, &wl, &wr)?;
+        let loss_t = s.call("rnn_loss_fwd", &[root.h(), &w_out, &tgt_t])?.remove(0);
+        s.scalar(&loss_t)
+    }
+
+    /// Dry-run `steps` unbudgeted steps on a throwaway copy of the state,
+    /// returning (max peak, max pinned floor) over the dynamic envelope.
+    pub fn measure_envelope(&mut self, steps: usize) -> Result<(u64, u64)> {
+        let saved = (
+            self.wc.clone(),
+            self.wl.clone(),
+            self.wr.clone(),
+            self.w_out.clone(),
+            self.step,
+            self.data_rng.clone(),
+            self.dtr_cfg.clone(),
+        );
+        self.dtr_cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        let mut peak = 0u64;
+        let mut floor = 0u64;
+        let mut result = Ok(());
+        for _ in 0..steps {
+            match self.train_step() {
+                Ok(r) => {
+                    peak = peak.max(r.stats.peak_memory);
+                    floor = floor.max(r.pinned_bytes);
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+        }
+        (self.wc, self.wl, self.wr, self.w_out, self.step, self.data_rng, self.dtr_cfg) = saved;
+        result.map(|()| (peak, floor))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::Heuristic;
+
+    #[test]
+    fn lstm_sequence_lengths_vary_per_batch() {
+        let mut t = LstmTrainer::interp(RnnConfig::tiny(), dtr::Config::default()).unwrap();
+        let mut lens = Vec::new();
+        for _ in 0..10 {
+            lens.push(t.train_step().unwrap().units);
+        }
+        let mut uniq = lens.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() > 1, "sequence lengths never varied: {lens:?}");
+    }
+
+    #[test]
+    fn lstm_learns_on_fixed_probe() {
+        let mut t = LstmTrainer::interp(RnnConfig::tiny(), dtr::Config::default()).unwrap();
+        let before = t.probe_loss(99).unwrap();
+        for _ in 0..30 {
+            t.train_step().unwrap();
+        }
+        let after = t.probe_loss(99).unwrap();
+        assert!(
+            after < before,
+            "LSTM probe loss did not descend: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn treelstm_shapes_vary_and_probe_descends() {
+        let mut t = TreeLstmTrainer::interp(RnnConfig::tiny(), dtr::Config::default()).unwrap();
+        let before = t.probe_loss(99).unwrap();
+        let mut sizes = Vec::new();
+        for _ in 0..30 {
+            sizes.push(t.train_step().unwrap().units);
+        }
+        let after = t.probe_loss(99).unwrap();
+        let mut uniq = sizes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() > 1, "tree shapes never varied: {sizes:?}");
+        assert!(
+            after < before,
+            "TreeLSTM probe loss did not descend: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn budgeted_lstm_training_is_bitwise_identical() {
+        let mk = |budget: u64| -> LstmTrainer {
+            let cfg = dtr::Config {
+                budget,
+                heuristic: Heuristic::dtr_eq(),
+                ..dtr::Config::default()
+            };
+            LstmTrainer::interp(RnnConfig::tiny(), cfg).unwrap()
+        };
+        let (peak, floor) = mk(u64::MAX).measure_envelope(4).unwrap();
+        for pct in [70, 55] {
+            let mut budgeted = mk(headroom_budget(peak, floor, pct));
+            let Ok(first) = budgeted.train_step() else { continue };
+            let mut losses = vec![first.loss];
+            let mut ok = true;
+            for _ in 0..3 {
+                match budgeted.train_step() {
+                    Ok(r) => losses.push(r.loss),
+                    Err(_) => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                let mut reference = mk(u64::MAX);
+                let expect: Vec<f32> =
+                    (0..4).map(|_| reference.train_step().unwrap().loss).collect();
+                assert_eq!(expect, losses, "budgeted LSTM diverged at {pct}%");
+                return;
+            }
+        }
+        panic!("no budget rung completed");
+    }
+}

@@ -1,14 +1,18 @@
 //! The real execution engine: one transformer-LM training step driven
-//! through the DTR runtime, with buffers owned by a pluggable [`Executor`].
+//! through the DTR runtime via the public `dtr::api` surface, with buffers
+//! owned by a pluggable [`Executor`].
 //!
 //! This is the rust analogue of the paper's PyTorch prototype: every
-//! operator call is interposed by `dtr::Runtime`, which tracks metadata,
-//! evicts under the budget, and transparently re-executes the parent
-//! operator when an evicted activation is needed again (Sec. 5). The weight
-//! update runs inside the step as `adam_*`/`sgd_*` ops; updated parameters
-//! are read back and re-seeded as constants for the next step (the paper's
-//! output condition explicitly permits stepping the optimizer at batch
-//! boundaries, Appendix C.6).
+//! operator call is interposed by an [`crate::api::Session`], which tracks
+//! metadata, evicts under the budget, and transparently re-executes the
+//! parent operator when an evicted activation is needed again (Sec. 5).
+//! Activations and gradients are RAII [`Tensor`] handles — dropping one is
+//! the release event the deallocation policy consumes, so the step body
+//! contains no manual id bookkeeping at all. The weight update runs inside
+//! the step as `adam_*`/`sgd_*` ops; updated parameters are read back and
+//! re-seeded as constants for the next step (the paper's output condition
+//! explicitly permits stepping the optimizer at batch boundaries, Appendix
+//! C.6).
 //!
 //! The engine is backend-agnostic: it speaks to compute exclusively through
 //! the [`Executor`] trait (hermetic interpreter by default; PJRT behind the
@@ -18,72 +22,16 @@
 //! reproducible and DTR's decisions are identical across backends.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::dtr::{self, Backend, OutSpec, Runtime, TensorId};
-use crate::runtime::executor::{analytic_cost, init_param, Executor, HostTensor};
+use crate::api::{OpContract, Session, SharedExecutor, Tensor};
+use crate::dtr;
+use crate::runtime::executor::{init_param, Executor, HostTensor};
 use crate::runtime::{InterpExecutor, Manifest, ModelConfig};
 use crate::util::rng::Rng;
-
-/// Shared handle to the executor: the engine keeps it across steps while
-/// each per-step DTR backend borrows it for operator execution.
-pub type SharedExecutor = Rc<RefCell<Box<dyn Executor>>>;
-
-/// Buffer store implementing the DTR backend trait over any [`Executor`].
-pub struct ExecBackend {
-    exec: SharedExecutor,
-    bufs: HashMap<u32, HostTensor>,
-    /// Wall time spent executing operators (Fig. 4's "operator time").
-    pub exec_ns: u64,
-    pub exec_count: u64,
-}
-
-impl ExecBackend {
-    pub fn new(exec: SharedExecutor) -> Self {
-        ExecBackend { exec, bufs: HashMap::new(), exec_ns: 0, exec_count: 0 }
-    }
-
-    pub fn put(&mut self, t: TensorId, v: HostTensor) {
-        self.bufs.insert(t.0, v);
-    }
-
-    pub fn get(&self, t: TensorId) -> Option<&HostTensor> {
-        self.bufs.get(&t.0)
-    }
-}
-
-impl Backend for ExecBackend {
-    fn execute(&mut self, name: &str, inputs: &[TensorId], outputs: &[TensorId]) -> Result<()> {
-        let t0 = Instant::now();
-        let ins: Vec<&HostTensor> = inputs
-            .iter()
-            .map(|t| self.bufs.get(&t.0).with_context(|| format!("missing buffer {t}")))
-            .collect::<Result<_>>()?;
-        let outs = self.exec.borrow_mut().execute(name, &ins)?;
-        anyhow::ensure!(
-            outs.len() == outputs.len(),
-            "{name}: {} outputs from executor, {} expected",
-            outs.len(),
-            outputs.len()
-        );
-        for (t, v) in outputs.iter().zip(outs) {
-            self.bufs.insert(t.0, v);
-        }
-        self.exec_ns += t0.elapsed().as_nanos() as u64;
-        self.exec_count += 1;
-        Ok(())
-    }
-
-    fn free(&mut self, roots: &[TensorId]) {
-        for t in roots {
-            self.bufs.remove(&t.0);
-        }
-    }
-}
 
 /// Optimizer selection (both are manifest ops).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,14 +54,12 @@ pub struct StepResult {
 /// Persistent training state + per-step DTR-managed execution.
 pub struct Engine {
     exec: SharedExecutor,
+    /// Op/cost contract shared by every per-step session.
+    contract: OpContract,
     pub manifest: Manifest,
     pub cfg: ModelConfig,
     pub dtr_cfg: dtr::Config,
     pub optimizer: Optimizer,
-    /// Deterministic per-op costs (analytic flop model) consumed by DTR's
-    /// heuristics — the metadata the paper's prototype gathers by timing
-    /// operators; modeled analytically here so runs are reproducible.
-    pub op_cost: HashMap<String, u64>,
     /// name -> (tensor, param group) for every parameter tensor.
     params: Vec<ParamSlot>,
     step: u64,
@@ -134,17 +80,15 @@ impl Engine {
     pub fn new(exec: Box<dyn Executor>, dtr_cfg: dtr::Config, optimizer: Optimizer) -> Result<Engine> {
         let manifest = exec.manifest().clone();
         let cfg = manifest.config;
-        let mut op_cost = HashMap::new();
-        for (name, op) in &manifest.ops {
-            op_cost.insert(name.clone(), analytic_cost(name, op, &cfg));
-        }
+        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let contract = OpContract::of(&exec);
         let mut engine = Engine {
-            exec: Rc::new(RefCell::new(exec)),
+            exec,
+            contract,
             manifest,
             cfg,
             dtr_cfg,
             optimizer,
-            op_cost,
             params: Vec::new(),
             step: 0,
             data_rng: Rng::new(0xDA7A),
@@ -199,10 +143,6 @@ impl Engine {
         }
     }
 
-    fn cost(&self, op: &str) -> u64 {
-        self.op_cost.get(op).copied().unwrap_or(1)
-    }
-
     /// Synthetic LM batch: random tokens; target = fixed affine remap of the
     /// token (a learnable next-token rule, so the loss curve must descend).
     pub fn make_batch(&mut self) -> (Vec<i32>, Vec<i32>) {
@@ -228,107 +168,91 @@ impl Engine {
         total
     }
 
-    /// Run one full training step under DTR. A fresh DTR runtime is built
-    /// per step (parameters re-enter as constants), exactly matching the
-    /// paper's per-batch logs; the arena therefore stays bounded.
+    /// Run one full training step under DTR. A fresh session is built per
+    /// step (parameters re-enter as constants), exactly matching the
+    /// paper's per-batch logs; the arena therefore stays bounded. All
+    /// tensor lifetimes are RAII handles: dropping a handle is the release
+    /// event, so the step body cannot leak pins or double-release.
     pub fn train_step(&mut self) -> Result<StepResult> {
         let wall0 = Instant::now();
         self.step += 1;
         let (tokens, targets) = self.make_batch();
         let cfg = self.cfg;
-        let m = self.manifest.clone();
 
-        let backend = ExecBackend::new(Rc::clone(&self.exec));
-        let mut rt: Runtime<ExecBackend> = Runtime::new(self.dtr_cfg.clone(), backend);
+        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
 
         // --- constants: data + params + optimizer state ---
         let as_f32 = |xs: &[i32]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
-        let tok = constant(
-            &mut rt,
-            HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&tokens)),
-        );
-        let tgt = constant(
-            &mut rt,
-            HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&targets)),
-        );
+        let tok = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&tokens)));
+        let tgt = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&targets)));
 
-        let mut param_ts = Vec::with_capacity(self.params.len());
+        let mut param_ts: Vec<(Tensor, Option<Tensor>, Option<Tensor>)> =
+            Vec::with_capacity(self.params.len());
         for slot in &self.params {
-            let p = constant(&mut rt, slot.value.clone());
+            let p = s.constant(slot.value.clone());
             let (mm, vv) = if self.optimizer == Optimizer::Adam {
-                (
-                    Some(constant(&mut rt, slot.m.clone())),
-                    Some(constant(&mut rt, slot.v.clone())),
-                )
+                (Some(s.constant(slot.m.clone())), Some(s.constant(slot.v.clone())))
             } else {
                 (None, None)
             };
             param_ts.push((p, mm, vv));
         }
-        let t_step = constant(&mut rt, HostTensor::scalar(self.step as f32));
+        let t_step = s.constant(HostTensor::scalar(self.step as f32));
         // Everything resident at this point is exactly the pinned constant
         // set; keep `pinned_bytes()` honest against the real inventory.
         debug_assert_eq!(
-            rt.stats.memory,
+            s.memory(),
             self.pinned_bytes(),
             "pinned_bytes() drifted from the constants train_step registers"
         );
 
         // --- forward ---
-        let x_sig = m.op("block_fwd")?.outputs[0].bytes();
-        let emb_t = param_ts[0].0;
-        let mut x = rt.call("embed_fwd", self.cost("embed_fwd"), &[tok, emb_t], &[OutSpec::sized(x_sig)])?[0];
-        let mut acts = vec![x]; // x_0 .. x_N
+        let mut acts: Vec<Tensor> = Vec::with_capacity(cfg.n_layers + 1); // x_0 .. x_N
+        acts.push(s.call("embed_fwd", &[&tok, &param_ts[0].0])?.remove(0));
         for l in 0..cfg.n_layers {
-            let ps: Vec<TensorId> = (0..6).map(|k| param_ts[1 + l * 6 + k].0).collect();
-            let inputs = [&[x][..], &ps[..]].concat();
-            x = rt.call("block_fwd", self.cost("block_fwd"), &inputs, &[OutSpec::sized(x_sig)])?[0];
-            acts.push(x);
+            let y = {
+                let mut ins: Vec<&Tensor> = vec![acts.last().unwrap()];
+                for k in 0..6 {
+                    ins.push(&param_ts[1 + l * 6 + k].0);
+                }
+                s.call("block_fwd", &ins)?.remove(0)
+            };
+            acts.push(y);
         }
-        let w_out_t = param_ts[self.params.len() - 1].0;
-        let loss_t = rt.call(
-            "loss_fwd",
-            self.cost("loss_fwd"),
-            &[x, w_out_t, tgt],
-            &[OutSpec::sized(4)],
-        )?[0];
+        let w_out = &param_ts[self.params.len() - 1].0;
+        let loss_t = s.call("loss_fwd", &[acts.last().unwrap(), w_out, &tgt])?.remove(0);
         // Read the loss while it is hot (re-reading after backward would
         // rematerialize loss_fwd and potentially its inputs).
-        let loss = rt.backend().get(loss_t).context("loss buffer")?.data[0];
-        rt.release(loss_t);
+        let loss = s.scalar(&loss_t)?;
+        drop(loss_t);
 
         // --- backward ---
-        let lb = m.op("loss_bwd")?;
-        let (dx_b, dwout_b) = (lb.outputs[0].bytes(), lb.outputs[1].bytes());
-        let outs = rt.call(
-            "loss_bwd",
-            self.cost("loss_bwd"),
-            &[x, w_out_t, tgt],
-            &[OutSpec::sized(dx_b), OutSpec::sized(dwout_b)],
-        )?;
-        let mut dx = outs[0];
-        let mut grads: Vec<(usize, TensorId)> = vec![(self.params.len() - 1, outs[1])];
+        let mut louts = s.call("loss_bwd", &[acts.last().unwrap(), w_out, &tgt])?.into_iter();
+        let mut dx = louts.next().unwrap();
+        let mut grads: Vec<(usize, Tensor)> =
+            vec![(self.params.len() - 1, louts.next().unwrap())];
         // x_N (= acts[n_layers]) was consumed by loss fwd+bwd only.
-        rt.release(acts[cfg.n_layers]);
+        drop(acts.pop());
 
-        let bb = m.op("block_bwd")?;
         for l in (0..cfg.n_layers).rev() {
-            let ps: Vec<TensorId> = (0..6).map(|k| param_ts[1 + l * 6 + k].0).collect();
-            let x_in = acts[l];
-            let inputs = [&[x_in][..], &ps[..], &[dx][..]].concat();
-            let specs: Vec<OutSpec> = bb.outputs.iter().map(|o| OutSpec::sized(o.bytes())).collect();
-            let outs = rt.call("block_bwd", self.cost("block_bwd"), &inputs, &specs)?;
-            rt.release(dx);
-            dx = outs[0];
-            for k in 0..6 {
-                grads.push((1 + l * 6 + k, outs[1 + k]));
+            let outs = {
+                let mut ins: Vec<&Tensor> = vec![acts.last().unwrap()];
+                for k in 0..6 {
+                    ins.push(&param_ts[1 + l * 6 + k].0);
+                }
+                ins.push(&dx);
+                s.call("block_bwd", &ins)?
+            };
+            let mut outs = outs.into_iter();
+            dx = outs.next().unwrap(); // reassignment releases the consumed upstream gradient
+            for (k, g) in outs.enumerate() {
+                grads.push((1 + l * 6 + k, g));
             }
-            rt.release(acts[l]); // x_{l} dead once block l's bwd is done
+            drop(acts.pop()); // x_l dead once block l's bwd is done
         }
         // Embedding gradient.
-        let demb_b = m.op("embed_bwd")?.outputs[0].bytes();
-        let demb = rt.call("embed_bwd", self.cost("embed_bwd"), &[tok, dx], &[OutSpec::sized(demb_b)])?[0];
-        rt.release(dx);
+        let demb = s.call("embed_bwd", &[&tok, &dx])?.remove(0);
+        drop(dx);
         grads.push((0, demb));
 
         // --- optimizer updates (inside DTR, as ops) ---
@@ -342,45 +266,35 @@ impl Engine {
         // prototype does for values the host consumes.
         for (pi, g) in grads {
             let group = self.params[pi].group.clone();
-            let (p, mm, vv) = param_ts[pi];
             match self.optimizer {
                 Optimizer::Adam => {
                     let op = format!("adam_{group}");
-                    let psig = m.op(&op)?.outputs[0].bytes();
-                    let outs = rt.call(
-                        &op,
-                        self.cost(&op),
-                        &[p, g, mm.unwrap(), vv.unwrap(), t_step],
-                        &[OutSpec::sized(psig), OutSpec::sized(psig), OutSpec::sized(psig)],
-                    )?;
-                    self.params[pi].value =
-                        rt.backend().get(outs[0]).context("param")?.clone();
-                    self.params[pi].m = rt.backend().get(outs[1]).context("m")?.clone();
-                    self.params[pi].v = rt.backend().get(outs[2]).context("v")?.clone();
-                    for &o in &outs {
-                        rt.release(o);
-                    }
+                    let outs = {
+                        let (p, mm, vv) = &param_ts[pi];
+                        s.call(&op, &[p, &g, mm.as_ref().unwrap(), vv.as_ref().unwrap(), &t_step])?
+                    };
+                    self.params[pi].value = s.get(&outs[0])?;
+                    self.params[pi].m = s.get(&outs[1])?;
+                    self.params[pi].v = s.get(&outs[2])?;
                 }
                 Optimizer::Sgd => {
                     let op = format!("sgd_{group}");
-                    let psig = m.op(&op)?.outputs[0].bytes();
-                    let outs = rt.call(&op, self.cost(&op), &[p, g], &[OutSpec::sized(psig)])?;
-                    self.params[pi].value =
-                        rt.backend().get(outs[0]).context("param")?.clone();
-                    rt.release(outs[0]);
+                    let outs = s.call(&op, &[&param_ts[pi].0, &g])?;
+                    self.params[pi].value = s.get(&outs[0])?;
                 }
             }
-            rt.release(g);
+            // `outs` then `g` drop here — the releases the manual
+            // bookkeeping used to issue, in the same order.
         }
 
-        rt.check_invariants()?;
+        s.check_invariants()?;
 
         Ok(StepResult {
             loss,
-            stats: rt.stats.clone(),
+            stats: s.stats(),
             wall_ns: wall0.elapsed().as_nanos() as u64,
-            exec_ns: rt.backend().exec_ns,
-            exec_count: rt.backend().exec_count,
+            exec_ns: s.exec_ns(),
+            exec_count: s.exec_count(),
         })
     }
 
@@ -442,13 +356,6 @@ impl Engine {
             .map(|p| (p.name.clone(), p.group.clone(), p.value.size_bytes()))
             .collect()
     }
-}
-
-fn constant(rt: &mut Runtime<ExecBackend>, v: HostTensor) -> TensorId {
-    let size = v.size_bytes();
-    let t = rt.constant(size);
-    rt.backend_mut().put(t, v);
-    t
 }
 
 #[cfg(test)]

@@ -1,6 +1,13 @@
-//! Real execution: the DTR-managed training engine over a pluggable
-//! [`crate::runtime::Executor`] backend.
+//! Real execution: DTR-managed training over a pluggable
+//! [`crate::runtime::Executor`] backend — the static transformer engine and
+//! the dynamic (LSTM / TreeLSTM) trainers, all driven through the
+//! `dtr::api` session surface.
 
+pub mod dynamic;
 pub mod engine;
 
-pub use engine::{Engine, ExecBackend, Optimizer, SharedExecutor, StepResult};
+// `ExecBackend`/`SharedExecutor` live in `dtr::api` (they are the
+// interposition machinery); re-exported here for continuity.
+pub use crate::api::{ExecBackend, SharedExecutor};
+pub use dynamic::{DynStepResult, LstmTrainer, TreeLstmTrainer};
+pub use engine::{Engine, Optimizer, StepResult};

@@ -2,13 +2,16 @@
 //! per-batch wall time decomposed into operator compute, heuristic score
 //! evaluation ("cost compute"), victim search ("eviction loop"), and
 //! unprofiled remainder, across memory budgets. Hermetic on the interpreter
-//! backend (default); `--backend pjrt` profiles compiled artifacts instead.
+//! backend (default); `--backend pjrt` profiles compiled artifacts instead,
+//! and `--dynamic` profiles the dynamic-LSTM workload.
 
 use anyhow::Result;
 
 use crate::coordinator::TrainConfig;
 use crate::dtr::{self, Heuristic};
+use crate::exec::dynamic::{headroom_budget, LstmTrainer};
 use crate::exec::{Engine, Optimizer};
+use crate::runtime::RnnConfig;
 use crate::util::csv::{f, CsvOut};
 
 pub struct Fig4Row {
@@ -20,6 +23,49 @@ pub struct Fig4Row {
     pub unprofiled_ms: f64,
     pub remats: u64,
     pub failed: bool,
+}
+
+/// Accumulate one profiled row from `steps` invocations of a step closure
+/// returning `(wall_ns, exec_ns, cost_compute_ns, eviction_loop_ns,
+/// remat_count)` — shared by the static-transformer and dynamic-LSTM
+/// sweeps so the decomposition cannot drift between them.
+fn profile_row(
+    ratio: f64,
+    steps: usize,
+    mut step: impl FnMut() -> Result<(u64, u64, u64, u64, u64)>,
+) -> Fig4Row {
+    let mut wall = 0u64;
+    let mut op = 0u64;
+    let mut cost = 0u64;
+    let mut search = 0u64;
+    let mut remats = 0u64;
+    let mut failed = false;
+    for _ in 0..steps {
+        match step() {
+            Ok((w, o, c, eviction_loop, r)) => {
+                wall += w;
+                op += o;
+                cost += c;
+                search += eviction_loop - c;
+                remats += r;
+            }
+            Err(_) => {
+                failed = true;
+                break;
+            }
+        }
+    }
+    let n = steps as f64;
+    Fig4Row {
+        ratio,
+        wall_ms: wall as f64 / 1e6 / n,
+        op_ms: op as f64 / 1e6 / n,
+        cost_compute_ms: cost as f64 / 1e6 / n,
+        eviction_search_ms: search as f64 / 1e6 / n,
+        unprofiled_ms: (wall.saturating_sub(op + cost + search)) as f64 / 1e6 / n,
+        remats: remats / steps as u64,
+        failed,
+    }
 }
 
 /// `ratios` are fractions of the non-pinned headroom above the pinned
@@ -34,38 +80,52 @@ pub fn run(tc: &TrainConfig, ratios: &[f64], steps: usize, h: Heuristic) -> Resu
     for &ratio in ratios {
         let budget = engine.budgets_from_peak(peak, &[(ratio * 100.0).round() as u64])[0];
         engine.dtr_cfg = dtr::Config { budget, ..base_cfg.clone() };
-        let mut wall = 0u64;
-        let mut op = 0u64;
-        let mut cost = 0u64;
-        let mut search = 0u64;
-        let mut remats = 0u64;
-        let mut failed = false;
-        for _ in 0..steps {
-            match engine.train_step() {
-                Ok(r) => {
-                    wall += r.wall_ns;
-                    op += r.exec_ns;
-                    cost += r.stats.cost_compute_ns;
-                    search += r.stats.eviction_loop_ns - r.stats.cost_compute_ns;
-                    remats += r.stats.remat_count;
-                }
-                Err(_) => {
-                    failed = true;
-                    break;
-                }
-            }
-        }
-        let n = steps as f64;
-        rows.push(Fig4Row {
-            ratio,
-            wall_ms: wall as f64 / 1e6 / n,
-            op_ms: op as f64 / 1e6 / n,
-            cost_compute_ms: cost as f64 / 1e6 / n,
-            eviction_search_ms: search as f64 / 1e6 / n,
-            unprofiled_ms: (wall.saturating_sub(op + cost + search)) as f64 / 1e6 / n,
-            remats: remats / steps as u64,
-            failed,
-        });
+        rows.push(profile_row(ratio, steps, || {
+            engine.train_step().map(|r| {
+                (
+                    r.wall_ns,
+                    r.exec_ns,
+                    r.stats.cost_compute_ns,
+                    r.stats.eviction_loop_ns,
+                    r.stats.remat_count,
+                )
+            })
+        }));
+    }
+    Ok(rows)
+}
+
+/// Fig. 4 over the *dynamic* LSTM workload (`dtr-repro fig4 --dynamic`):
+/// the same overhead decomposition, but with the per-batch sequence length
+/// drawn at run time — the paper's point that DTR's overhead story covers
+/// workloads no static planner can even schedule. Ratios are fractions of
+/// the headroom between the dynamic envelope's pinned floor and its
+/// unbudgeted peak (both measured over a dry run of the step stream).
+pub fn run_dynamic(ratios: &[f64], steps: usize, h: Heuristic) -> Result<Vec<Fig4Row>> {
+    let base_cfg = dtr::Config { heuristic: h, profile: true, ..dtr::Config::default() };
+    let rnn = RnnConfig::small();
+    let mut probe = LstmTrainer::interp(rnn, base_cfg.clone())?;
+    probe.min_len = 8;
+    probe.max_len = 24;
+    let (peak, floor) = probe.measure_envelope(steps.max(3))?;
+
+    let mut rows = Vec::new();
+    for &ratio in ratios {
+        let budget = headroom_budget(peak, floor, (ratio * 100.0).round() as u64);
+        let mut tr = LstmTrainer::interp(rnn, dtr::Config { budget, ..base_cfg.clone() })?;
+        tr.min_len = 8;
+        tr.max_len = 24;
+        rows.push(profile_row(ratio, steps, || {
+            tr.train_step().map(|r| {
+                (
+                    r.wall_ns,
+                    r.exec_ns,
+                    r.stats.cost_compute_ns,
+                    r.stats.eviction_loop_ns,
+                    r.stats.remat_count,
+                )
+            })
+        }));
     }
     Ok(rows)
 }
@@ -99,5 +159,11 @@ pub fn emit(out: &mut CsvOut, rows: &[Fig4Row]) -> Result<()> {
 pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, steps: usize) -> Result<()> {
     let ratios = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4];
     let rows = run(tc, &ratios, steps, Heuristic::dtr_eq())?;
+    emit(out, &rows)
+}
+
+pub fn default_run_dynamic(out: &mut CsvOut, steps: usize) -> Result<()> {
+    let ratios = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4];
+    let rows = run_dynamic(&ratios, steps, Heuristic::dtr_eq())?;
     emit(out, &rows)
 }

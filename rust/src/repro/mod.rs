@@ -28,6 +28,7 @@ experiment commands (regenerate paper tables/figures):
   fig3       DTR vs static checkpointing on linear networks [--n 512]
   fig4       real-engine runtime overhead profile [--steps 3]
              [--backend interp|pjrt --artifacts artifacts]
+             [--dynamic: profile the dynamic-LSTM workload instead]
   table1     largest supported input size, baseline vs DTR
   fig5       memory-trace visualization (N=200, B=2*sqrt(N), h_e*) [--n 200]
   thm31      Theorem 3.1 O(N) sweep [--ns 64,256,1024,4096]
@@ -69,8 +70,16 @@ pub fn dispatch() -> Result<()> {
         }
         "fig3" => fig3::default_run(&mut out, args.usize_or("n", 512))?,
         "fig4" => {
-            let tc = TrainConfig::load(&args)?;
-            fig4::default_run(&mut out, &tc, args.usize_or("steps", 3))?;
+            if args.bool("dynamic") {
+                anyhow::ensure!(
+                    args.get("backend").is_none(),
+                    "fig4 --dynamic profiles the hermetic interpreter; --backend is not supported"
+                );
+                fig4::default_run_dynamic(&mut out, args.usize_or("steps", 3))?;
+            } else {
+                let tc = TrainConfig::load(&args)?;
+                fig4::default_run(&mut out, &tc, args.usize_or("steps", 3))?;
+            }
         }
         "table1" => tables::default_run(&mut out)?,
         "fig5" => formal::fig5(&mut out, args.usize_or("n", 200))?,

@@ -15,7 +15,7 @@
 
 use anyhow::Result;
 
-use super::manifest::{Manifest, ModelConfig, OpSig};
+use super::manifest::{Manifest, ModelConfig, OpSig, RnnConfig};
 use crate::util::rng::Rng;
 
 /// A host tensor: shape + row-major f32 data. Integer tensors (token ids)
@@ -106,6 +106,12 @@ impl NullExecutor {
     pub fn new(cfg: ModelConfig) -> Result<NullExecutor> {
         Ok(NullExecutor { manifest: Manifest::synthesize(cfg)?, executed: 0 })
     }
+
+    /// Accounting-only executor over the dynamic-model (LSTM/TreeLSTM) op
+    /// family.
+    pub fn rnn(cfg: RnnConfig) -> Result<NullExecutor> {
+        Ok(NullExecutor { manifest: Manifest::synthesize_rnn(cfg)?, executed: 0 })
+    }
 }
 
 impl Executor for NullExecutor {
@@ -169,7 +175,46 @@ pub fn analytic_cost(name: &str, op: &OpSig, cfg: &ModelConfig) -> u64 {
     let touch = (el_in + el_out) as u64;
     let block_flops =
         (2 * b * s * d * 3 * d + 4 * b * s * s * d + 2 * b * s * d * d + 4 * b * s * d * f) as u64;
-    let flops = if name.starts_with("embed_") {
+    // Dynamic-model (rnn) ops derive their flops from signature shapes
+    // alone, so one cost model serves any `RnnConfig`.
+    let flops = if name == "lstm_cell_fwd" || name == "lstm_cell_bwd" {
+        let (bz, i) = (op.inputs[0].shape[0], op.inputs[0].shape[1]);
+        let h = op.inputs[1].shape[1];
+        let fwd = (2 * bz * i * 4 * h + 2 * bz * h * 4 * h + 10 * bz * h) as u64;
+        if name == "lstm_cell_fwd" {
+            fwd
+        } else {
+            3 * fwd
+        }
+    } else if name == "tree_leaf_fwd" || name == "tree_leaf_bwd" {
+        let (bz, i) = (op.inputs[0].shape[0], op.inputs[0].shape[1]);
+        let h = op.inputs[1].shape[1];
+        let fwd = (2 * bz * i * h) as u64;
+        if name == "tree_leaf_fwd" {
+            fwd
+        } else {
+            3 * fwd
+        }
+    } else if name == "tree_comb_fwd" || name == "tree_comb_bwd" {
+        let (bz, h) = (op.inputs[0].shape[0], op.inputs[0].shape[1]);
+        let fwd = (4 * bz * h * h) as u64;
+        if name == "tree_comb_fwd" {
+            fwd
+        } else {
+            3 * fwd
+        }
+    } else if name == "rnn_loss_fwd" || name == "rnn_loss_bwd" {
+        let (bz, h) = (op.inputs[0].shape[0], op.inputs[0].shape[1]);
+        let c = op.inputs[1].shape[1];
+        let fwd = (2 * bz * h * c + 3 * bz * c) as u64;
+        if name == "rnn_loss_fwd" {
+            fwd
+        } else {
+            2 * fwd
+        }
+    } else if name.starts_with("acc_") {
+        op.inputs[0].elements() as u64
+    } else if name.starts_with("embed_") {
         (b * s * d) as u64
     } else if name == "block_fwd" {
         block_flops
@@ -253,5 +298,34 @@ mod tests {
         let cost = |n: &str| analytic_cost(n, m.op(n).unwrap(), &cfg);
         assert!(cost("block_bwd") > cost("block_fwd"));
         assert!(cost("loss_fwd") > cost("sgd_wo"));
+    }
+
+    #[test]
+    fn rnn_analytic_costs_positive_and_ordered() {
+        let rnn = RnnConfig::tiny();
+        let m = Manifest::synthesize_rnn(rnn).unwrap();
+        let cfg = m.config;
+        for (name, op) in &m.ops {
+            assert!(analytic_cost(name, op, &cfg) > 0, "{name} has zero cost");
+        }
+        let cost = |n: &str| analytic_cost(n, m.op(n).unwrap(), &cfg);
+        assert!(cost("lstm_cell_bwd") > cost("lstm_cell_fwd"));
+        assert!(cost("tree_comb_bwd") > cost("tree_comb_fwd"));
+        assert!(cost("lstm_cell_fwd") > cost("acc_b"));
+    }
+
+    #[test]
+    fn null_rnn_executor_produces_manifest_shapes() {
+        let rnn = RnnConfig::tiny();
+        let mut ex = NullExecutor::rnn(rnn).unwrap();
+        let x = HostTensor::zeros(&[rnn.batch, rnn.input]);
+        let h = HostTensor::zeros(&[rnn.batch, rnn.hidden]);
+        let c = HostTensor::zeros(&[rnn.batch, rnn.hidden]);
+        let wx = HostTensor::zeros(&[rnn.input, 4 * rnn.hidden]);
+        let wh = HostTensor::zeros(&[rnn.hidden, 4 * rnn.hidden]);
+        let b = HostTensor::zeros(&[1, 4 * rnn.hidden]);
+        let outs = ex.execute("lstm_cell_fwd", &[&x, &h, &c, &wx, &wh, &b]).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].shape, vec![rnn.batch, rnn.hidden]);
     }
 }

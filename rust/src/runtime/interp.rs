@@ -14,7 +14,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::executor::{Executor, HostTensor};
-use super::manifest::{Manifest, ModelConfig};
+use super::manifest::{Manifest, ModelConfig, RnnConfig};
 
 const LN_EPS: f32 = 1e-5;
 const SQRT_2_OVER_PI: f32 = 0.797_884_56;
@@ -33,6 +33,16 @@ pub struct InterpExecutor {
 impl InterpExecutor {
     pub fn new(cfg: ModelConfig) -> Result<InterpExecutor> {
         Ok(InterpExecutor { manifest: Manifest::synthesize(cfg)?, cfg })
+    }
+
+    /// Interpreter over the dynamic-model (LSTM/TreeLSTM) op family. The
+    /// rnn kernels derive all dimensions from input shapes, and no
+    /// transformer op exists in this manifest, so the stored [`ModelConfig`]
+    /// is just the manifest's placeholder.
+    pub fn rnn(cfg: RnnConfig) -> Result<InterpExecutor> {
+        let manifest = Manifest::synthesize_rnn(cfg)?;
+        let mc = manifest.config;
+        Ok(InterpExecutor { manifest, cfg: mc })
     }
 }
 
@@ -69,6 +79,15 @@ impl Executor for InterpExecutor {
             "block_bwd" => block_bwd(&cfg, inputs),
             "loss_fwd" => loss_fwd(&cfg, inputs[0], inputs[1], inputs[2]),
             "loss_bwd" => loss_bwd(&cfg, inputs[0], inputs[1], inputs[2]),
+            "lstm_cell_fwd" => lstm_cell_fwd(inputs),
+            "lstm_cell_bwd" => lstm_cell_bwd(inputs),
+            "tree_leaf_fwd" => tree_leaf_fwd(inputs),
+            "tree_leaf_bwd" => tree_leaf_bwd(inputs),
+            "tree_comb_fwd" => tree_comb_fwd(inputs),
+            "tree_comb_bwd" => tree_comb_bwd(inputs),
+            "rnn_loss_fwd" => rnn_loss_fwd(inputs),
+            "rnn_loss_bwd" => rnn_loss_bwd(inputs),
+            name if name.starts_with("acc_") => acc_step(inputs),
             name if name.starts_with("adam_") => adam_step(inputs),
             name if name.starts_with("sgd_") => sgd_step(inputs),
             other => bail!("interp: unknown op '{other}'"),
@@ -542,6 +561,237 @@ fn loss_bwd(
     ])
 }
 
+// -------------------------------------------- dynamic-model cells (rnn ops)
+//
+// The LSTM/TreeLSTM cell kernels for the dynamic workloads (Sec. 4.1).
+// All dimensions are derived from input shapes, so the same kernels serve
+// any `RnnConfig`. Backward cells recompute the forward intermediates from
+// their own inputs (self-contained, like `block_bwd`), keeping every op a
+// pure function of its inputs. Gradient formulas are validated against
+// finite differences (see the tests below).
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Pre-activation gates `x @ wx + h @ wh + b`, `[B, 4H]` with column blocks
+/// i | f | g | o. Returns `(gates, batch, input_dim, hidden_dim)`.
+fn lstm_gates(
+    x: &HostTensor,
+    h: &HostTensor,
+    wx: &HostTensor,
+    wh: &HostTensor,
+    b: &HostTensor,
+) -> (Vec<f32>, usize, usize, usize) {
+    let bsz = x.shape[0];
+    let id = x.shape[1];
+    let hd = h.shape[1];
+    let mut gates = matmul(&x.data, &wx.data, bsz, id, 4 * hd);
+    let gh = matmul(&h.data, &wh.data, bsz, hd, 4 * hd);
+    for r in 0..bsz {
+        for k in 0..4 * hd {
+            gates[r * 4 * hd + k] += gh[r * 4 * hd + k] + b.data[k];
+        }
+    }
+    (gates, bsz, id, hd)
+}
+
+/// `(h2, c2)` from `(x, h, c, wx, wh, b)`:
+/// `c2 = sigma(f)*c + sigma(i)*tanh(g)`, `h2 = sigma(o)*tanh(c2)`.
+fn lstm_cell_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let c = inputs[2];
+    let (gates, bsz, _id, hd) = lstm_gates(inputs[0], inputs[1], inputs[3], inputs[4], inputs[5]);
+    let mut h2 = vec![0.0f32; bsz * hd];
+    let mut c2 = vec![0.0f32; bsz * hd];
+    for r in 0..bsz {
+        for k in 0..hd {
+            let gi = sigmoid(gates[r * 4 * hd + k]);
+            let gf = sigmoid(gates[r * 4 * hd + hd + k]);
+            let gg = gates[r * 4 * hd + 2 * hd + k].tanh();
+            let go = sigmoid(gates[r * 4 * hd + 3 * hd + k]);
+            let cv = gf * c.data[r * hd + k] + gi * gg;
+            c2[r * hd + k] = cv;
+            h2[r * hd + k] = go * cv.tanh();
+        }
+    }
+    Ok(vec![HostTensor::new(vec![bsz, hd], h2), HostTensor::new(vec![bsz, hd], c2)])
+}
+
+/// `(dx, dh, dc, dwx, dwh, db)` from `(x, h, c, wx, wh, b, dh2, dc2)`.
+fn lstm_cell_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (x, h, c, wx, wh) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+    let (dh2, dc2_in) = (inputs[6], inputs[7]);
+    let (gates, bsz, id, hd) = lstm_gates(x, h, wx, wh, inputs[5]);
+    let mut dgates = vec![0.0f32; bsz * 4 * hd];
+    let mut dc = vec![0.0f32; bsz * hd];
+    for r in 0..bsz {
+        for k in 0..hd {
+            let gi = sigmoid(gates[r * 4 * hd + k]);
+            let gf = sigmoid(gates[r * 4 * hd + hd + k]);
+            let gg = gates[r * 4 * hd + 2 * hd + k].tanh();
+            let go = sigmoid(gates[r * 4 * hd + 3 * hd + k]);
+            let cv = gf * c.data[r * hd + k] + gi * gg;
+            let tc = cv.tanh();
+            let dcv = dc2_in.data[r * hd + k] + dh2.data[r * hd + k] * go * (1.0 - tc * tc);
+            let d_o = dh2.data[r * hd + k] * tc;
+            let d_f = dcv * c.data[r * hd + k];
+            let d_i = dcv * gg;
+            let d_g = dcv * gi;
+            dc[r * hd + k] = dcv * gf;
+            dgates[r * 4 * hd + k] = d_i * gi * (1.0 - gi);
+            dgates[r * 4 * hd + hd + k] = d_f * gf * (1.0 - gf);
+            dgates[r * 4 * hd + 2 * hd + k] = d_g * (1.0 - gg * gg);
+            dgates[r * 4 * hd + 3 * hd + k] = d_o * go * (1.0 - go);
+        }
+    }
+    let dx = matmul_bt(&dgates, &wx.data, bsz, 4 * hd, id);
+    let dh = matmul_bt(&dgates, &wh.data, bsz, 4 * hd, hd);
+    let dwx = matmul_at(&x.data, &dgates, bsz, id, 4 * hd);
+    let dwh = matmul_at(&h.data, &dgates, bsz, hd, 4 * hd);
+    let mut db = vec![0.0f32; 4 * hd];
+    for r in 0..bsz {
+        for k in 0..4 * hd {
+            db[k] += dgates[r * 4 * hd + k];
+        }
+    }
+    Ok(vec![
+        HostTensor::new(vec![bsz, id], dx),
+        HostTensor::new(vec![bsz, hd], dh),
+        HostTensor::new(vec![bsz, hd], dc),
+        HostTensor::new(vec![id, 4 * hd], dwx),
+        HostTensor::new(vec![hd, 4 * hd], dwh),
+        HostTensor::new(vec![1, 4 * hd], db),
+    ])
+}
+
+/// Leaf cell: `h = tanh(x @ wc)`.
+fn tree_leaf_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (x, wc) = (inputs[0], inputs[1]);
+    let (bsz, id) = (x.shape[0], x.shape[1]);
+    let hd = wc.shape[1];
+    let mut hh = matmul(&x.data, &wc.data, bsz, id, hd);
+    for v in hh.iter_mut() {
+        *v = v.tanh();
+    }
+    Ok(vec![HostTensor::new(vec![bsz, hd], hh)])
+}
+
+/// `(dx, dwc)` from `(x, wc, dh)`.
+fn tree_leaf_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (x, wc, dh) = (inputs[0], inputs[1], inputs[2]);
+    let (bsz, id) = (x.shape[0], x.shape[1]);
+    let hd = wc.shape[1];
+    let mut dpre = matmul(&x.data, &wc.data, bsz, id, hd);
+    for (p, &g) in dpre.iter_mut().zip(&dh.data) {
+        let t = p.tanh();
+        *p = g * (1.0 - t * t);
+    }
+    let dx = matmul_bt(&dpre, &wc.data, bsz, hd, id);
+    let dwc = matmul_at(&x.data, &dpre, bsz, id, hd);
+    Ok(vec![HostTensor::new(vec![bsz, id], dx), HostTensor::new(vec![id, hd], dwc)])
+}
+
+/// Combine cell: `h = tanh(hl @ wl + hr @ wr)`.
+fn tree_comb_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (hl, hr, wl, wr) = (inputs[0], inputs[1], inputs[2], inputs[3]);
+    let (bsz, hd) = (hl.shape[0], hl.shape[1]);
+    let mut hh = matmul(&hl.data, &wl.data, bsz, hd, hd);
+    let right = matmul(&hr.data, &wr.data, bsz, hd, hd);
+    for (v, r) in hh.iter_mut().zip(right) {
+        *v = (*v + r).tanh();
+    }
+    Ok(vec![HostTensor::new(vec![bsz, hd], hh)])
+}
+
+/// `(dhl, dhr, dwl, dwr)` from `(hl, hr, wl, wr, dh)`.
+fn tree_comb_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (hl, hr, wl, wr, dh) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+    let (bsz, hd) = (hl.shape[0], hl.shape[1]);
+    let mut dpre = matmul(&hl.data, &wl.data, bsz, hd, hd);
+    let right = matmul(&hr.data, &wr.data, bsz, hd, hd);
+    for ((p, r), &g) in dpre.iter_mut().zip(right).zip(&dh.data) {
+        let t = (*p + r).tanh();
+        *p = g * (1.0 - t * t);
+    }
+    let dhl = matmul_bt(&dpre, &wl.data, bsz, hd, hd);
+    let dhr = matmul_bt(&dpre, &wr.data, bsz, hd, hd);
+    let dwl = matmul_at(&hl.data, &dpre, bsz, hd, hd);
+    let dwr = matmul_at(&hr.data, &dpre, bsz, hd, hd);
+    Ok(vec![
+        HostTensor::new(vec![bsz, hd], dhl),
+        HostTensor::new(vec![bsz, hd], dhr),
+        HostTensor::new(vec![hd, hd], dwl),
+        HostTensor::new(vec![hd, hd], dwr),
+    ])
+}
+
+/// Mean cross-entropy of `h @ w_out` against integer targets.
+fn rnn_loss_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (h, w, tgt) = (inputs[0], inputs[1], inputs[2]);
+    let (n, d) = (h.shape[0], h.shape[1]);
+    let c = w.shape[1];
+    let logits = matmul(&h.data, &w.data, n, d, c);
+    let mut total = 0.0f32;
+    for r in 0..n {
+        let row = &logits[r * c..r * c + c];
+        let mut maxv = f32::NEG_INFINITY;
+        for &l in row {
+            if l > maxv {
+                maxv = l;
+            }
+        }
+        let mut denom = 0.0f32;
+        for &l in row {
+            denom += (l - maxv).exp();
+        }
+        let t = tok_index(tgt.data[r], c, "rnn_loss_fwd")?;
+        total += maxv + denom.ln() - row[t];
+    }
+    Ok(vec![HostTensor::scalar(total / n as f32)])
+}
+
+/// `(dh, dw_out)` of the mean cross-entropy.
+fn rnn_loss_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (h, w, tgt) = (inputs[0], inputs[1], inputs[2]);
+    let (n, d) = (h.shape[0], h.shape[1]);
+    let c = w.shape[1];
+    let mut dlogits = matmul(&h.data, &w.data, n, d, c);
+    let inv_n = 1.0 / n as f32;
+    for r in 0..n {
+        let row = &mut dlogits[r * c..r * c + c];
+        let mut maxv = f32::NEG_INFINITY;
+        for &l in row.iter() {
+            if l > maxv {
+                maxv = l;
+            }
+        }
+        let mut denom = 0.0f32;
+        for l in row.iter_mut() {
+            *l = (*l - maxv).exp();
+            denom += *l;
+        }
+        for l in row.iter_mut() {
+            *l /= denom;
+        }
+        let t = tok_index(tgt.data[r], c, "rnn_loss_bwd")?;
+        row[t] -= 1.0;
+        for l in row.iter_mut() {
+            *l *= inv_n;
+        }
+    }
+    let dh = matmul_bt(&dlogits, &w.data, n, c, d);
+    let dw = matmul_at(&h.data, &dlogits, n, d, c);
+    Ok(vec![HostTensor::new(vec![n, d], dh), HostTensor::new(vec![d, c], dw)])
+}
+
+/// Elementwise gradient accumulation: `out = a + b`.
+fn acc_step(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let (a, b) = (inputs[0], inputs[1]);
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| x + y).collect();
+    Ok(vec![HostTensor::new(a.shape.clone(), data)])
+}
+
 // --------------------------------------------------------------- optimizers
 
 fn sgd_step(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
@@ -816,6 +1066,161 @@ mod tests {
         assert!(fd.is_finite() && fd.abs() > 0.01, "degenerate direction: fd={fd}");
         let rel = (fd - ana).abs() / fd.abs().max(ana.abs());
         assert!(rel < 0.02, "directional derivative mismatch: fd={fd} analytic={ana} rel={rel}");
+    }
+
+    /// LSTM-cell backward must match the finite-difference directional
+    /// derivative of `<h2,u_h> + <c2,u_c>` over a random ±1 direction on
+    /// every input (same aggregation argument as the transformer test
+    /// above: the directional form keeps f32 noise far below the O(1)
+    /// derivative).
+    #[test]
+    fn lstm_cell_gradients_match_directional_derivative() {
+        let rnn = RnnConfig { batch: 3, input: 5, hidden: 4, classes: 3 };
+        let mut ex = InterpExecutor::rnn(rnn).unwrap();
+        let mut rng = Rng::new(11);
+        let ins0: Vec<HostTensor> = vec![
+            randn_host(&mut rng, &[3, 5], 0.5),  // x
+            randn_host(&mut rng, &[3, 4], 0.5),  // h
+            randn_host(&mut rng, &[3, 4], 0.5),  // c
+            randn_host(&mut rng, &[5, 16], 0.5), // wx
+            randn_host(&mut rng, &[4, 16], 0.5), // wh
+            randn_host(&mut rng, &[1, 16], 0.5), // b
+        ];
+        let u_h = randn_host(&mut rng, &[3, 4], 1.0);
+        let u_c = randn_host(&mut rng, &[3, 4], 1.0);
+
+        let obj = |ex: &mut InterpExecutor, ins: &[HostTensor]| -> f32 {
+            let refs: Vec<&HostTensor> = ins.iter().collect();
+            let out = ex.execute("lstm_cell_fwd", &refs).unwrap();
+            let a: f32 = out[0].data.iter().zip(&u_h.data).map(|(&v, &u)| v * u).sum();
+            let b: f32 = out[1].data.iter().zip(&u_c.data).map(|(&v, &u)| v * u).sum();
+            a + b
+        };
+
+        let mut brefs: Vec<&HostTensor> = ins0.iter().collect();
+        brefs.push(&u_h);
+        brefs.push(&u_c);
+        let grads = ex.execute("lstm_cell_bwd", &brefs).unwrap();
+        assert_eq!(grads.len(), 6);
+
+        let mut urng = Rng::new(0xD1F);
+        let dirs: Vec<HostTensor> = ins0
+            .iter()
+            .map(|p| {
+                HostTensor::new(
+                    p.shape.clone(),
+                    p.data
+                        .iter()
+                        .map(|_| if urng.next_u64() & 1 == 1 { 1.0 } else { -1.0 })
+                        .collect(),
+                )
+            })
+            .collect();
+        let eps = 1e-3f32;
+        let shifted = |sign: f32| -> Vec<HostTensor> {
+            ins0.iter()
+                .zip(&dirs)
+                .map(|(p, u)| {
+                    HostTensor::new(
+                        p.shape.clone(),
+                        p.data
+                            .iter()
+                            .zip(&u.data)
+                            .map(|(&pv, &uv)| pv + sign * eps * uv)
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        let fd = (obj(&mut ex, &shifted(1.0)) - obj(&mut ex, &shifted(-1.0))) / (2.0 * eps);
+        let ana: f32 = grads
+            .iter()
+            .zip(&dirs)
+            .map(|(g, u)| g.data.iter().zip(&u.data).map(|(&gv, &uv)| gv * uv).sum::<f32>())
+            .sum();
+        assert!(fd.is_finite() && fd.abs() > 0.01, "degenerate direction: fd={fd}");
+        let rel = (fd - ana).abs() / fd.abs().max(ana.abs());
+        assert!(rel < 0.02, "lstm cell: fd={fd} analytic={ana} rel={rel}");
+    }
+
+    /// TreeLSTM combine backward vs the same directional finite difference.
+    #[test]
+    fn tree_comb_gradients_match_directional_derivative() {
+        let rnn = RnnConfig { batch: 3, input: 5, hidden: 4, classes: 3 };
+        let mut ex = InterpExecutor::rnn(rnn).unwrap();
+        let mut rng = Rng::new(23);
+        let ins0: Vec<HostTensor> = vec![
+            randn_host(&mut rng, &[3, 4], 0.5), // hl
+            randn_host(&mut rng, &[3, 4], 0.5), // hr
+            randn_host(&mut rng, &[4, 4], 0.5), // wl
+            randn_host(&mut rng, &[4, 4], 0.5), // wr
+        ];
+        let u = randn_host(&mut rng, &[3, 4], 1.0);
+        let obj = |ex: &mut InterpExecutor, ins: &[HostTensor]| -> f32 {
+            let refs: Vec<&HostTensor> = ins.iter().collect();
+            let out = ex.execute("tree_comb_fwd", &refs).unwrap();
+            out[0].data.iter().zip(&u.data).map(|(&v, &uv)| v * uv).sum()
+        };
+        let mut brefs: Vec<&HostTensor> = ins0.iter().collect();
+        brefs.push(&u);
+        let grads = ex.execute("tree_comb_bwd", &brefs).unwrap();
+        assert_eq!(grads.len(), 4);
+
+        let mut urng = Rng::new(0xBEE);
+        let dirs: Vec<HostTensor> = ins0
+            .iter()
+            .map(|p| {
+                HostTensor::new(
+                    p.shape.clone(),
+                    p.data
+                        .iter()
+                        .map(|_| if urng.next_u64() & 1 == 1 { 1.0 } else { -1.0 })
+                        .collect(),
+                )
+            })
+            .collect();
+        let eps = 1e-3f32;
+        let shifted = |sign: f32| -> Vec<HostTensor> {
+            ins0.iter()
+                .zip(&dirs)
+                .map(|(p, uu)| {
+                    HostTensor::new(
+                        p.shape.clone(),
+                        p.data
+                            .iter()
+                            .zip(&uu.data)
+                            .map(|(&pv, &uv)| pv + sign * eps * uv)
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        let fd = (obj(&mut ex, &shifted(1.0)) - obj(&mut ex, &shifted(-1.0))) / (2.0 * eps);
+        let ana: f32 = grads
+            .iter()
+            .zip(&dirs)
+            .map(|(g, uu)| g.data.iter().zip(&uu.data).map(|(&gv, &uv)| gv * uv).sum::<f32>())
+            .sum();
+        assert!(fd.is_finite() && fd.abs() > 0.01, "degenerate direction: fd={fd}");
+        let rel = (fd - ana).abs() / fd.abs().max(ana.abs());
+        assert!(rel < 0.02, "tree comb: fd={fd} analytic={ana} rel={rel}");
+    }
+
+    #[test]
+    fn rnn_loss_zero_inputs_give_ln_classes() {
+        let rnn = RnnConfig::tiny();
+        let mut ex = InterpExecutor::rnn(rnn).unwrap();
+        let h = HostTensor::zeros(&[rnn.batch, rnn.hidden]);
+        let w = HostTensor::zeros(&[rnn.hidden, rnn.classes]);
+        let tgt = HostTensor::zeros(&[rnn.batch]);
+        let out = ex.execute("rnn_loss_fwd", &[&h, &w, &tgt]).unwrap();
+        let lnc = (rnn.classes as f32).ln();
+        assert!((out[0].data[0] - lnc).abs() < 1e-5, "{} vs {}", out[0].data[0], lnc);
+        // acc op adds elementwise.
+        let a = HostTensor::new(vec![1, 64], vec![1.0; 64]);
+        let b = HostTensor::new(vec![1, 64], vec![2.0; 64]);
+        let s = ex.execute("acc_b", &[&a, &b]).unwrap();
+        assert!(s[0].data.iter().all(|&v| v == 3.0));
     }
 
     /// One full-model gradient-descent step on a fixed batch must lower the

@@ -140,6 +140,58 @@ impl ModelConfig {
     }
 }
 
+/// Dimensions of the dynamic-model op family (LSTM cell, TreeLSTM cells,
+/// classification readout). Unlike [`ModelConfig`], nothing here fixes the
+/// *shape of the computation*: sequence lengths and tree topologies are
+/// chosen by the driving program at run time (the paper's dynamic models,
+/// Sec. 4.1) — the config only fixes per-op tensor shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RnnConfig {
+    pub batch: usize,
+    /// Input feature dimension of `x_t` / leaf embeddings.
+    pub input: usize,
+    /// Hidden state dimension.
+    pub hidden: usize,
+    /// Readout classes for the cross-entropy loss.
+    pub classes: usize,
+}
+
+impl RnnConfig {
+    /// Smallest config exercising every dynamic code path; the test fixture.
+    pub fn tiny() -> RnnConfig {
+        RnnConfig { batch: 4, input: 8, hidden: 16, classes: 4 }
+    }
+
+    /// Bench-scale config for the dynamic-LSTM perf trajectory.
+    pub fn small() -> RnnConfig {
+        RnnConfig { batch: 16, input: 32, hidden: 64, classes: 16 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.batch > 0 && self.input > 0 && self.hidden > 0 && self.classes > 0,
+            "rnn dimensions must all be positive: {self:?}"
+        );
+        Ok(())
+    }
+
+    /// Parameter group name -> shape. Groups `wx`/`wh`/`b` belong to the
+    /// LSTM cell, `wc`/`wl`/`wr` to the TreeLSTM cells, `wout` to the
+    /// shared readout.
+    pub fn param_shapes(&self) -> BTreeMap<String, Vec<usize>> {
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let mut shapes = BTreeMap::new();
+        shapes.insert("wx".to_string(), vec![i, 4 * h]);
+        shapes.insert("wh".to_string(), vec![h, 4 * h]);
+        shapes.insert("b".to_string(), vec![1, 4 * h]);
+        shapes.insert("wc".to_string(), vec![i, h]);
+        shapes.insert("wl".to_string(), vec![h, h]);
+        shapes.insert("wr".to_string(), vec![h, h]);
+        shapes.insert("wout".to_string(), vec![h, c]);
+        shapes
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub config: ModelConfig,
@@ -224,6 +276,116 @@ impl Manifest {
         Ok(Manifest {
             config: cfg,
             total_params: cfg.total_params(),
+            param_shapes,
+            ops,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Build the op/shape contract for the dynamic-model family: LSTM cell,
+    /// TreeLSTM leaf/combine cells, classification readout, per-group
+    /// gradient accumulators, and SGD updates. Backward cells are
+    /// self-contained (they recompute forward intermediates from the same
+    /// inputs), so every op is a pure function of its inputs and DTR
+    /// replays are bitwise-identical.
+    pub fn synthesize_rnn(cfg: RnnConfig) -> Result<Manifest> {
+        cfg.validate()?;
+        let (b, i, h, c) = (cfg.batch, cfg.input, cfg.hidden, cfg.classes);
+        let f32s = |shape: &[usize]| TensorSig { shape: shape.to_vec(), dtype: DType::F32 };
+        let i32s = |shape: &[usize]| TensorSig { shape: shape.to_vec(), dtype: DType::I32 };
+        let op = |inputs: Vec<TensorSig>, outputs: Vec<TensorSig>| OpSig {
+            file: PathBuf::new(),
+            inputs,
+            outputs,
+        };
+
+        let x = f32s(&[b, i]);
+        let hid = f32s(&[b, h]);
+        let wx = f32s(&[i, 4 * h]);
+        let wh = f32s(&[h, 4 * h]);
+        let bias = f32s(&[1, 4 * h]);
+        let wc = f32s(&[i, h]);
+        let whh = f32s(&[h, h]);
+        let wout = f32s(&[h, c]);
+        let tgt = i32s(&[b]);
+
+        let mut ops = BTreeMap::new();
+        ops.insert(
+            "lstm_cell_fwd".to_string(),
+            op(
+                vec![x.clone(), hid.clone(), hid.clone(), wx.clone(), wh.clone(), bias.clone()],
+                vec![hid.clone(), hid.clone()],
+            ),
+        );
+        ops.insert(
+            "lstm_cell_bwd".to_string(),
+            op(
+                vec![
+                    x.clone(),
+                    hid.clone(),
+                    hid.clone(),
+                    wx.clone(),
+                    wh.clone(),
+                    bias.clone(),
+                    hid.clone(),
+                    hid.clone(),
+                ],
+                vec![x.clone(), hid.clone(), hid.clone(), wx.clone(), wh.clone(), bias.clone()],
+            ),
+        );
+        ops.insert(
+            "tree_leaf_fwd".to_string(),
+            op(vec![x.clone(), wc.clone()], vec![hid.clone()]),
+        );
+        ops.insert(
+            "tree_leaf_bwd".to_string(),
+            op(vec![x.clone(), wc.clone(), hid.clone()], vec![x.clone(), wc.clone()]),
+        );
+        ops.insert(
+            "tree_comb_fwd".to_string(),
+            op(vec![hid.clone(), hid.clone(), whh.clone(), whh.clone()], vec![hid.clone()]),
+        );
+        ops.insert(
+            "tree_comb_bwd".to_string(),
+            op(
+                vec![hid.clone(), hid.clone(), whh.clone(), whh.clone(), hid.clone()],
+                vec![hid.clone(), hid.clone(), whh.clone(), whh.clone()],
+            ),
+        );
+        ops.insert(
+            "rnn_loss_fwd".to_string(),
+            op(vec![hid.clone(), wout.clone(), tgt.clone()], vec![f32s(&[1])]),
+        );
+        ops.insert(
+            "rnn_loss_bwd".to_string(),
+            op(vec![hid.clone(), wout.clone(), tgt.clone()], vec![hid.clone(), wout.clone()]),
+        );
+
+        let param_shapes = cfg.param_shapes();
+        for (group, shape) in &param_shapes {
+            let p = f32s(shape);
+            // Per-group gradient accumulation (weight grads sum over
+            // timesteps / tree nodes) and the SGD update.
+            ops.insert(format!("acc_{group}"), op(vec![p.clone(), p.clone()], vec![p.clone()]));
+            ops.insert(format!("sgd_{group}"), op(vec![p.clone(), p.clone()], vec![p.clone()]));
+        }
+
+        let total_params: u64 =
+            param_shapes.values().map(|s| s.iter().product::<usize>() as u64).sum();
+        Ok(Manifest {
+            // A placeholder transformer config (never consulted: no
+            // transformer op appears in this manifest, and the analytic cost
+            // model derives rnn-op costs from signature shapes alone).
+            config: ModelConfig {
+                vocab: c,
+                d_model: h,
+                n_heads: 1,
+                d_ff: 4 * h,
+                seq: 1,
+                batch: b,
+                n_layers: 1,
+            },
+            total_params,
             param_shapes,
             ops,
             dir: PathBuf::new(),
@@ -364,6 +526,32 @@ mod tests {
             assert!(m.ops.contains_key(&format!("adam_{group}")), "adam_{group}");
         }
         assert_eq!(m.op("adam_wo").unwrap().inputs.len(), 5);
+    }
+
+    #[test]
+    fn synthesized_rnn_manifest_contract() {
+        let cfg = RnnConfig::tiny();
+        let m = Manifest::synthesize_rnn(cfg).unwrap();
+        let cf = m.op("lstm_cell_fwd").unwrap();
+        assert_eq!(cf.inputs.len(), 6);
+        assert_eq!(cf.outputs.len(), 2);
+        assert_eq!(cf.inputs[0].shape, vec![cfg.batch, cfg.input]);
+        assert_eq!(cf.outputs[0].shape, vec![cfg.batch, cfg.hidden]);
+        let cb = m.op("lstm_cell_bwd").unwrap();
+        assert_eq!(cb.inputs.len(), 8);
+        assert_eq!(cb.outputs.len(), 6);
+        assert_eq!(m.op("tree_comb_bwd").unwrap().outputs.len(), 4);
+        assert_eq!(m.op("rnn_loss_bwd").unwrap().outputs.len(), 2);
+        // Accumulator + SGD ops exist for every parameter group.
+        for group in m.param_shapes.keys() {
+            assert!(m.ops.contains_key(&format!("acc_{group}")), "acc_{group}");
+            assert!(m.ops.contains_key(&format!("sgd_{group}")), "sgd_{group}");
+        }
+        assert_eq!(
+            m.total_params,
+            m.param_shapes.values().map(|s| s.iter().product::<usize>() as u64).sum::<u64>()
+        );
+        assert!(m.config.validate().is_ok(), "placeholder config must stay valid");
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod pjrt;
 
 pub use executor::{BackendKind, Executor, HostTensor, NullExecutor};
 pub use interp::InterpExecutor;
-pub use manifest::{DType, Manifest, ModelConfig, OpSig, TensorSig};
+pub use manifest::{DType, Manifest, ModelConfig, OpSig, RnnConfig, TensorSig};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{PjrtExecutor, PjrtRuntime};

@@ -1,0 +1,188 @@
+//! Integration: dynamic models trained end-to-end on the real interpreter
+//! through the `dtr::api` session surface — the workloads whose computation
+//! graphs are data-dependent (per-batch sequence lengths, per-sample tree
+//! shapes) and therefore impossible for static checkpointing planners.
+
+use dtr::api::Session;
+use dtr::dtr::{Config, Heuristic};
+use dtr::exec::dynamic::{headroom_budget, LstmTrainer, TreeLstmTrainer};
+use dtr::runtime::{HostTensor, InterpExecutor, RnnConfig};
+
+/// The acceptance test for this API: a TreeLSTM whose tree shapes vary
+/// per step, trained under a tight budget on the interpreter, must stay
+/// under budget, actually rematerialize, and still learn.
+#[test]
+fn treelstm_trains_under_tight_budget_with_remat() {
+    let rnn = RnnConfig::tiny();
+    let (peak, floor) = TreeLstmTrainer::interp(rnn, Config::default())
+        .unwrap()
+        .measure_envelope(8)
+        .unwrap();
+    assert!(peak > floor, "no evictable headroom to exercise");
+
+    // Walk the ladder from snug to tight until a rung both completes and
+    // rematerializes (looser rungs may never evict; overly tight ones may
+    // OOM on the largest tree in the stream).
+    for pct in [75u64, 60, 45, 30] {
+        let budget = headroom_budget(peak, floor, pct);
+        let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        let mut t = TreeLstmTrainer::interp(rnn, cfg).unwrap();
+        let before = t.probe_loss(99).unwrap();
+        let mut remats = 0u64;
+        let mut evictions = 0u64;
+        let mut completed = true;
+        for _ in 0..30 {
+            match t.train_step() {
+                Ok(r) => {
+                    assert!(
+                        r.stats.peak_memory <= budget,
+                        "budget {budget} violated: peak {}",
+                        r.stats.peak_memory
+                    );
+                    remats += r.stats.remat_count;
+                    evictions += r.stats.evict_count;
+                }
+                Err(_) => {
+                    completed = false;
+                    break;
+                }
+            }
+        }
+        if !completed || remats == 0 {
+            continue;
+        }
+        assert!(evictions > 0, "remats without evictions?");
+        let after = t.probe_loss(99).unwrap();
+        assert!(
+            after < before,
+            "loss did not decrease under budget {budget}: {before} -> {after}"
+        );
+        return;
+    }
+    panic!("no budget rung both completed and rematerialized");
+}
+
+/// The LSTM counterpart: per-batch sequence lengths, tight budget, exact
+/// replay — the budgeted loss stream must be bitwise identical to the
+/// unbudgeted one.
+#[test]
+fn lstm_budgeted_stream_bitwise_matches_unbudgeted() {
+    let rnn = RnnConfig::tiny();
+    let steps = 6;
+    let (peak, floor) = LstmTrainer::interp(rnn, Config::default())
+        .unwrap()
+        .measure_envelope(steps)
+        .unwrap();
+    let mut reference = LstmTrainer::interp(rnn, Config::default()).unwrap();
+    let expect: Vec<f32> = (0..steps).map(|_| reference.train_step().unwrap().loss).collect();
+
+    let mut compared = false;
+    for pct in [70u64, 50, 35] {
+        let budget = headroom_budget(peak, floor, pct);
+        let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        let mut t = LstmTrainer::interp(rnn, cfg).unwrap();
+        let got: Option<Vec<f32>> = (0..steps).map(|_| t.train_step().ok().map(|r| r.loss)).collect();
+        if let Some(got) = got {
+            assert_eq!(expect, got, "budgeted LSTM diverged at {pct}%");
+            compared = true;
+        }
+    }
+    assert!(compared, "every budget rung OOMed");
+}
+
+/// RAII semantics through the public API: clones retain, drops release
+/// (eager eviction frees the buffer), and there is no way to leak or
+/// double-release.
+#[test]
+fn session_raii_clone_retains_and_drop_releases() {
+    let rnn = RnnConfig::tiny();
+    let cfg = Config { budget: u64::MAX, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+    let s = Session::new(Box::new(InterpExecutor::rnn(rnn).unwrap()), cfg);
+
+    let x = s.constant(HostTensor::zeros(&[rnn.batch, rnn.input]));
+    let wc = s.constant(HostTensor::zeros(&[rnn.input, rnn.hidden]));
+    let h = s.call("tree_leaf_fwd", &[&x, &wc]).unwrap().remove(0);
+    let mem_with_h = s.memory();
+
+    // A clone retains: dropping one handle must NOT free the buffer.
+    let h2 = h.clone();
+    drop(h);
+    assert_eq!(s.memory(), mem_with_h, "drop of a cloned handle freed the storage");
+    assert!(s.is_defined(&h2));
+
+    // Dropping the last handle releases; the eager policy evicts.
+    drop(h2);
+    assert!(s.memory() < mem_with_h, "last drop did not free the storage");
+    s.check_invariants().unwrap();
+}
+
+/// `get` on an evicted (but still referenced) tensor transparently
+/// rematerializes it and returns the recomputed buffer.
+#[test]
+fn session_get_rematerializes_evicted_tensors() {
+    let rnn = RnnConfig::tiny();
+    let pinned = (rnn.batch * rnn.input + rnn.input * rnn.hidden) as u64 * 4;
+    let out_bytes = (rnn.batch * rnn.hidden) as u64 * 4;
+    // Room for the pinned constants plus only 3 of the 8 outputs below.
+    let budget = pinned + 3 * out_bytes;
+    let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+    let s = Session::new(Box::new(InterpExecutor::rnn(rnn).unwrap()), cfg);
+
+    let x = s.constant(HostTensor::new(
+        vec![rnn.batch, rnn.input],
+        (0..rnn.batch * rnn.input).map(|i| (i % 3) as f32 * 0.1).collect(),
+    ));
+    let wc = s.constant(HostTensor::new(
+        vec![rnn.input, rnn.hidden],
+        (0..rnn.input * rnn.hidden).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect(),
+    ));
+    let outs: Vec<_> =
+        (0..8).map(|_| s.call("tree_leaf_fwd", &[&x, &wc]).unwrap().remove(0)).collect();
+    assert!(s.stats().evict_count > 0, "budget never forced an eviction");
+    let evicted = outs
+        .iter()
+        .find(|t| !s.is_defined(t))
+        .expect("some live handle must be evicted under this budget");
+
+    let v = s.get(evicted).unwrap();
+    assert_eq!(v.shape, vec![rnn.batch, rnn.hidden]);
+    assert!(s.stats().remat_count > 0, "get did not rematerialize");
+    // The recomputed value equals a fresh handle's value (pure replay).
+    let fresh = s.call("tree_leaf_fwd", &[&x, &wc]).unwrap().remove(0);
+    assert_eq!(v.data, s.get(&fresh).unwrap().data);
+    s.check_invariants().unwrap();
+}
+
+/// Budgets are honored mid-stream even though each step's working set is
+/// unknown until the batch is drawn — the online-planning claim.
+#[test]
+fn lstm_remats_under_budget_pressure() {
+    let rnn = RnnConfig::tiny();
+    let (peak, floor) = LstmTrainer::interp(rnn, Config::default())
+        .unwrap()
+        .measure_envelope(6)
+        .unwrap();
+    for pct in [60u64, 45, 30] {
+        let budget = headroom_budget(peak, floor, pct);
+        let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        let mut t = LstmTrainer::interp(rnn, cfg).unwrap();
+        let mut remats = 0u64;
+        let mut completed = true;
+        for _ in 0..10 {
+            match t.train_step() {
+                Ok(r) => {
+                    assert!(r.stats.peak_memory <= budget);
+                    remats += r.stats.remat_count;
+                }
+                Err(_) => {
+                    completed = false;
+                    break;
+                }
+            }
+        }
+        if completed && remats > 0 {
+            return;
+        }
+    }
+    panic!("no LSTM budget rung rematerialized");
+}

@@ -4,11 +4,16 @@
 //! and accounting consistency. Uses the in-tree miniprop harness (proptest
 //! is not in the offline crate cache).
 
-use dtr::dtr::{Config, DeallocPolicy, Heuristic};
+use std::collections::HashMap;
+
+use dtr::api::{Session, Tensor};
+use dtr::dtr::{Config, DeallocPolicy, Heuristic, Stats};
+use dtr::exec::dynamic::{headroom_budget, DynStepResult, LstmTrainer, TreeLstmTrainer};
 use dtr::exec::{Engine, Optimizer};
+use dtr::graphs::models;
 use dtr::graphs::tape::{R, Tape};
-use dtr::runtime::{InterpExecutor, ModelConfig, NullExecutor};
-use dtr::sim::log::Log;
+use dtr::runtime::{InterpExecutor, ModelConfig, NullExecutor, RnnConfig};
+use dtr::sim::log::{Instr, Log};
 use dtr::sim::replay::{baseline, simulate};
 use dtr::util::miniprop::check;
 use dtr::util::rng::Rng;
@@ -233,6 +238,164 @@ fn prop_backend_equivalence_null_vs_interp() {
         }
         Ok(())
     });
+}
+
+/// Replay an operation log through the public `dtr::api::Session` (RAII
+/// handles instead of raw ids: map rebinding drops are the RELEASE events,
+/// clones are COPY), mirroring `sim::replay::Replayer` instruction for
+/// instruction.
+fn replay_log_via_session(log: &Log, cfg: Config) -> Result<Stats, String> {
+    let s = Session::accounting(cfg);
+    let mut env: HashMap<String, Tensor> = HashMap::new();
+    for ins in &log.instrs {
+        match ins {
+            Instr::Constant { t, size } => {
+                let fresh = env.insert(t.clone(), s.constant_sized(*size));
+                assert!(fresh.is_none(), "duplicate identifier '{t}'");
+            }
+            Instr::Call { op, cost, inputs, outputs } => {
+                let sizes: Vec<u64> = outputs
+                    .iter()
+                    .map(|o| {
+                        assert!(o.alias_of.is_none(), "alias outputs not exercised here");
+                        o.size
+                    })
+                    .collect();
+                let outs = {
+                    let ins_t: Vec<&Tensor> = inputs
+                        .iter()
+                        .map(|n| env.get(n).expect("unbound identifier"))
+                        .collect();
+                    s.call_sized(op, *cost, &ins_t, &sizes).map_err(|e| e.to_string())?
+                };
+                for (decl, t) in outputs.iter().zip(outs) {
+                    let fresh = env.insert(decl.name.clone(), t);
+                    assert!(fresh.is_none(), "duplicate identifier '{}'", decl.name);
+                }
+            }
+            Instr::Copy { dst, src } => {
+                let t = env.get(src).expect("unbound copy source").clone();
+                env.insert(dst.clone(), t);
+            }
+            Instr::CopyFrom { dst, src } => {
+                // Retain the source first, then rebind (dropping the old
+                // dst handle = the release), matching the Replayer's order.
+                let t = env.get(src).expect("unbound copy source").clone();
+                env.insert(dst.clone(), t);
+            }
+            Instr::Release { t } => {
+                env.remove(t);
+            }
+            Instr::Mutate { .. } => return Err("mutate not exercised by tape logs".into()),
+        }
+    }
+    s.pin_live().map_err(|e| e.to_string())?;
+    s.check_invariants().map_err(|e| e.to_string())?;
+    Ok(s.stats())
+}
+
+fn stats_key(s: &Stats) -> (u64, u64, u64, u64, u64, u64, u64, u64, u64) {
+    (
+        s.clock,
+        s.base_compute,
+        s.remat_compute,
+        s.remat_count,
+        s.evict_count,
+        s.banish_count,
+        s.metadata_accesses,
+        s.memory,
+        s.peak_memory,
+    )
+}
+
+/// Sim-vs-real dynamic equivalence (RAII edition): the same LSTM unrolling
+/// driven through the tape generator (`graphs::models::lstm` -> simulator
+/// replay, raw ids and explicit RELEASE events) and through the new
+/// `Session` (accounting backend, RAII handle drops) must produce
+/// *identical* DTR stats — the API veneer adds and loses nothing.
+#[test]
+fn prop_sim_vs_session_lstm_identical_stats() {
+    check("sim_vs_session_lstm", 12, 4, 24, |rng, size| {
+        let steps = 4 + size % 12;
+        let hidden = 16 + 16 * rng.below(3);
+        let batch = 4 + 4 * rng.below(3);
+        let log = models::lstm(steps, hidden, batch);
+        let b = baseline(&log);
+        let ratio = 0.4 + rng.f64() * 0.6;
+        let cfg = Config {
+            budget: b.budget_at(ratio),
+            heuristic: *rng.choose(&Heuristic::fig2_set()),
+            ..Config::default()
+        };
+        let sim = simulate(&log, cfg.clone());
+        let ses = replay_log_via_session(&log, cfg);
+        match (sim.ok(), ses) {
+            (true, Ok(stats)) => {
+                if stats_key(&sim.stats) != stats_key(&stats) {
+                    return Err(format!(
+                        "stats diverged at ratio {ratio:.2}\n sim:     {:?}\n session: {stats:?}",
+                        sim.stats
+                    ));
+                }
+                Ok(())
+            }
+            (false, Err(_)) => Ok(()), // both infeasible: agreement
+            (true, Err(e)) => Err(format!("session failed but sim ran: {e}")),
+            (false, Ok(_)) => Err("sim failed but session ran".into()),
+        }
+    });
+}
+
+/// Backend-equivalence for the *dynamic* path: the LSTM and TreeLSTM
+/// trainers must make identical DTR decisions under the accounting
+/// `NullExecutor` and the real interpreter — shapes, costs, and the
+/// heuristic drive everything; buffer values drive nothing.
+#[test]
+fn prop_dynamic_backend_equivalence_null_vs_interp() {
+    let rnn = RnnConfig::tiny();
+    let (peak, floor) = LstmTrainer::interp(rnn, Config::default())
+        .unwrap()
+        .measure_envelope(3)
+        .unwrap();
+    for pct in [100, 70, 55] {
+        let cfg = Config {
+            budget: headroom_budget(peak, floor, pct),
+            heuristic: Heuristic::dtr_eq(),
+            ..Config::default()
+        };
+        let mut interp = LstmTrainer::interp(rnn, cfg.clone()).unwrap();
+        let mut null = LstmTrainer::null(rnn, cfg).unwrap();
+        for step in 0..3 {
+            let (a, b) = (interp.train_step(), null.train_step());
+            match (a, b) {
+                (Err(_), Err(_)) => break, // agree on infeasibility
+                (Ok(ra), Ok(rb)) => {
+                    assert_eq!(
+                        stats_key(&ra.stats),
+                        stats_key(&rb.stats),
+                        "lstm {pct}% step {step} diverged"
+                    );
+                    assert_eq!(ra.units, rb.units, "data streams diverged");
+                }
+                (a, b) => panic!(
+                    "lstm {pct}% step {step}: backends disagree on feasibility: \
+                     interp ok={}, null ok={}",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
+    }
+
+    // Tree shapes too: one unbudgeted pass is enough to pin the property.
+    let mut ti = TreeLstmTrainer::interp(rnn, Config::default()).unwrap();
+    let mut tn = TreeLstmTrainer::null(rnn, Config::default()).unwrap();
+    for step in 0..3 {
+        let (ra, rb): (DynStepResult, DynStepResult) =
+            (ti.train_step().unwrap(), tn.train_step().unwrap());
+        assert_eq!(stats_key(&ra.stats), stats_key(&rb.stats), "tree step {step} diverged");
+        assert_eq!(ra.units, rb.units, "tree shapes diverged");
+    }
 }
 
 #[test]
