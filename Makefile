@@ -3,7 +3,7 @@
 # `make verify` is the tier-1 gate (hermetic: no network, no Python, no
 # artifacts needed — the engine runs on the pure-Rust interpreter backend).
 
-.PHONY: verify build test bench fmt clippy e2e artifacts clean
+.PHONY: verify build test bench bench-json fmt clippy e2e artifacts clean
 
 # Tier-1 first (build + test), then the lint gates (same jobs CI runs).
 verify:
@@ -17,6 +17,12 @@ test:
 
 bench:
 	cargo bench
+
+# Machine-readable perf trajectory: the bench_dtr eviction-scaling section
+# (ns/eviction at 1k/10k/100k pools, reference scan vs policy index) as
+# BENCH_dtr.json in the repo root.
+bench-json:
+	cargo bench --bench bench_dtr -- --json BENCH_dtr.json
 
 fmt:
 	cargo fmt --check

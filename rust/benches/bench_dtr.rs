@@ -1,14 +1,22 @@
 //! Microbenchmarks of the DTR hot paths: victim selection per heuristic,
-//! union-find maintenance, exact-e* DFS, and full chain replays. Custom
-//! harness (criterion is not in the offline crate cache): median of
-//! repeated runs with warmup, printed as `name  median  iters`.
+//! eviction scaling of the policy indexes vs the reference scan, union-find
+//! maintenance, and full chain replays. Custom harness (criterion is not in
+//! the offline crate cache): median of repeated runs with warmup, printed as
+//! `name  median  p95  iters`.
+//!
+//! `--json PATH` additionally writes the eviction-scaling section as a JSON
+//! report (`make bench-json` -> `BENCH_dtr.json`): ns/eviction at pool
+//! sizes 1k/10k/100k for scan vs indexed `h_lru`/`h_size`/`h_dtr` — the
+//! perf trajectory of the §3.2/Appendix E runtime optimizations. The
+//! indexed runs are decision-identical to the scan runs (the equivalence
+//! property), so ns/eviction compares equal work.
 
 use std::time::Instant;
 
-use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, Runtime};
+use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, PolicyKind, Runtime};
 use dtr::util::rng::Rng;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> u64 {
     // Warmup.
     f();
     let mut samples = Vec::with_capacity(iters);
@@ -21,6 +29,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     let median = samples[samples.len() / 2];
     let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
     println!("{name:<52} median {:>12}  p95 {:>12}  ({iters} iters)", fmt_ns(median), fmt_ns(p95));
+    median
 }
 
 fn fmt_ns(ns: u64) -> String {
@@ -50,7 +59,71 @@ fn chain_workload(n: usize, budget: u64, h: Heuristic, touches: usize) {
     }
 }
 
+/// Build an unbudgeted chain of `pool` evictable unit storages with varied
+/// sizes/costs, ready for direct `evict_one` driving.
+fn build_pool(pool: usize, h: Heuristic, kind: PolicyKind) -> Runtime<NullBackend> {
+    let cfg = Config { heuristic: h, index: kind, ..Config::default() };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let mut prev = rt.constant(1);
+    for i in 0..pool {
+        let size = 1 + (i as u64 % 13);
+        let cost = 1 + (i as u64 % 7);
+        prev = rt.call(&format!("f{i}"), cost, &[prev], &[OutSpec::sized(size)]).unwrap()[0];
+    }
+    rt
+}
+
+struct ScalingRow {
+    pool: usize,
+    heuristic: String,
+    index: &'static str,
+    index_name: &'static str,
+    ns_per_eviction: u64,
+}
+
+/// ns/eviction of `evictions` back-to-back victim selections at a given
+/// pool size — the per-eviction cost the paper's Appendix E optimizations
+/// target. The pool build is excluded from the timed region; the median
+/// over `iters` fresh runtimes is reported. Decision-exact across `kind`,
+/// so rows compare equal work.
+fn eviction_scaling(
+    pool: usize,
+    h: Heuristic,
+    kind: PolicyKind,
+    evictions: usize,
+    iters: usize,
+) -> ScalingRow {
+    let mut index_name = "";
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..=iters {
+        let mut rt = build_pool(pool, h, kind);
+        index_name = rt.index_name();
+        let t0 = Instant::now();
+        for _ in 0..evictions {
+            rt.evict_one().expect("pool drained early");
+        }
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.remove(0); // warmup
+    samples.sort();
+    let ns = samples[samples.len() / 2] / evictions as u64;
+    println!(
+        "evict: pool={pool} k={evictions} [{} / {}] {:>12}/eviction",
+        h.name(),
+        kind.name(),
+        fmt_ns(ns)
+    );
+    ScalingRow { pool, heuristic: h.name(), index: kind.name(), index_name, ns_per_eviction: ns }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
     println!("# bench_dtr — DTR core hot paths\n");
 
     for h in [
@@ -95,6 +168,52 @@ fn main() {
                 rt.access(t).unwrap();
             }
         });
+    }
+
+    // Eviction scaling: per-eviction victim-selection cost, reference scan
+    // vs incremental policy index (`dtr::policy`), at growing pool sizes.
+    // The acceptance bar for the indexes: >= 5x faster than the scan for
+    // h_lru / h_size / h_dtr at the 10k pool.
+    println!("\n# eviction scaling — scan vs policy index (ns/eviction)\n");
+    let mut rows: Vec<ScalingRow> = Vec::new();
+    for &pool in &[1_000usize, 10_000, 100_000] {
+        // Keep the scan's O(pool * evictions) cost bounded at 100k.
+        let evictions = (pool / 2).min(512);
+        let iters = if pool >= 100_000 { 2 } else { 3 };
+        for h in [Heuristic::lru(), Heuristic::size(), Heuristic::dtr()] {
+            for kind in [PolicyKind::Scan, PolicyKind::Auto] {
+                rows.push(eviction_scaling(pool, h, kind, evictions, iters));
+            }
+        }
+    }
+    println!();
+    for w in rows.chunks(2) {
+        if let [scan, indexed] = w {
+            let speedup = scan.ns_per_eviction as f64 / indexed.ns_per_eviction.max(1) as f64;
+            println!(
+                "pool={:<7} {:<8} scan {:>9} ns/evict | {} {:>9} ns/evict | {speedup:>6.1}x",
+                scan.pool, scan.heuristic, scan.ns_per_eviction, indexed.index_name,
+                indexed.ns_per_eviction
+            );
+        }
+    }
+
+    if let Some(path) = json_out {
+        let mut s = String::from("{\n  \"bench\": \"dtr_eviction_scaling\",\n  \"unit\": \"ns_per_eviction\",\n  \"results\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"pool\": {}, \"heuristic\": \"{}\", \"index\": \"{}\", \"resolved_index\": \"{}\", \"ns_per_eviction\": {}}}{}\n",
+                r.pool,
+                r.heuristic,
+                r.index,
+                r.index_name,
+                r.ns_per_eviction,
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, s).expect("writing bench JSON");
+        println!("\nwrote {path}");
     }
 
     // Union-find throughput.

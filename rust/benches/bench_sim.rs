@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use dtr::baselines::optimal_chain_ops;
-use dtr::dtr::{Config, Heuristic};
+use dtr::dtr::{Config, Heuristic, PolicyKind};
 use dtr::graphs::adversarial::run_adversary;
 use dtr::graphs::linear::{run_linear, theorem_budget};
 use dtr::graphs::models::{by_name, ALL_MODELS};
@@ -33,15 +33,22 @@ fn time<F: FnMut() -> R, R>(name: &str, iters: usize, mut f: F) {
 fn main() {
     println!("# bench_sim — simulator end-to-end (paper-experiment workloads)\n");
 
-    // Fig. 2 rows: per-model simulated batch at 0.5 budget.
+    // Fig. 2 rows: per-model simulated batch at 0.5 budget, reference scan
+    // vs the incremental policy index (identical decisions, §3.2 runtime
+    // optimizations on/off).
     for model in ALL_MODELS {
         let log = by_name(model, 1).unwrap();
         let b = baseline(&log);
         let budget = b.budget_at(0.5);
         for h in [Heuristic::dtr_eq(), Heuristic::dtr()] {
-            time(&format!("fig2: {model} @0.5 [{}]", h.name()), 10, || {
-                simulate(&log, Config { budget, heuristic: h, ..Config::default() })
-            });
+            for kind in [PolicyKind::Scan, PolicyKind::Auto] {
+                time(&format!("fig2: {model} @0.5 [{} / {}]", h.name(), kind.name()), 10, || {
+                    simulate(
+                        &log,
+                        Config { budget, heuristic: h, index: kind, ..Config::default() },
+                    )
+                });
+            }
         }
     }
 

@@ -117,6 +117,13 @@ impl<B: Backend + 'static> Session<B> {
         self.rt.borrow().stats.clone()
     }
 
+    /// Name of the victim-selection index the runtime resolved from
+    /// `Config::index` (e.g. `"staleness_list"` for `h_lru` under the
+    /// default `PolicyKind::Auto`; `"scan"` for the reference path).
+    pub fn policy_index(&self) -> &'static str {
+        self.rt.borrow().index_name()
+    }
+
     /// Currently resident bytes.
     pub fn memory(&self) -> u64 {
         self.rt.borrow().stats.memory

@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::dtr::{DeallocPolicy, Heuristic};
+use crate::dtr::{DeallocPolicy, Heuristic, PolicyKind};
 use crate::exec::Optimizer;
 use crate::runtime::{BackendKind, Executor, InterpExecutor, ModelConfig};
 use crate::util::cli::Args;
@@ -27,6 +27,8 @@ pub struct TrainConfig {
     pub budget_ratio: Option<f64>,
     pub heuristic: Heuristic,
     pub policy: DeallocPolicy,
+    /// Victim-selection index family (auto / scan / indexed).
+    pub index: PolicyKind,
     pub optimizer: Optimizer,
     pub sqrt_sample: bool,
     pub small_filter: bool,
@@ -49,6 +51,7 @@ impl Default for TrainConfig {
             budget_ratio: Some(0.9),
             heuristic: Heuristic::dtr_eq(),
             policy: DeallocPolicy::EagerEvict,
+            index: PolicyKind::Auto,
             // SGD by default: Adam's m/v state triples the pinned constant
             // footprint, which dominates small models and shrinks the
             // evictable headroom the budget ladder sweeps.
@@ -132,6 +135,11 @@ impl TrainConfig {
                     cfg.policy = DeallocPolicy::parse(name)
                         .with_context(|| format!("unknown policy {name}"))?;
                 }
+                "index" => {
+                    let name = val.as_str().context("index")?;
+                    cfg.index = PolicyKind::parse(name)
+                        .with_context(|| format!("unknown index kind {name}"))?;
+                }
                 "optimizer" => {
                     cfg.optimizer = match val.as_str().context("optimizer")? {
                         "adam" => Optimizer::Adam,
@@ -180,6 +188,9 @@ impl TrainConfig {
         }
         if let Some(p) = args.get("policy") {
             self.policy = DeallocPolicy::parse(p).with_context(|| format!("policy {p}"))?;
+        }
+        if let Some(i) = args.get("index") {
+            self.index = PolicyKind::parse(i).with_context(|| format!("index kind {i}"))?;
         }
         if let Some(o) = args.get("optimizer") {
             self.optimizer = match o {
@@ -282,6 +293,26 @@ mod tests {
         assert_eq!(c.steps, 99);
         assert_eq!(c.heuristic, Heuristic::dtr());
         assert_eq!(c.model.n_layers, 3);
+    }
+
+    #[test]
+    fn index_knob_parses_and_overrides() {
+        let p = write_tmp(r#"{"index": "scan"}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.index, PolicyKind::Scan);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--index".to_string(),
+                "indexed".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.index, PolicyKind::Indexed);
+        let bad = write_tmp(r#"{"index": "fancy"}"#);
+        assert!(TrainConfig::from_file(&bad).is_err());
     }
 
     #[test]

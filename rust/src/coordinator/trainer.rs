@@ -45,6 +45,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         budget: u64::MAX,
         heuristic: cfg.heuristic,
         policy: cfg.policy,
+        index: cfg.index,
         sqrt_sample: cfg.sqrt_sample,
         small_filter: cfg.small_filter,
         profile: true,

@@ -144,6 +144,50 @@ pub fn estar_members(g: &Graph, s: StorageId, scratch: &mut EvictedScratch) -> V
     members
 }
 
+/// Collect the resident storages whose cached `e*`/remat-set numerators can
+/// change when the state of `s` changes (residency flip, new views/edges,
+/// banishment): `s` itself when resident, plus every resident storage
+/// adjacent to the *undirected* evicted region reachable from `s`. This is a
+/// conservative superset of the directed closures the heuristics traverse —
+/// over-invalidation is sound; the policy indexes use it to dirty only a
+/// graph neighborhood instead of the whole pool (Appendix E).
+pub fn resident_frontier(
+    g: &Graph,
+    s: StorageId,
+    scratch: &mut EvictedScratch,
+    accesses: &mut u64,
+    out: &mut Vec<StorageId>,
+) {
+    out.clear();
+    scratch.begin(g.storages.len());
+    scratch.visit(s);
+    if g.storage(s).resident {
+        out.push(s);
+    }
+    for d in g.neighbors(s) {
+        *accesses += 1;
+        if scratch.visit(d) {
+            if evicted(g, d) {
+                scratch.stack.push(d);
+            } else if g.storage(d).resident {
+                out.push(d);
+            }
+        }
+    }
+    while let Some(x) = scratch.stack.pop() {
+        for d in g.neighbors(x) {
+            *accesses += 1;
+            if scratch.visit(d) {
+                if evicted(g, d) {
+                    scratch.stack.push(d);
+                } else if g.storage(d).resident {
+                    out.push(d);
+                }
+            }
+        }
+    }
+}
+
 /// MSPS rematerialization set cost: Σ local_cost over the evicted storages
 /// that must be rematerialized before `s` can be recomputed (ancestor side
 /// of `e*` only) — Peng et al. 2020's heuristic numerator.

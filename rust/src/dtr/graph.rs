@@ -180,6 +180,13 @@ impl Graph {
         id
     }
 
+    /// Iterate the storage-level neighborhood of `s`: deps, then dependents
+    /// (the undirected edge set the eviction indexes dirty along).
+    pub fn neighbors(&self, s: StorageId) -> impl Iterator<Item = StorageId> + '_ {
+        let st = &self.storages[s.idx()];
+        st.deps.iter().chain(st.dependents.iter()).copied()
+    }
+
     /// Is every view of this storage's op-cone banished-safe, i.e. does `S`
     /// have an evicted (non-banished) dependent? Banishing requires none
     /// (Appendix C.4: `deps_e^T(S) = ∅`).

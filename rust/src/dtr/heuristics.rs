@@ -135,6 +135,54 @@ impl Heuristic {
     pub fn needs_uf(&self) -> bool {
         matches!(self, Heuristic::Param(p) if p.cost == CostKind::EqClass)
     }
+
+    /// Is the score independent of the logical clock? Clock-free heuristics
+    /// admit an exact lazy min-heap (`policy::LazyHeapIndex`): between
+    /// invalidations their relative order never changes. Staleness-bearing
+    /// heuristics do *not* — `c/(m·staleness)` reorders as the clock
+    /// advances, so their index caches the numerator instead
+    /// (`policy::CachedCostScan`).
+    pub fn clock_free(&self) -> bool {
+        match self {
+            Heuristic::Msps | Heuristic::EStarCount => true,
+            Heuristic::Param(p) => !p.use_staleness,
+            Heuristic::Random => false,
+        }
+    }
+
+    /// How far a state change at one storage can reach into other storages'
+    /// cached numerators (see [`InvalidationScope`]).
+    pub fn invalidation_scope(&self) -> InvalidationScope {
+        match self {
+            Heuristic::Random => InvalidationScope::Constant,
+            Heuristic::EStarCount | Heuristic::Msps => InvalidationScope::EvictedRegion,
+            Heuristic::Param(p) => match p.cost {
+                CostKind::NoCost => InvalidationScope::Constant,
+                CostKind::Local => InvalidationScope::SelfOnly,
+                CostKind::EqClass => InvalidationScope::EqNeighborhood,
+                CostKind::EStar => InvalidationScope::EvictedRegion,
+            },
+        }
+    }
+}
+
+/// How far a residency/view/edge change at storage `X` can reach into the
+/// cached score numerators of *other* storages — the contract behind the
+/// policy indexes' lazy invalidation (Appendix E's "only the evicted
+/// neighborhood changes").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InvalidationScope {
+    /// Numerator is a constant; nothing to invalidate.
+    Constant,
+    /// Only `X`'s own numerator depends on `X` (local parent-op cost).
+    SelfOnly,
+    /// `X` itself plus its *direct* resident graph neighbors (ẽ* reads only
+    /// direct edges); component-cost changes arrive separately through the
+    /// union-find subscription hooks.
+    EqNeighborhood,
+    /// `X` itself plus the resident frontier of the undirected evicted
+    /// region around `X` (exact `e*` / MSPS remat-set traversals).
+    EvictedRegion,
 }
 
 impl std::str::FromStr for Heuristic {
@@ -203,39 +251,67 @@ pub struct ScoreCtx<'a> {
 
 /// Score a storage; lower = evicted first. All scores are strictly positive
 /// so ratios remain meaningful.
+///
+/// Decomposed as `finish_score(h, cached_cost(h, s), …)` so the policy
+/// indexes can cache the expensive numerator and reproduce scan scores
+/// *bit-exactly* (the index/scan equivalence property depends on this).
 pub fn score(h: Heuristic, s: StorageId, ctx: &mut ScoreCtx<'_>) -> f64 {
     *ctx.accesses += 1; // the heuristic evaluation itself (paper counts these)
+    if matches!(h, Heuristic::Random) {
+        return ctx.rng.f64().max(f64::MIN_POSITIVE);
+    }
+    let c = cached_cost(h, s, ctx);
+    let st = ctx.graph.storage(s);
+    finish_score(h, c, st.size, st.last_access, ctx.clock)
+}
+
+/// The expensive, *cacheable* numerator of `h` at `s`: the term that only
+/// changes when the evicted neighborhood / eq-class costs / local views of
+/// `s` change (never with the clock or `last_access`). For `EqClass` the
+/// distinct union-find roots observed are left in `ctx.root_buf` so callers
+/// can subscribe to component-cost changes.
+///
+/// Panics for `h_rand`, which has no cacheable component (the factory never
+/// routes it to a caching index).
+pub fn cached_cost(h: Heuristic, s: StorageId, ctx: &mut ScoreCtx<'_>) -> f64 {
     let st = ctx.graph.storage(s);
     match h {
-        Heuristic::Random => ctx.rng.f64().max(f64::MIN_POSITIVE),
+        Heuristic::Random => unreachable!("h_rand has no cacheable cost"),
         Heuristic::EStarCount => {
             let (_, n) = estar_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
             n as f64 + 1.0
         }
         Heuristic::Msps => {
-            let c = st.local_cost as f64
-                + remat_set_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
-            (c + 1.0) / (st.size.max(1) as f64)
+            st.local_cost as f64 + remat_set_cost(ctx.graph, s, ctx.scratch, ctx.accesses)
         }
+        Heuristic::Param(p) => match p.cost {
+            CostKind::NoCost => 1.0,
+            CostKind::Local => st.local_cost as f64 + 1.0,
+            CostKind::EStar => {
+                let (ec, _) = estar_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
+                st.local_cost as f64 + ec + 1.0
+            }
+            CostKind::EqClass => st.local_cost as f64 + eq_neighborhood_cost(s, ctx) + 1.0,
+        },
+    }
+}
+
+/// Finish a score from a cached numerator: the cheap per-candidate part
+/// (size/staleness denominators). Must stay bit-identical to what `score`
+/// computes from a fresh numerator.
+pub fn finish_score(h: Heuristic, cost: f64, size: u64, last_access: u64, clock: u64) -> f64 {
+    match h {
+        Heuristic::Random => unreachable!("h_rand has no cacheable cost"),
+        Heuristic::EStarCount => cost,
+        Heuristic::Msps => (cost + 1.0) / (size.max(1) as f64),
         Heuristic::Param(p) => {
-            let c = match p.cost {
-                CostKind::NoCost => 1.0,
-                CostKind::Local => st.local_cost as f64 + 1.0,
-                CostKind::EStar => {
-                    let (ec, _) = estar_cost(ctx.graph, s, ctx.scratch, ctx.accesses);
-                    st.local_cost as f64 + ec + 1.0
-                }
-                CostKind::EqClass => {
-                    st.local_cost as f64 + eq_neighborhood_cost(s, ctx) + 1.0
-                }
-            };
-            let m = if p.use_size { st.size.max(1) as f64 } else { 1.0 };
+            let m = if p.use_size { size.max(1) as f64 } else { 1.0 };
             let stale = if p.use_staleness {
-                (ctx.clock.saturating_sub(st.last_access) + 1) as f64
+                (clock.saturating_sub(last_access) + 1) as f64
             } else {
                 1.0
             };
-            c / (m * stale)
+            cost / (m * stale)
         }
     }
 }

@@ -3,7 +3,9 @@
 //! See DESIGN.md §2–3. Public surface:
 //! * [`Runtime`] — the online eviction/rematerialization algorithm (Fig. 1);
 //! * [`Heuristic`] — the eviction-score family of Sec. 4.1 / Appendix D;
-//! * [`DeallocPolicy`] — ignore / eager-evict / banish (Sec. 2);
+//! * [`policy`] — victim selection behind the [`policy::PolicyIndex`] seam
+//!   (incremental indexes vs. the reference scan, [`PolicyKind`]) and the
+//!   deallocation policies ([`DeallocPolicy`], Sec. 2);
 //! * [`Backend`] — pluggable compute: accounting-only for simulation, PJRT
 //!   for real execution.
 
@@ -18,7 +20,7 @@ pub mod unionfind;
 
 pub use backend::{Backend, NullBackend};
 pub use graph::{Graph, Operator, Storage, Tensor};
-pub use heuristics::{CostKind, Heuristic, ParamSpec};
+pub use heuristics::{CostKind, Heuristic, InvalidationScope, ParamSpec};
 pub use ids::{OpId, StorageId, TensorId};
-pub use policy::DeallocPolicy;
+pub use policy::{DeallocPolicy, PolicyIndex, PolicyKind};
 pub use runtime::{Config, DtrError, OutSpec, Runtime, Stats};

@@ -1,0 +1,146 @@
+//! Incremental index for the staleness-bearing cost heuristics (`h_DTR`,
+//! `h_DTR^eq`, `h_DTR^local` and their ablation-grid relatives): Appendix
+//! E.1's score caching with lazy neighborhood invalidation.
+//!
+//! The score `c(S)/[m(S)·staleness(S)]` re-orders as the clock advances, so
+//! no heap over cached keys can be exact (see the module docs of
+//! [`super`]). What *is* cacheable is the expensive numerator `c(S)` — the
+//! `e*` DFS, the ẽ* union-find query, or the local parent cost — which only
+//! changes when the evicted neighborhood of `S` does. This index caches the
+//! numerator per storage and recomputes lazily: evicting, rematerializing,
+//! or recording an operator dirties only the resident frontier of the
+//! affected evicted region ([`Dirtier`]); for ẽ*, component-cost changes
+//! propagate through union-find subscriptions ([`EqSubs`] — the paper's
+//! eq-class metadata). `pop_min` is then a cheap O(pool) pass of
+//! multiply/divide over cached numerators instead of O(pool) graph
+//! traversals.
+
+use super::super::graph::Graph;
+use super::super::heuristics::{finish_score, Heuristic, InvalidationScope};
+use super::super::ids::StorageId;
+use super::{Dirtier, EqSubs, PolicyIndex, SelectCtx};
+
+pub struct CachedCostScan {
+    h: Heuristic,
+    eq: bool,
+    cost: Vec<f64>,
+    dirty: Vec<bool>,
+    dirtier: Dirtier,
+    subs: EqSubs,
+}
+
+fn mark(cost: &mut Vec<f64>, dirty: &mut Vec<bool>, s: StorageId) {
+    let i = s.idx();
+    if cost.len() <= i {
+        cost.resize(i + 1, 0.0);
+        dirty.resize(i + 1, true);
+    }
+    dirty[i] = true;
+}
+
+impl CachedCostScan {
+    pub fn new(h: Heuristic) -> Self {
+        CachedCostScan {
+            h,
+            eq: h.invalidation_scope() == InvalidationScope::EqNeighborhood,
+            cost: Vec::new(),
+            dirty: Vec::new(),
+            dirtier: Dirtier::new(h),
+            subs: EqSubs::default(),
+        }
+    }
+
+    /// One argmin pass over the pool, assuming all numerators are fresh.
+    fn pass(&mut self, ctx: &mut SelectCtx<'_>, filtered: bool) -> Option<(f64, StorageId)> {
+        let mut best: Option<(f64, StorageId)> = None;
+        let pool = ctx.pool;
+        for &s in pool {
+            debug_assert!(!self.dirty[s.idx()]);
+            *ctx.accesses += 1;
+            let st = ctx.graph.storage(s);
+            if filtered && st.size < ctx.min_size {
+                continue;
+            }
+            let sc = finish_score(self.h, self.cost[s.idx()], st.size, st.last_access, ctx.clock);
+            if best.map_or(true, |(b, bs)| sc < b || (sc == b && s.0 < bs.0)) {
+                best = Some((sc, s));
+            }
+        }
+        best
+    }
+}
+
+impl PolicyIndex for CachedCostScan {
+    fn name(&self) -> &'static str {
+        "cached_cost_scan"
+    }
+
+    fn on_insert(&mut self, s: StorageId, _g: &Graph) {
+        // Ensure a slot exists (fresh slots start dirty). A *returning*
+        // storage's cached numerator is still valid: membership does not
+        // enter the numerator, and invalidations/component hooks land
+        // regardless of pool state — so the lock/unlock churn of every
+        // operator call does not force e*/ẽ* recomputation of its inputs.
+        let i = s.idx();
+        if self.cost.len() <= i {
+            self.cost.resize(i + 1, 0.0);
+            self.dirty.resize(i + 1, true);
+        }
+    }
+
+    fn on_remove(&mut self, _s: StorageId, _g: &Graph) {
+        // Keep the cache and its eq-class subscriptions live (see
+        // `on_insert`); out-of-pool storages keep receiving invalidations.
+    }
+
+    fn on_access(&mut self, _s: StorageId, _g: &Graph, _clock: u64) {
+        // Staleness lives in the denominator, recomputed every pass.
+    }
+
+    fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
+        self.dirtier.collect(s, g, accesses);
+        for &t in &self.dirtier.buf {
+            mark(&mut self.cost, &mut self.dirty, t);
+        }
+    }
+
+    fn on_component_touched(&mut self, root: u32) {
+        let cost = &mut self.cost;
+        let dirty = &mut self.dirty;
+        self.subs.touched(root, |s| mark(cost, dirty, s));
+    }
+
+    fn on_components_merged(&mut self, kept: u32, absorbed: u32) {
+        let cost = &mut self.cost;
+        let dirty = &mut self.dirty;
+        self.subs.merged(kept, absorbed, |s| mark(cost, dirty, s));
+    }
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        if ctx.pool.is_empty() {
+            return None;
+        }
+        // Refresh every dirty numerator first; the argmin passes below are
+        // then pure arithmetic over cached values.
+        let pool = ctx.pool;
+        for &s in pool {
+            if self.cost.len() <= s.idx() {
+                mark(&mut self.cost, &mut self.dirty, s);
+            }
+            if self.dirty[s.idx()] {
+                let c = ctx.cached_cost_of(s);
+                self.cost[s.idx()] = c;
+                self.dirty[s.idx()] = false;
+                if self.eq {
+                    self.subs.bump(s);
+                    self.subs.subscribe(s, ctx.root_buf);
+                }
+            }
+        }
+        let mut best = self.pass(ctx, true);
+        if best.is_none() && ctx.min_size > 0 {
+            best = self.pass(ctx, false);
+        }
+        best.map(|(_, s)| s)
+    }
+}

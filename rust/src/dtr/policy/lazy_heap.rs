@@ -1,0 +1,326 @@
+//! Incremental index for *clock-free* heuristics (`h_MSPS`, `h_{e*}`, and
+//! the staleness-ablated cells of the Appendix D.1 grid): Appendix E.1's
+//! score caching as a lazy min-heap with stale-entry skipping.
+//!
+//! Without a staleness factor, a storage's score is constant between
+//! invalidations, so a min-heap over cached `(score, id)` keys is exact.
+//! Invalidation is lazy in both directions: a dirtied storage is queued and
+//! re-keyed (a fresh generation pushed) only when the next `pop_min` runs,
+//! and superseded or removed entries are skipped when they surface at the
+//! top (generation mismatch / not-in-pool). Dirtying follows the same
+//! neighborhood scopes as [`super::CachedCostScan`] — evicted-region DFS
+//! for `e*`/MSPS numerators, union-find component subscriptions for
+//! eq-class cells.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::super::graph::Graph;
+use super::super::heuristics::{finish_score, Heuristic, InvalidationScope};
+use super::super::ids::StorageId;
+use super::{Dirtier, EqSubs, PolicyIndex, SelectCtx};
+
+/// Heap entry: min `(score, id)` first (BinaryHeap is a max-heap, so `Ord`
+/// is reversed). `gen` stamps validity against `Slot::gen`.
+#[derive(Clone, Copy)]
+struct Entry {
+    score: f64,
+    id: u32,
+    gen: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: the max-heap surfaces the lowest (score, id).
+        other
+            .score
+            .total_cmp(&self.score)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct Slot {
+    in_pool: bool,
+    dirty: bool,
+    gen: u64,
+    score: f64,
+}
+
+pub struct LazyHeapIndex {
+    h: Heuristic,
+    eq: bool,
+    heap: BinaryHeap<Entry>,
+    slots: Vec<Slot>,
+    dirty_list: Vec<StorageId>,
+    dirtier: Dirtier,
+    subs: EqSubs,
+}
+
+fn queue_dirty(slots: &mut Vec<Slot>, dirty_list: &mut Vec<StorageId>, s: StorageId) {
+    let i = s.idx();
+    if slots.len() <= i {
+        slots.resize(i + 1, Slot::default());
+    }
+    if slots[i].in_pool && !slots[i].dirty {
+        slots[i].dirty = true;
+        dirty_list.push(s);
+    }
+}
+
+impl LazyHeapIndex {
+    pub fn new(h: Heuristic) -> Self {
+        debug_assert!(h.clock_free(), "{} is not clock-free", h.name());
+        LazyHeapIndex {
+            h,
+            eq: h.invalidation_scope() == InvalidationScope::EqNeighborhood,
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            dirty_list: Vec::new(),
+            dirtier: Dirtier::new(h),
+            subs: EqSubs::default(),
+        }
+    }
+
+    fn slot(&mut self, s: StorageId) -> usize {
+        let i = s.idx();
+        if self.slots.len() <= i {
+            self.slots.resize(i + 1, Slot::default());
+        }
+        i
+    }
+
+    /// Re-key every queued dirty entry (fresh generation into the heap).
+    fn refresh(&mut self, ctx: &mut SelectCtx<'_>) {
+        while let Some(s) = self.dirty_list.pop() {
+            let i = s.idx();
+            if !self.slots[i].in_pool || !self.slots[i].dirty {
+                continue;
+            }
+            let c = ctx.cached_cost_of(s);
+            if self.eq {
+                self.subs.bump(s);
+                self.subs.subscribe(s, ctx.root_buf);
+            }
+            let st = ctx.graph.storage(s);
+            let score = finish_score(self.h, c, st.size, st.last_access, ctx.clock);
+            let slot = &mut self.slots[i];
+            slot.dirty = false;
+            slot.gen += 1;
+            slot.score = score;
+            self.heap.push(Entry { score, id: s.0, gen: slot.gen });
+        }
+    }
+
+    fn entry_valid(&self, e: &Entry) -> bool {
+        self.slots
+            .get(e.id as usize)
+            .map_or(false, |sl| sl.in_pool && !sl.dirty && sl.gen == e.gen)
+    }
+
+    /// Rebuild from live slots if lazy deletion let the heap balloon.
+    fn maybe_compact(&mut self, pool: &[StorageId]) {
+        if self.heap.len() > 4 * pool.len() + 64 {
+            self.heap.clear();
+            for &s in pool {
+                let sl = &self.slots[s.idx()];
+                if sl.in_pool && !sl.dirty {
+                    self.heap.push(Entry { score: sl.score, id: s.0, gen: sl.gen });
+                }
+            }
+        }
+    }
+}
+
+impl PolicyIndex for LazyHeapIndex {
+    fn name(&self) -> &'static str {
+        "lazy_heap"
+    }
+
+    fn on_insert(&mut self, s: StorageId, _g: &Graph) {
+        let i = self.slot(s);
+        if !self.slots[i].in_pool {
+            self.slots[i].in_pool = true;
+            self.slots[i].dirty = false;
+            queue_dirty(&mut self.slots, &mut self.dirty_list, s);
+        }
+    }
+
+    fn on_remove(&mut self, s: StorageId, _g: &Graph) {
+        let i = self.slot(s);
+        self.slots[i].in_pool = false;
+        self.slots[i].dirty = false;
+        if self.eq {
+            self.subs.bump(s);
+        }
+    }
+
+    fn on_access(&mut self, _s: StorageId, _g: &Graph, _clock: u64) {
+        // Clock-free scores ignore last_access.
+    }
+
+    fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
+        self.dirtier.collect(s, g, accesses);
+        for &t in &self.dirtier.buf {
+            queue_dirty(&mut self.slots, &mut self.dirty_list, t);
+        }
+    }
+
+    fn on_component_touched(&mut self, root: u32) {
+        let slots = &mut self.slots;
+        let dirty_list = &mut self.dirty_list;
+        self.subs.touched(root, |s| queue_dirty(slots, dirty_list, s));
+    }
+
+    fn on_components_merged(&mut self, kept: u32, absorbed: u32) {
+        let slots = &mut self.slots;
+        let dirty_list = &mut self.dirty_list;
+        self.subs.merged(kept, absorbed, |s| queue_dirty(slots, dirty_list, s));
+    }
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        self.refresh(ctx);
+        self.maybe_compact(ctx.pool);
+        // Skip stale generations; the first valid entry is the argmin. With
+        // the small-tensor filter on, set aside valid-but-small entries and
+        // restore them afterwards; if everything is small, the scan's
+        // starved fallback is the unfiltered argmin — the first one set
+        // aside.
+        let mut set_aside: Vec<Entry> = Vec::new();
+        let mut found: Option<StorageId> = None;
+        while let Some(&e) = self.heap.peek() {
+            if !self.entry_valid(&e) {
+                self.heap.pop();
+                continue;
+            }
+            *ctx.accesses += 1;
+            let s = StorageId(e.id);
+            if ctx.min_size > 0 && ctx.graph.storage(s).size < ctx.min_size {
+                set_aside.push(e);
+                self.heap.pop();
+                continue;
+            }
+            found = Some(s);
+            break;
+        }
+        let result = found.or_else(|| set_aside.first().map(|e| StorageId(e.id)));
+        for e in set_aside {
+            self.heap.push(e);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::evicted::EvictedScratch;
+    use crate::dtr::ids::TensorId;
+    use crate::dtr::unionfind::UnionFind;
+    use crate::util::rng::Rng;
+
+    /// Linear chain with unit sizes and given costs, all resident.
+    fn chain(costs: &[u64]) -> (Graph, Vec<StorageId>, UnionFind) {
+        let mut g = Graph::new();
+        let mut uf = UnionFind::new();
+        let mut ss = Vec::new();
+        let mut prev: Option<TensorId> = None;
+        for (i, &c) in costs.iter().enumerate() {
+            let h = uf.make_set();
+            let s = g.new_storage(1, h);
+            let t = if let Some(p) = prev {
+                let op = g.new_op(&format!("f{i}"), c, vec![p]);
+                let t = g.new_tensor(s, Some(op), false);
+                g.ops[op.idx()].outputs.push(t);
+                t
+            } else {
+                g.new_tensor(s, None, false)
+            };
+            g.storage_mut(s).resident = true;
+            ss.push(s);
+            prev = Some(t);
+        }
+        (g, ss, uf)
+    }
+
+    fn pop(
+        idx: &mut LazyHeapIndex,
+        g: &Graph,
+        uf: &mut UnionFind,
+        pool: &[StorageId],
+        h: Heuristic,
+    ) -> Option<StorageId> {
+        let mut scratch = EvictedScratch::new();
+        let mut rng = Rng::new(1);
+        let mut acc = 0u64;
+        let mut roots = Vec::new();
+        let mut cost_ns = 0u64;
+        let mut ctx = SelectCtx {
+            pool,
+            graph: g,
+            uf,
+            scratch: &mut scratch,
+            clock: 10,
+            rng: &mut rng,
+            accesses: &mut acc,
+            root_buf: &mut roots,
+            heuristic: h,
+            min_size: 0,
+            sqrt_sample: false,
+            profile: false,
+            cost_ns: &mut cost_ns,
+        };
+        idx.pop_min(&mut ctx)
+    }
+
+    #[test]
+    fn msps_pops_cheapest_and_tracks_invalidation() {
+        let h = Heuristic::Msps;
+        let (mut g, ss, mut uf) = chain(&[0, 50, 3, 40]);
+        let mut idx = LazyHeapIndex::new(h);
+        let pool: Vec<StorageId> = ss[1..].to_vec();
+        for &s in &pool {
+            idx.on_insert(s, &g);
+        }
+        // Cheapest local cost wins (no evictions yet): ss[2] (cost 3).
+        assert_eq!(pop(&mut idx, &g, &mut uf, &pool, h), Some(ss[2]));
+        // Evict ss[2]: its dependent ss[3] now carries its remat cost.
+        g.storage_mut(ss[2]).resident = false;
+        idx.on_remove(ss[2], &g);
+        let mut acc = 0u64;
+        idx.invalidate(ss[2], &g, &mut acc);
+        let pool2 = vec![ss[1], ss[3]];
+        // ss[3] now scores 40 + 3 (evicted ancestor) vs ss[1]'s 50.
+        assert_eq!(pop(&mut idx, &g, &mut uf, &pool2, h), Some(ss[3]));
+        // A stale heap entry for ss[2] must be skipped, and re-keying must
+        // have happened only for the dirtied neighborhood.
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn estar_count_prefers_empty_neighborhood() {
+        let h = Heuristic::EStarCount;
+        let (mut g, ss, mut uf) = chain(&[0, 1, 1, 1, 1]);
+        g.storage_mut(ss[2]).resident = false;
+        let pool = vec![ss[1], ss[3], ss[4]];
+        let mut idx = LazyHeapIndex::new(h);
+        for &s in &pool {
+            idx.on_insert(s, &g);
+        }
+        let mut acc = 0u64;
+        idx.invalidate(ss[2], &g, &mut acc);
+        // ss[4] has |e*| = 0; ss[1] and ss[3] border the evicted ss[2].
+        assert_eq!(pop(&mut idx, &g, &mut uf, &pool, h), Some(ss[4]));
+    }
+}

@@ -1,0 +1,406 @@
+//! Eviction-policy subsystem: victim selection behind the [`PolicyIndex`]
+//! seam, plus the deallocation policies ([`DeallocPolicy`]).
+//!
+//! The paper's prototype (§3.2, Appendix E) notes that a naive greedy
+//! runtime pays O(pool) *per eviction* — every search rescans every
+//! evictable storage and recomputes its heuristic from scratch — and
+//! describes the runtime optimizations that remove this cost: caching
+//! heuristic scores and lazily invalidating only the neighborhood a change
+//! can reach (E.1), tracking evicted-component metadata through a union-find
+//! (Appendix C.2), and approximating the search itself (√n sampling and the
+//! small-tensor filter, E.2). This module is those optimizations as a
+//! pluggable index family:
+//!
+//! | index                 | heuristics                  | paper mechanism |
+//! |-----------------------|-----------------------------|-----------------|
+//! | [`ScanIndex`]         | everything (reference)      | the unoptimized O(pool) argmin; also hosts the E.2 √n-sample + small-filter *search strategies* |
+//! | [`StalenessListIndex`]| `h_LRU`                     | staleness is monotone in access order, so an intrusive list ordered by `last_access` pops the argmin in O(1) |
+//! | [`SizeHeapIndex`]     | `h_size`                    | sizes are immutable, so a lazy max-size heap with stale-entry skipping is exact |
+//! | [`LazyHeapIndex`]     | clock-free scores: `h_MSPS`, `h_{e*}`, staleness-ablated grid cells | E.1 score caching as a lazy min-heap: invalidation re-keys only the dirtied graph/eq-class neighborhood; stale generations are skipped on pop |
+//! | [`CachedCostScan`]    | `h_DTR`, `h_DTR^eq`, `h_DTR^local`, staleness-bearing grid cells | E.1 cost caching: the expensive `e*`/ẽ*/local numerator is cached and invalidated per neighborhood; the staleness denominator is recomputed in a cheap O(pool) pass |
+//!
+//! Why `h_DTR` is *not* a heap: its score `c(S)/[m(S)·staleness(S)]`
+//! re-orders as the clock advances (a cheap-but-fresh storage overtakes an
+//! expensive-but-stale one), so no clock-independent key exists and a
+//! cached-key min-heap would return wrong victims. The expensive part of the
+//! score is the numerator's evicted-neighborhood traversal, and that is what
+//! gets cached: evicting or rematerializing a storage dirties only the
+//! resident frontier of its evicted region ([`InvalidationScope`]), driven
+//! for ẽ* by union-find component subscriptions
+//! ([`PolicyIndex::on_component_touched`]).
+//!
+//! Every index is **decision-exact**: it must produce the *identical victim
+//! sequence* as [`ScanIndex`] for its heuristic (ties broken by lowest
+//! [`StorageId`]), differing only in metadata-access counts and wall time.
+//! `tests/prop_policy_equiv.rs` pins this property over random training
+//! tapes. `h_rand` and √n sampling are inherently RNG-stream-coupled, so
+//! [`make_index`] routes them to the scan (under [`PolicyKind::Indexed`]
+//! the exact indexes take precedence and sampling is a no-op).
+//!
+//! Caveat: scan ties are detected on IEEE-equal `f64` scores while the
+//! specialized indexes compare the underlying integers, so equivalence
+//! additionally assumes clocks/sizes below 2^52 (where `1/x` is still
+//! injective in `f64`) — 52 days of nanosecond clock.
+
+mod cached;
+mod dealloc;
+mod lazy_heap;
+mod scan;
+mod size_heap;
+mod staleness;
+
+use std::time::Instant;
+
+pub use cached::CachedCostScan;
+pub use dealloc::DeallocPolicy;
+pub use lazy_heap::LazyHeapIndex;
+pub use scan::ScanIndex;
+pub use size_heap::SizeHeapIndex;
+pub use staleness::StalenessListIndex;
+
+use super::evicted::{resident_frontier, EvictedScratch};
+use super::graph::Graph;
+use super::heuristics::{cached_cost, score, CostKind, Heuristic, InvalidationScope, ScoreCtx};
+use super::ids::StorageId;
+use super::unionfind::UnionFind;
+use crate::util::rng::Rng;
+
+/// Policy-selection knob (`Config::index`): which victim-selection index
+/// family the runtime builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Default: an exact incremental index where one exists for the
+    /// configured heuristic, the reference scan otherwise (and whenever √n
+    /// sampling is requested, whose semantics are scan-coupled).
+    Auto,
+    /// Always the reference linear scan.
+    Scan,
+    /// Prefer the exact index even when √n sampling is requested (the
+    /// index's exact argmin supersedes the sampled approximation).
+    Indexed,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Auto => "auto",
+            PolicyKind::Scan => "scan",
+            PolicyKind::Indexed => "indexed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "auto" => PolicyKind::Auto,
+            "scan" => PolicyKind::Scan,
+            "indexed" | "index" => PolicyKind::Indexed,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [PolicyKind; 3] {
+        [PolicyKind::Auto, PolicyKind::Scan, PolicyKind::Indexed]
+    }
+}
+
+/// Everything a victim search may read or account against, borrowed
+/// disjointly from the runtime for the duration of one `pop_min`.
+pub struct SelectCtx<'a> {
+    /// The evictable pool (membership source of truth; scan iteration order).
+    pub pool: &'a [StorageId],
+    pub graph: &'a Graph,
+    pub uf: &'a mut UnionFind,
+    pub scratch: &'a mut EvictedScratch,
+    pub clock: u64,
+    pub rng: &'a mut Rng,
+    /// Metadata-access counter (Fig. 12).
+    pub accesses: &'a mut u64,
+    /// Scratch for dedup'ing UF roots during ẽ* queries; after a
+    /// [`SelectCtx::cached_cost_of`] call on an eq-class heuristic it holds
+    /// the distinct component roots the query observed.
+    pub root_buf: &'a mut Vec<u32>,
+    pub heuristic: Heuristic,
+    /// Small-tensor filter threshold in bytes (0 = filter off).
+    pub min_size: u64,
+    /// Appendix E.2 √n sampling requested (honored by the scan only).
+    pub sqrt_sample: bool,
+    /// Measure heuristic-evaluation wall time into `cost_ns`.
+    pub profile: bool,
+    pub cost_ns: &'a mut u64,
+}
+
+impl SelectCtx<'_> {
+    /// Full score of `s` (fresh numerator), with profiling accounting.
+    pub fn score_of(&mut self, s: StorageId) -> f64 {
+        let t0 = if self.profile { Some(Instant::now()) } else { None };
+        let h = self.heuristic;
+        let mut sctx = ScoreCtx {
+            graph: self.graph,
+            uf: &mut *self.uf,
+            scratch: &mut *self.scratch,
+            clock: self.clock,
+            rng: &mut *self.rng,
+            accesses: &mut *self.accesses,
+            root_buf: &mut *self.root_buf,
+        };
+        let v = score(h, s, &mut sctx);
+        if let Some(t) = t0 {
+            *self.cost_ns += t.elapsed().as_nanos() as u64;
+        }
+        v
+    }
+
+    /// Cacheable numerator of `s` (see `heuristics::cached_cost`), with
+    /// profiling accounting. For eq-class heuristics the observed component
+    /// roots are left in `self.root_buf`.
+    pub fn cached_cost_of(&mut self, s: StorageId) -> f64 {
+        let t0 = if self.profile { Some(Instant::now()) } else { None };
+        let h = self.heuristic;
+        let mut sctx = ScoreCtx {
+            graph: self.graph,
+            uf: &mut *self.uf,
+            scratch: &mut *self.scratch,
+            clock: self.clock,
+            rng: &mut *self.rng,
+            accesses: &mut *self.accesses,
+            root_buf: &mut *self.root_buf,
+        };
+        let v = cached_cost(h, s, &mut sctx);
+        if let Some(t) = t0 {
+            *self.cost_ns += t.elapsed().as_nanos() as u64;
+        }
+        v
+    }
+}
+
+/// Incremental victim-selection index. The runtime reports every pool
+/// membership change, access, and heuristic-relevant state change; in
+/// exchange `pop_min` must return exactly the storage the reference scan
+/// would pick (lowest score, ties by lowest id).
+///
+/// `pop_min` *peeks*: the caller is expected to evict the returned storage
+/// immediately, which removes it through [`PolicyIndex::on_remove`].
+pub trait PolicyIndex: Send {
+    fn name(&self) -> &'static str;
+
+    /// `s` entered the evictable pool.
+    fn on_insert(&mut self, s: StorageId, g: &Graph);
+
+    /// `s` left the evictable pool (evicted, locked, pinned, or banished).
+    fn on_remove(&mut self, s: StorageId, g: &Graph);
+
+    /// `s`'s `last_access` advanced to `clock` (it may or may not be pooled).
+    fn on_access(&mut self, s: StorageId, g: &Graph, clock: u64);
+
+    /// The logical clock advanced (staleness denominators shift globally).
+    /// No current index needs it — the staleness list encodes order, and
+    /// the cached-cost scan recomputes denominators per pass — but kinetic
+    /// or epoch-batched indexes slot in here without touching the runtime.
+    fn on_clock(&mut self, _clock: u64) {}
+
+    /// The heuristic-relevant state around `s` changed: residency flip,
+    /// new views/edges from a freshly recorded operator, or banishment.
+    /// Indexes expand `s` to their [`InvalidationScope`] and drop any cached
+    /// values that could depend on it. `accesses` counts maintenance
+    /// traversals (Fig. 12).
+    fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64);
+
+    /// A union-find component's running cost changed (evict/remat
+    /// add_cost/sub_cost on `root`).
+    fn on_component_touched(&mut self, _root: u32) {}
+
+    /// Two evicted components merged (`absorbed` into `kept`).
+    fn on_components_merged(&mut self, _kept: u32, _absorbed: u32) {}
+
+    /// The current argmin under `ctx`, or `None` if the pool is empty or
+    /// fully filtered with no fallback. Does not structurally remove the
+    /// winner — the caller evicts it, triggering `on_remove`.
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId>;
+}
+
+/// Build the victim-selection index for a heuristic under the given knob.
+/// Default (`Auto`): indexed where an exact index exists, scan otherwise.
+pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn PolicyIndex> {
+    let want_index = match kind {
+        PolicyKind::Scan => false,
+        PolicyKind::Auto => !sqrt_sample,
+        PolicyKind::Indexed => true,
+    };
+    if !want_index || matches!(h, Heuristic::Random) {
+        return Box::new(ScanIndex::new());
+    }
+    match h {
+        Heuristic::Param(p) if p.cost == CostKind::NoCost && !p.use_size && p.use_staleness => {
+            Box::new(StalenessListIndex::new())
+        }
+        Heuristic::Param(p) if p.cost == CostKind::NoCost && p.use_size && !p.use_staleness => {
+            Box::new(SizeHeapIndex::new())
+        }
+        _ if h.clock_free() => Box::new(LazyHeapIndex::new(h)),
+        Heuristic::Param(_) => Box::new(CachedCostScan::new(h)),
+        _ => Box::new(ScanIndex::new()),
+    }
+}
+
+/// Shared lazy-invalidation helper: expands a changed storage to the set of
+/// pool entries whose cached numerator must be recomputed, according to the
+/// heuristic's [`InvalidationScope`].
+pub(crate) struct Dirtier {
+    scope: InvalidationScope,
+    scratch: EvictedScratch,
+    /// Output of the last [`Dirtier::collect`] call.
+    pub(crate) buf: Vec<StorageId>,
+}
+
+impl Dirtier {
+    pub(crate) fn new(h: Heuristic) -> Self {
+        Dirtier {
+            scope: h.invalidation_scope(),
+            scratch: EvictedScratch::new(),
+            buf: Vec::new(),
+        }
+    }
+
+    /// Collect into [`Dirtier::buf`] the storages whose cached numerator may
+    /// have changed when `s` changed.
+    pub(crate) fn collect(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
+        self.buf.clear();
+        match self.scope {
+            InvalidationScope::Constant => {}
+            InvalidationScope::SelfOnly => self.buf.push(s),
+            InvalidationScope::EqNeighborhood => {
+                // ẽ* reads only direct edges: s plus its resident direct
+                // neighbors. Component-cost changes arrive separately
+                // through the union-find subscription hooks.
+                self.buf.push(s);
+                for n in g.neighbors(s) {
+                    *accesses += 1;
+                    if g.storage(n).resident {
+                        self.buf.push(n);
+                    }
+                }
+            }
+            InvalidationScope::EvictedRegion => {
+                resident_frontier(g, s, &mut self.scratch, accesses, &mut self.buf);
+                if !g.storage(s).resident {
+                    // `s` itself may re-enter the pool before recomputation;
+                    // make sure its own slot is dirtied too.
+                    self.buf.push(s);
+                }
+            }
+        }
+    }
+}
+
+/// Shared eq-class subscription bookkeeping: which pool entries' cached ẽ*
+/// sums read which union-find component roots. Generation tags make stale
+/// subscriptions self-cleaning.
+#[derive(Default)]
+pub(crate) struct EqSubs {
+    subs: std::collections::HashMap<u32, SubList>,
+    gen: Vec<u64>,
+}
+
+/// Per-root subscriber list with a doubling compaction watermark: stale
+/// generations are pruned only when the list doubles past the last live
+/// size, keeping subscription amortized O(1) even for roots with thousands
+/// of live subscribers.
+#[derive(Default)]
+struct SubList {
+    entries: Vec<(u32, u64)>,
+    watermark: usize,
+}
+
+impl EqSubs {
+    fn slot(&mut self, s: StorageId) -> usize {
+        let i = s.idx();
+        if self.gen.len() <= i {
+            self.gen.resize(i + 1, 0);
+        }
+        i
+    }
+
+    /// Invalidate any previous subscriptions of `s` (fresh cache incoming or
+    /// entry leaving the pool).
+    pub(crate) fn bump(&mut self, s: StorageId) {
+        let i = self.slot(s);
+        self.gen[i] += 1;
+    }
+
+    /// Register `s`'s fresh cache as depending on `roots`. Long-lived roots
+    /// accumulate superseded-generation entries (they are otherwise pruned
+    /// only when the root is touched), so compact a list in place once it
+    /// doubles past its live watermark — untouched components stay bounded
+    /// without O(list) work per subscription.
+    pub(crate) fn subscribe(&mut self, s: StorageId, roots: &[u32]) {
+        let i = self.slot(s);
+        let g = self.gen[i];
+        for &r in roots {
+            let gen = &self.gen;
+            let list = self.subs.entry(r).or_default();
+            if list.entries.len() >= 64 && list.entries.len() >= list.watermark {
+                list.entries
+                    .retain(|&(sid, sg)| gen.get(StorageId(sid).idx()).copied() == Some(sg));
+                list.watermark = 2 * list.entries.len().max(32);
+            }
+            list.entries.push((s.0, g));
+        }
+    }
+
+    /// A component's cost changed: drain its live subscribers into `mark`.
+    pub(crate) fn touched(&mut self, root: u32, mut mark: impl FnMut(StorageId)) {
+        if let Some(list) = self.subs.remove(&root) {
+            for (sid, g) in list.entries {
+                let s = StorageId(sid);
+                if self.gen.get(s.idx()).copied() == Some(g) {
+                    mark(s);
+                }
+            }
+        }
+    }
+
+    /// Components merged: both cost sums changed; drain both subscriber
+    /// lists (survivors re-subscribe on their next recomputation).
+    pub(crate) fn merged(&mut self, kept: u32, absorbed: u32, mut mark: impl FnMut(StorageId)) {
+        for r in [kept, absorbed] {
+            self.touched(r, &mut mark);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn factory_routes_exactly() {
+        let route = |h: Heuristic, k: PolicyKind, sq: bool| make_index(h, k, sq).name();
+        // Reference scan: forced, sampled, or h_rand.
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Scan, false), "scan");
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Auto, true), "scan");
+        assert_eq!(route(Heuristic::Random, PolicyKind::Indexed, false), "scan");
+        // Exact indexes under Auto.
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Auto, false), "staleness_list");
+        assert_eq!(route(Heuristic::size(), PolicyKind::Auto, false), "size_heap");
+        assert_eq!(route(Heuristic::dtr(), PolicyKind::Auto, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Auto, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::dtr_local(), PolicyKind::Auto, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::Msps, PolicyKind::Auto, false), "lazy_heap");
+        assert_eq!(route(Heuristic::EStarCount, PolicyKind::Auto, false), "lazy_heap");
+        // Indexed overrides sampling.
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Indexed, true), "staleness_list");
+        // Every ablation cell routes somewhere deterministic.
+        for h in Heuristic::ablation_grid() {
+            let name = route(h, PolicyKind::Auto, false);
+            assert_ne!(name, "scan", "{} should have an exact index", h.name());
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The reference victim search: argmin of the heuristic over the whole
+//! evictable pool, recomputing every score from scratch — the unoptimized
+//! O(pool)-per-eviction baseline the incremental indexes are measured
+//! against, and the only correct home for the RNG-coupled strategies
+//! (`h_rand` scoring, Appendix E.2 √n sampling).
+//!
+//! The E.2 search approximations live here as *index-level strategies*
+//! rather than runtime special cases: one `consider` path serves the full
+//! scan, the sampled scan, and the filter-starved fallback, so the scoring
+//! logic exists exactly once.
+
+use super::super::graph::Graph;
+use super::super::ids::StorageId;
+use super::{PolicyIndex, SelectCtx};
+
+#[derive(Default)]
+pub struct ScanIndex;
+
+impl ScanIndex {
+    pub fn new() -> Self {
+        ScanIndex
+    }
+
+    /// Score `s` and fold it into `best` (lowest score wins; ties broken by
+    /// lowest storage id). `filtered` applies the small-tensor threshold.
+    fn consider(
+        ctx: &mut SelectCtx<'_>,
+        s: StorageId,
+        filtered: bool,
+        best: &mut Option<(f64, StorageId)>,
+    ) {
+        if filtered && ctx.graph.storage(s).size < ctx.min_size {
+            return;
+        }
+        let sc = ctx.score_of(s);
+        if best.map_or(true, |(b, bs)| sc < b || (sc == b && s.0 < bs.0)) {
+            *best = Some((sc, s));
+        }
+    }
+
+    fn scan(ctx: &mut SelectCtx<'_>, filtered: bool, best: &mut Option<(f64, StorageId)>) {
+        let pool = ctx.pool;
+        for &s in pool {
+            Self::consider(ctx, s, filtered, best);
+        }
+    }
+}
+
+impl PolicyIndex for ScanIndex {
+    fn name(&self) -> &'static str {
+        "scan"
+    }
+
+    fn on_insert(&mut self, _s: StorageId, _g: &Graph) {}
+    fn on_remove(&mut self, _s: StorageId, _g: &Graph) {}
+    fn on_access(&mut self, _s: StorageId, _g: &Graph, _clock: u64) {}
+    fn invalidate(&mut self, _s: StorageId, _g: &Graph, _accesses: &mut u64) {}
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        if ctx.pool.is_empty() {
+            return None;
+        }
+        let mut best: Option<(f64, StorageId)> = None;
+
+        if ctx.sqrt_sample && ctx.pool.len() > 4 {
+            let pool = ctx.pool;
+            let n = pool.len();
+            let k = (n as f64).sqrt().ceil() as usize;
+            let picks = ctx.rng.sample_indices(n, k.min(n));
+            for idx in picks {
+                Self::consider(ctx, pool[idx], true, &mut best);
+            }
+            // Fallback: if the sample was entirely filtered out, scan fully.
+            if best.is_none() {
+                Self::scan(ctx, true, &mut best);
+            }
+        } else {
+            Self::scan(ctx, true, &mut best);
+        }
+
+        // Final fallback when the size filter starved the search.
+        if best.is_none() && ctx.min_size > 0 {
+            Self::scan(ctx, false, &mut best);
+        }
+
+        best.map(|(_, s)| s)
+    }
+}

@@ -1,0 +1,172 @@
+//! Incremental `h_size` index: a lazy max-size heap (paper §3.2 — the
+//! "evict the biggest tensor" policy needs no rescans because sizes are
+//! immutable).
+//!
+//! `h_size`'s score is `1/max(1, size)`: a fixed key per storage. The heap
+//! orders by `(max(1, size) descending, id ascending)` — exactly the scan's
+//! `(score, id)` order — and deletes lazily: entries for storages that left
+//! the pool are skipped when they surface (stale-entry skipping). The
+//! small-tensor filter is a no-op for this heuristic: if the largest
+//! storage is below the threshold, every storage is, and the scan's
+//! starved fallback picks the same argmin the unfiltered heap does.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::super::graph::Graph;
+use super::super::ids::StorageId;
+use super::{PolicyIndex, SelectCtx};
+
+pub struct SizeHeapIndex {
+    /// Max-heap over `(effective size, Reverse(id))`.
+    heap: BinaryHeap<(u64, Reverse<u32>)>,
+    in_pool: Vec<bool>,
+}
+
+impl Default for SizeHeapIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SizeHeapIndex {
+    pub fn new() -> Self {
+        SizeHeapIndex { heap: BinaryHeap::new(), in_pool: Vec::new() }
+    }
+
+    fn slot(&mut self, s: StorageId) -> usize {
+        let i = s.idx();
+        if self.in_pool.len() <= i {
+            self.in_pool.resize(i + 1, false);
+        }
+        i
+    }
+
+    /// Drop dead entries once they outnumber the live pool (keeps the heap
+    /// linear in pool size despite lazy deletion).
+    fn maybe_compact(&mut self, pool_len: usize) {
+        if self.heap.len() > 2 * pool_len + 64 {
+            let in_pool = &self.in_pool;
+            let entries: Vec<_> = self
+                .heap
+                .drain()
+                .filter(|&(_, Reverse(id))| in_pool.get(id as usize).copied().unwrap_or(false))
+                .collect();
+            self.heap = BinaryHeap::from(entries);
+        }
+    }
+}
+
+impl PolicyIndex for SizeHeapIndex {
+    fn name(&self) -> &'static str {
+        "size_heap"
+    }
+
+    fn on_insert(&mut self, s: StorageId, g: &Graph) {
+        let size = g.storage(s).size.max(1);
+        let i = self.slot(s);
+        if !self.in_pool[i] {
+            self.in_pool[i] = true;
+            self.heap.push((size, Reverse(s.0)));
+        }
+    }
+
+    fn on_remove(&mut self, s: StorageId, _g: &Graph) {
+        let i = self.slot(s);
+        self.in_pool[i] = false;
+    }
+
+    fn on_access(&mut self, _s: StorageId, _g: &Graph, _clock: u64) {}
+    fn invalidate(&mut self, _s: StorageId, _g: &Graph, _accesses: &mut u64) {}
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        self.maybe_compact(ctx.pool.len());
+        while let Some(&(_, Reverse(id))) = self.heap.peek() {
+            if self.in_pool.get(id as usize).copied().unwrap_or(false) {
+                *ctx.accesses += 1;
+                return Some(StorageId(id));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::evicted::EvictedScratch;
+    use crate::dtr::heuristics::Heuristic;
+    use crate::dtr::unionfind::UnionFind;
+    use crate::util::rng::Rng;
+
+    fn pop(idx: &mut SizeHeapIndex, g: &Graph, pool: &[StorageId]) -> Option<StorageId> {
+        let mut uf = UnionFind::new();
+        let mut scratch = EvictedScratch::new();
+        let mut rng = Rng::new(1);
+        let mut acc = 0u64;
+        let mut roots = Vec::new();
+        let mut cost_ns = 0u64;
+        let mut ctx = SelectCtx {
+            pool,
+            graph: g,
+            uf: &mut uf,
+            scratch: &mut scratch,
+            clock: 0,
+            rng: &mut rng,
+            accesses: &mut acc,
+            root_buf: &mut roots,
+            heuristic: Heuristic::size(),
+            min_size: 0,
+            sqrt_sample: false,
+            profile: false,
+            cost_ns: &mut cost_ns,
+        };
+        idx.pop_min(&mut ctx)
+    }
+
+    #[test]
+    fn pops_largest_with_lazy_deletion_and_id_ties() {
+        let mut g = Graph::new();
+        let sizes = [4u64, 100, 100, 7];
+        let ss: Vec<StorageId> = sizes
+            .iter()
+            .map(|&sz| {
+                let s = g.new_storage(sz, 0);
+                g.new_tensor(s, None, false);
+                g.storage_mut(s).resident = true;
+                s
+            })
+            .collect();
+        let mut idx = SizeHeapIndex::new();
+        for &s in &ss {
+            idx.on_insert(s, &g);
+        }
+        // Tie on 100 bytes -> lowest id.
+        assert_eq!(pop(&mut idx, &g, &ss), Some(ss[1]));
+        idx.on_remove(ss[1], &g);
+        assert_eq!(pop(&mut idx, &g, &ss), Some(ss[2]));
+        idx.on_remove(ss[2], &g);
+        assert_eq!(pop(&mut idx, &g, &ss), Some(ss[3]));
+        // Re-insertion after leaving the pool is found again.
+        idx.on_insert(ss[2], &g);
+        assert_eq!(pop(&mut idx, &g, &ss), Some(ss[2]));
+    }
+
+    #[test]
+    fn zero_sized_ties_with_one_byte() {
+        // score uses max(1, size): a 0-byte and a 1-byte storage tie, so the
+        // lower id must win regardless of raw size.
+        let mut g = Graph::new();
+        let s1 = g.new_storage(1, 0);
+        g.new_tensor(s1, None, false);
+        g.storage_mut(s1).resident = true;
+        let s0 = g.new_storage(0, 1);
+        g.new_tensor(s0, None, false);
+        g.storage_mut(s0).resident = true;
+        let mut idx = SizeHeapIndex::new();
+        idx.on_insert(s0, &g);
+        idx.on_insert(s1, &g);
+        assert_eq!(pop(&mut idx, &g, &[s1, s0]), Some(s1));
+    }
+}

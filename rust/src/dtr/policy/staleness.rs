@@ -1,0 +1,263 @@
+//! Incremental `h_LRU` index: an intrusive doubly-linked list ordered by
+//! `last_access` (paper §3.2 / Appendix E.1 — staleness bookkeeping without
+//! rescanning the pool).
+//!
+//! `h_LRU`'s score is `1/(clock − last_access + 1)`: although the *value*
+//! changes every clock tick, the *order* between two storages never does —
+//! it is exactly the order of their `last_access` stamps. Accesses arrive in
+//! nondecreasing clock order, so "detach + append at tail" keeps the list
+//! sorted and `pop_min` reads the head: O(1) per maintenance event versus
+//! the scan's O(pool) per eviction.
+//!
+//! Equal `last_access` stamps (zero-cost ops don't advance the clock) form
+//! contiguous runs; `pop_min` resolves a run by lowest storage id, matching
+//! the reference scan's tie-break. The small-tensor filter walks runs in
+//! staleness order and falls back to the unfiltered argmin when starved,
+//! mirroring the scan's fallback.
+
+use super::super::graph::Graph;
+use super::super::ids::StorageId;
+use super::{PolicyIndex, SelectCtx};
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Copy)]
+struct Node {
+    prev: u32,
+    next: u32,
+    la: u64,
+    in_list: bool,
+}
+
+const EMPTY: Node = Node { prev: NIL, next: NIL, la: 0, in_list: false };
+
+pub struct StalenessListIndex {
+    nodes: Vec<Node>,
+    head: u32,
+    tail: u32,
+}
+
+impl Default for StalenessListIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StalenessListIndex {
+    pub fn new() -> Self {
+        StalenessListIndex { nodes: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    fn slot(&mut self, s: StorageId) -> usize {
+        let i = s.idx();
+        if self.nodes.len() <= i {
+            self.nodes.resize(i + 1, EMPTY);
+        }
+        i
+    }
+
+    fn detach(&mut self, i: usize) {
+        if !self.nodes[i].in_list {
+            return;
+        }
+        let Node { prev, next, .. } = self.nodes[i];
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev as usize].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next as usize].prev = prev;
+        }
+        self.nodes[i] = Node { la: self.nodes[i].la, ..EMPTY };
+    }
+
+    /// Insert keeping ascending `la` order (stable: equal stamps go after
+    /// existing ones). Walks backward from the tail — re-insertions after an
+    /// unlock carry the newest stamps, so the walk is almost always empty.
+    fn insert_sorted(&mut self, i: usize, la: u64) {
+        debug_assert!(!self.nodes[i].in_list);
+        let mut after = self.tail;
+        while after != NIL && self.nodes[after as usize].la > la {
+            after = self.nodes[after as usize].prev;
+        }
+        let next = if after == NIL { self.head } else { self.nodes[after as usize].next };
+        self.nodes[i] = Node { prev: after, next, la, in_list: true };
+        let iu = i as u32;
+        if after == NIL {
+            self.head = iu;
+        } else {
+            self.nodes[after as usize].next = iu;
+        }
+        if next == NIL {
+            self.tail = iu;
+        } else {
+            self.nodes[next as usize].prev = iu;
+        }
+    }
+}
+
+impl PolicyIndex for StalenessListIndex {
+    fn name(&self) -> &'static str {
+        "staleness_list"
+    }
+
+    fn on_insert(&mut self, s: StorageId, g: &Graph) {
+        let la = g.storage(s).last_access;
+        let i = self.slot(s);
+        if !self.nodes[i].in_list {
+            self.insert_sorted(i, la);
+        }
+    }
+
+    fn on_remove(&mut self, s: StorageId, _g: &Graph) {
+        let i = self.slot(s);
+        self.detach(i);
+    }
+
+    fn on_access(&mut self, s: StorageId, _g: &Graph, clock: u64) {
+        let i = self.slot(s);
+        if self.nodes[i].in_list {
+            debug_assert!(self.tail == i as u32 || self.nodes[self.tail as usize].la <= clock);
+            self.detach(i);
+            self.insert_sorted(i, clock);
+        }
+    }
+
+    fn invalidate(&mut self, _s: StorageId, _g: &Graph, _accesses: &mut u64) {}
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        if self.head == NIL {
+            return None;
+        }
+        // Walk runs of equal staleness in order; the first run containing a
+        // filter-qualifying entry yields the argmin (lowest id within it).
+        let mut p = self.head;
+        let mut head_run_best: Option<u32> = None;
+        let mut first_run = true;
+        while p != NIL {
+            let run_la = self.nodes[p as usize].la;
+            let mut run_best: Option<u32> = None;
+            while p != NIL && self.nodes[p as usize].la == run_la {
+                *ctx.accesses += 1;
+                if ctx.graph.storage(StorageId(p)).size >= ctx.min_size {
+                    run_best = Some(run_best.map_or(p, |b| b.min(p)));
+                }
+                if first_run {
+                    head_run_best = Some(head_run_best.map_or(p, |b| b.min(p)));
+                }
+                p = self.nodes[p as usize].next;
+            }
+            if let Some(b) = run_best {
+                return Some(StorageId(b));
+            }
+            first_run = false;
+        }
+        // Size filter starved the whole pool: the scan's fallback is the
+        // unfiltered argmin — the lowest id in the stalest run.
+        head_run_best.map(StorageId)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtr::evicted::EvictedScratch;
+    use crate::dtr::heuristics::Heuristic;
+    use crate::dtr::unionfind::UnionFind;
+    use crate::util::rng::Rng;
+
+    fn graph_with(sizes_la: &[(u64, u64)]) -> (Graph, Vec<StorageId>) {
+        let mut g = Graph::new();
+        let ss: Vec<StorageId> = sizes_la
+            .iter()
+            .map(|&(size, la)| {
+                let s = g.new_storage(size, 0);
+                g.new_tensor(s, None, false);
+                g.storage_mut(s).resident = true;
+                g.storage_mut(s).last_access = la;
+                s
+            })
+            .collect();
+        (g, ss)
+    }
+
+    fn pop(idx: &mut StalenessListIndex, g: &Graph, pool: &[StorageId], min_size: u64) -> Option<StorageId> {
+        let mut uf = UnionFind::new();
+        let mut scratch = EvictedScratch::new();
+        let mut rng = Rng::new(1);
+        let mut acc = 0u64;
+        let mut roots = Vec::new();
+        let mut cost_ns = 0u64;
+        let mut ctx = SelectCtx {
+            pool,
+            graph: g,
+            uf: &mut uf,
+            scratch: &mut scratch,
+            clock: 100,
+            rng: &mut rng,
+            accesses: &mut acc,
+            root_buf: &mut roots,
+            heuristic: Heuristic::lru(),
+            min_size,
+            sqrt_sample: false,
+            profile: false,
+            cost_ns: &mut cost_ns,
+        };
+        idx.pop_min(&mut ctx)
+    }
+
+    #[test]
+    fn pops_stalest_then_reorders_on_access() {
+        let (g, ss) = graph_with(&[(1, 5), (1, 2), (1, 9)]);
+        let mut idx = StalenessListIndex::new();
+        for &s in &ss {
+            idx.on_insert(s, &g);
+        }
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[1]));
+        idx.on_access(ss[1], &g, 50);
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[0]));
+        idx.on_remove(ss[0], &g);
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[2]));
+    }
+
+    #[test]
+    fn equal_stamps_break_by_lowest_id() {
+        let (g, ss) = graph_with(&[(1, 7), (1, 7), (1, 7)]);
+        let mut idx = StalenessListIndex::new();
+        // Insert out of id order; tie must still resolve to the lowest id.
+        idx.on_insert(ss[2], &g);
+        idx.on_insert(ss[0], &g);
+        idx.on_insert(ss[1], &g);
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[0]));
+    }
+
+    #[test]
+    fn filter_walks_runs_and_falls_back_when_starved() {
+        let (g, ss) = graph_with(&[(1, 2), (100, 5), (1, 9)]);
+        let mut idx = StalenessListIndex::new();
+        for &s in &ss {
+            idx.on_insert(s, &g);
+        }
+        // Threshold 10: the stalest entry is too small; next run qualifies.
+        assert_eq!(pop(&mut idx, &g, &ss, 10), Some(ss[1]));
+        // Threshold 1000: everything filtered -> unfiltered argmin.
+        assert_eq!(pop(&mut idx, &g, &ss, 1000), Some(ss[0]));
+    }
+
+    #[test]
+    fn out_of_order_insert_keeps_sorted() {
+        let (g, ss) = graph_with(&[(1, 9), (1, 1), (1, 5)]);
+        let mut idx = StalenessListIndex::new();
+        for &s in &ss {
+            idx.on_insert(s, &g);
+        }
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[1]));
+        idx.on_remove(ss[1], &g);
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[2]));
+        idx.on_remove(ss[2], &g);
+        assert_eq!(pop(&mut idx, &g, &ss, 0), Some(ss[0]));
+    }
+}

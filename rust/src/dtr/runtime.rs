@@ -13,9 +13,9 @@ use anyhow::Result;
 use super::backend::Backend;
 use super::evicted::EvictedScratch;
 use super::graph::Graph;
-use super::heuristics::{score, Heuristic, ScoreCtx};
+use super::heuristics::Heuristic;
 use super::ids::{OpId, StorageId, TensorId};
-use super::policy::DeallocPolicy;
+use super::policy::{make_index, DeallocPolicy, PolicyIndex, PolicyKind, SelectCtx};
 use super::unionfind::UnionFind;
 use crate::util::rng::Rng;
 
@@ -26,6 +26,9 @@ pub struct Config {
     pub budget: u64,
     pub heuristic: Heuristic,
     pub policy: DeallocPolicy,
+    /// Victim-selection index family (`policy::make_index`): incremental
+    /// indexes where exact, the reference scan otherwise.
+    pub index: PolicyKind,
     /// Appendix E.2 optimization: only search a random √n sample of the pool.
     pub sqrt_sample: bool,
     /// Appendix E.2 optimization: skip tensors smaller than 1% of the pool's
@@ -35,6 +38,9 @@ pub struct Config {
     pub seed: u64,
     /// Measure wall-clock time of the victim-search loop (Fig. 4 profiling).
     pub profile: bool,
+    /// Record every eviction victim into `Stats::victims` (diagnostics and
+    /// the index/scan equivalence property).
+    pub trace_victims: bool,
 }
 
 impl Default for Config {
@@ -43,10 +49,12 @@ impl Default for Config {
             budget: u64::MAX,
             heuristic: Heuristic::dtr_eq(),
             policy: DeallocPolicy::EagerEvict,
+            index: PolicyKind::Auto,
             sqrt_sample: false,
             small_filter: false,
             seed: 0x5EED,
             profile: false,
+            trace_victims: false,
         }
     }
 }
@@ -75,12 +83,32 @@ pub struct Stats {
     pub cost_compute_ns: u64,
     /// Number of victim-search passes.
     pub eviction_searches: u64,
+    /// Eviction victim sequence (only populated under `Config::trace_victims`).
+    pub victims: Vec<StorageId>,
 }
 
 impl Stats {
     /// Total compute (the simulator's headline metric).
     pub fn total_compute(&self) -> u64 {
         self.base_compute + self.remat_compute
+    }
+
+    /// Decision-level equality: every counter that reflects *what the
+    /// runtime decided* (clock, compute, evictions, memory, victim trace)
+    /// but not *how cheaply it decided it* — metadata accesses and
+    /// wall-clock profiling legitimately differ between an incremental
+    /// policy index and the reference scan making identical decisions.
+    pub fn same_decisions(&self, o: &Stats) -> bool {
+        self.clock == o.clock
+            && self.base_compute == o.base_compute
+            && self.remat_compute == o.remat_compute
+            && self.remat_count == o.remat_count
+            && self.evict_count == o.evict_count
+            && self.banish_count == o.banish_count
+            && self.memory == o.memory
+            && self.peak_memory == o.peak_memory
+            && self.eviction_searches == o.eviction_searches
+            && self.victims == o.victims
     }
 
     /// Slowdown factor vs. the unbudgeted execution.
@@ -136,6 +164,13 @@ pub struct Runtime<B: Backend> {
     rng: Rng,
     /// Evictable storages (resident, unlocked, unpinned).
     pool: Vec<StorageId>,
+    /// Running byte total of the pool (the small-filter threshold without an
+    /// O(pool) sum per search; checked against a fresh sum in
+    /// `check_invariants`).
+    pool_bytes: u64,
+    /// Victim-selection index (`Config::index`); kept in lockstep with the
+    /// pool through the `PolicyIndex` maintenance hooks.
+    index: Box<dyn PolicyIndex>,
     /// Storages awaiting banishment (policy = Banish, blocked on evicted
     /// dependents).
     pending_banish: Vec<StorageId>,
@@ -148,6 +183,7 @@ pub struct Runtime<B: Backend> {
 impl<B: Backend> Runtime<B> {
     pub fn new(cfg: Config, backend: B) -> Self {
         let rng = Rng::new(cfg.seed);
+        let index = make_index(cfg.heuristic, cfg.index, cfg.sqrt_sample);
         Runtime {
             cfg,
             graph: Graph::new(),
@@ -157,6 +193,8 @@ impl<B: Backend> Runtime<B> {
             scratch: EvictedScratch::new(),
             rng,
             pool: Vec::new(),
+            pool_bytes: 0,
+            index,
             pending_banish: Vec::new(),
             root_buf: Vec::new(),
             was_defined: Vec::new(),
@@ -171,6 +209,11 @@ impl<B: Backend> Runtime<B> {
         &mut self.backend
     }
 
+    /// Name of the active victim-selection index (observability).
+    pub fn index_name(&self) -> &'static str {
+        self.index.name()
+    }
+
     // ---------------------------------------------------------------- pool
 
     #[inline]
@@ -178,6 +221,8 @@ impl<B: Backend> Runtime<B> {
         if self.graph.storage(s).pool_pos == usize::MAX && self.graph.storage(s).evictable() {
             self.graph.storage_mut(s).pool_pos = self.pool.len();
             self.pool.push(s);
+            self.pool_bytes += self.graph.storage(s).size;
+            self.index.on_insert(s, &self.graph);
         }
     }
 
@@ -191,6 +236,8 @@ impl<B: Backend> Runtime<B> {
                 self.graph.storage_mut(last).pool_pos = pos;
             }
             self.graph.storage_mut(s).pool_pos = usize::MAX;
+            self.pool_bytes -= self.graph.storage(s).size;
+            self.index.on_remove(s, &self.graph);
         }
     }
 
@@ -248,6 +295,13 @@ impl<B: Backend> Runtime<B> {
         for &t in &out_tensors {
             let sid = self.graph.storage_of(t);
             self.graph.storage_mut(sid).refs += 1;
+        }
+        // Recording the operator added dependency edges (and, for aliases,
+        // view costs) around each output storage — which counts as evicted
+        // until committed. Dirty the affected neighborhoods.
+        for &t in &out_tensors {
+            let sid = self.graph.storage_of(t);
+            self.index.invalidate(sid, &self.graph, &mut self.stats.metadata_accesses);
         }
         self.perform(op, 0)?;
         Ok(out_tensors)
@@ -348,17 +402,27 @@ impl<B: Backend> Runtime<B> {
             } else {
                 let st = self.graph.storage_mut(sid);
                 st.resident = true;
+                // Stamp the access time before pooling: the staleness index
+                // then inserts at (or near) the list tail instead of walking
+                // past every fresher entry for a stale stamp. No search runs
+                // before the end-of-frame re-stamp, so decisions are
+                // unchanged.
+                st.last_access = self.stats.clock;
                 self.graph.tensor_mut(o).defined = true;
                 if uf_enabled && is_remat {
                     // Union-find split approximation: leave the component,
                     // subtracting our cost (Appendix C.2).
                     let handle = self.graph.storage(sid).uf;
                     let cost = self.graph.storage(sid).local_cost as f64;
-                    self.uf.sub_cost(handle, cost);
+                    let root = self.uf.sub_cost(handle, cost);
+                    self.index.on_component_touched(root);
                     let fresh = self.uf.make_set();
                     self.graph.storage_mut(sid).uf = fresh;
                 }
                 self.pool_refresh(sid);
+                // The storage just turned resident: its neighbors' evicted
+                // neighborhoods shrank.
+                self.index.invalidate(sid, &self.graph, &mut self.stats.metadata_accesses);
             }
         }
 
@@ -372,13 +436,16 @@ impl<B: Backend> Runtime<B> {
             self.stats.base_compute += cost;
         }
         let now = self.stats.clock;
+        self.index.on_clock(now);
         for &i in inputs {
             let sid = self.graph.storage_of(i);
             self.graph.storage_mut(sid).last_access = now;
+            self.index.on_access(sid, &self.graph, now);
         }
         for &o in &outputs {
             let sid = self.graph.storage_of(o);
             self.graph.storage_mut(sid).last_access = now;
+            self.index.on_access(sid, &self.graph, now);
         }
 
         Ok(())
@@ -408,8 +475,8 @@ impl<B: Backend> Runtime<B> {
         Ok(())
     }
 
-    /// Victim search: argmin of the heuristic over the evictable pool,
-    /// optionally restricted by the Appendix E.2 approximations.
+    /// Victim search: delegate the argmin to the configured policy index
+    /// (the reference scan or an incremental index — `policy::make_index`).
     fn select_victim(&mut self) -> Option<StorageId> {
         if self.pool.is_empty() {
             return None;
@@ -417,91 +484,45 @@ impl<B: Backend> Runtime<B> {
         let t0 = if self.cfg.profile { Some(std::time::Instant::now()) } else { None };
         self.stats.eviction_searches += 1;
 
-        // Optional small-tensor filter threshold: 1% of pool mean size.
+        // Optional small-tensor filter threshold: 1% of pool mean size
+        // (running byte counter; no per-search O(pool) sum).
         let min_size = if self.cfg.small_filter {
-            let total: u64 = self.pool.iter().map(|&s| self.graph.storage(s).size).sum();
-            (total / self.pool.len() as u64) / 100
+            (self.pool_bytes / self.pool.len() as u64) / 100
         } else {
             0
         };
 
-        let mut best: Option<(f64, StorageId)> = None;
-        let mut score_ns = 0u64;
-
-        let consider = |rt: &mut Self, s: StorageId, best: &mut Option<(f64, StorageId)>, score_ns: &mut u64| {
-            if rt.graph.storage(s).size < min_size {
-                return;
-            }
-            let s0 = if rt.cfg.profile { Some(std::time::Instant::now()) } else { None };
-            let mut ctx = ScoreCtx {
-                graph: &rt.graph,
-                uf: &mut rt.uf,
-                scratch: &mut rt.scratch,
-                clock: rt.stats.clock,
-                rng: &mut rt.rng,
-                accesses: &mut rt.stats.metadata_accesses,
-                root_buf: &mut rt.root_buf,
-            };
-            let sc = score(rt.cfg.heuristic, s, &mut ctx);
-            if let Some(t) = s0 {
-                *score_ns += t.elapsed().as_nanos() as u64;
-            }
-            if best.map_or(true, |(b, _)| sc < b) {
-                *best = Some((sc, s));
-            }
+        let mut cost_ns = 0u64;
+        let mut ctx = SelectCtx {
+            pool: &self.pool,
+            graph: &self.graph,
+            uf: &mut self.uf,
+            scratch: &mut self.scratch,
+            clock: self.stats.clock,
+            rng: &mut self.rng,
+            accesses: &mut self.stats.metadata_accesses,
+            root_buf: &mut self.root_buf,
+            heuristic: self.cfg.heuristic,
+            min_size,
+            sqrt_sample: self.cfg.sqrt_sample,
+            profile: self.cfg.profile,
+            cost_ns: &mut cost_ns,
         };
-
-        if self.cfg.sqrt_sample && self.pool.len() > 4 {
-            let n = self.pool.len();
-            let k = (n as f64).sqrt().ceil() as usize;
-            let picks = self.rng.sample_indices(n, k.min(n));
-            for idx in picks {
-                let s = self.pool[idx];
-                consider(self, s, &mut best, &mut score_ns);
-            }
-            // Fallback: if the sample was entirely filtered out, scan fully.
-            if best.is_none() {
-                for idx in 0..self.pool.len() {
-                    let s = self.pool[idx];
-                    consider(self, s, &mut best, &mut score_ns);
-                }
-            }
-        } else {
-            for idx in 0..self.pool.len() {
-                let s = self.pool[idx];
-                consider(self, s, &mut best, &mut score_ns);
-            }
-        }
-
-        // Final fallback when the size filter starved the search.
-        if best.is_none() && min_size > 0 {
-            for idx in 0..self.pool.len() {
-                let s = self.pool[idx];
-                let s0 = if self.cfg.profile { Some(std::time::Instant::now()) } else { None };
-                let mut ctx = ScoreCtx {
-                    graph: &self.graph,
-                    uf: &mut self.uf,
-                    scratch: &mut self.scratch,
-                    clock: self.stats.clock,
-                    rng: &mut self.rng,
-                    accesses: &mut self.stats.metadata_accesses,
-                    root_buf: &mut self.root_buf,
-                };
-                let sc = score(self.cfg.heuristic, s, &mut ctx);
-                if let Some(t) = s0 {
-                    score_ns += t.elapsed().as_nanos() as u64;
-                }
-                if best.map_or(true, |(b, _)| sc < b) {
-                    best = Some((sc, s));
-                }
-            }
-        }
+        let best = self.index.pop_min(&mut ctx);
 
         if let Some(t) = t0 {
             self.stats.eviction_loop_ns += t.elapsed().as_nanos() as u64;
-            self.stats.cost_compute_ns += score_ns;
+            self.stats.cost_compute_ns += cost_ns;
         }
-        best.map(|(_, s)| s)
+        best
+    }
+
+    /// Select and evict a single victim (bench and serving hook). Returns
+    /// the evicted storage, or `None` if the pool is empty.
+    pub fn evict_one(&mut self) -> Option<StorageId> {
+        let v = self.select_victim()?;
+        self.evict(v);
+        Some(v)
     }
 
     /// Evict a storage: undefine all views, free the buffer, and maintain
@@ -518,11 +539,15 @@ impl<B: Backend> Runtime<B> {
         self.graph.storage_mut(s).resident = false;
         self.pool_remove(s);
         self.stats.evict_count += 1;
+        if self.cfg.trace_victims {
+            self.stats.victims.push(s);
+        }
 
         if self.cfg.heuristic.needs_uf() {
             let handle = self.graph.storage(s).uf;
             let cost = self.graph.storage(s).local_cost as f64;
-            self.uf.add_cost(handle, cost);
+            let touched = self.uf.add_cost(handle, cost);
+            self.index.on_component_touched(touched);
             // Merge with adjacent evicted components (undirected relaxation).
             let deps = self.graph.storage(s).deps.clone();
             let dependents = self.graph.storage(s).dependents.clone();
@@ -531,10 +556,15 @@ impl<B: Backend> Runtime<B> {
                 let other = self.graph.storage(n);
                 if !other.resident && !other.banished {
                     let oh = other.uf;
-                    self.uf.union(handle, oh);
+                    if let Some((kept, absorbed)) = self.uf.union_roots(handle, oh) {
+                        self.index.on_components_merged(kept, absorbed);
+                    }
                 }
             }
         }
+        // The storage just turned non-resident: it joined (and possibly
+        // bridged) evicted neighborhoods around it.
+        self.index.invalidate(s, &self.graph, &mut self.stats.metadata_accesses);
     }
 
     // -------------------------------------------------------- deallocation
@@ -598,6 +628,8 @@ impl<B: Backend> Runtime<B> {
         st.banished = true;
         self.pool_remove(s);
         self.stats.banish_count += 1;
+        // Banishment removes `s` from every evicted neighborhood for good.
+        self.index.invalidate(s, &self.graph, &mut self.stats.metadata_accesses);
         // Pin dependents: their parent inputs are gone forever.
         let dependents = self.graph.storage(s).dependents.clone();
         for d in dependents {
@@ -633,7 +665,9 @@ impl<B: Backend> Runtime<B> {
             self.perform(op, 1)?;
         }
         let sid = self.graph.storage_of(t);
-        self.graph.storage_mut(sid).last_access = self.stats.clock;
+        let now = self.stats.clock;
+        self.graph.storage_mut(sid).last_access = now;
+        self.index.on_access(sid, &self.graph, now);
         Ok(())
     }
 
@@ -679,6 +713,13 @@ impl<B: Backend> Runtime<B> {
             "memory accounting drift: tracked {} vs actual {}",
             self.stats.memory,
             resident_bytes
+        );
+        let pool_sum: u64 = self.pool.iter().map(|&s| self.graph.storage(s).size).sum();
+        anyhow::ensure!(
+            pool_sum == self.pool_bytes,
+            "pool byte counter drift: tracked {} vs actual {}",
+            self.pool_bytes,
+            pool_sum
         );
         for (i, s) in self.graph.storages.iter().enumerate() {
             anyhow::ensure!(
@@ -976,11 +1017,15 @@ mod tests {
 
     #[test]
     fn metadata_accesses_ordering() {
-        // h_dtr (exact e*) must touch far more metadata than h_local.
+        // h_dtr (exact e*) must touch far more metadata than h_local. This
+        // is the *scan-path* Fig. 12 semantics: force PolicyKind::Scan so
+        // every candidate reruns its traversal.
         let counts: Vec<u64> = [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()]
             .iter()
             .map(|&h| {
-                let mut r = rt(8, h);
+                let cfg =
+                    Config { budget: 8, heuristic: h, index: PolicyKind::Scan, ..Config::default() };
+                let mut r = Runtime::new(cfg, NullBackend::new());
                 let ts = run_chain(&mut r, 128);
                 r.access(ts[1]).unwrap();
                 r.stats.metadata_accesses
@@ -988,5 +1033,86 @@ mod tests {
             .collect();
         assert!(counts[0] > counts[1], "e* {} <= eq {}", counts[0], counts[1]);
         assert!(counts[1] > counts[2], "eq {} <= local {}", counts[1], counts[2]);
+    }
+
+    #[test]
+    fn cached_index_touches_less_metadata_than_scan() {
+        // The whole point of the E.1 optimizations: identical decisions,
+        // fewer metadata accesses.
+        let run = |kind: PolicyKind| {
+            let cfg = Config {
+                budget: 16,
+                heuristic: Heuristic::dtr(),
+                index: kind,
+                trace_victims: true,
+                ..Config::default()
+            };
+            let mut r = Runtime::new(cfg, NullBackend::new());
+            let ts = run_chain(&mut r, 192);
+            r.access(ts[1]).unwrap();
+            r.access(ts[150]).unwrap();
+            r.check_invariants().unwrap();
+            r.stats.clone()
+        };
+        let scan = run(PolicyKind::Scan);
+        let indexed = run(PolicyKind::Auto);
+        assert!(scan.same_decisions(&indexed), "victim sequences diverged");
+        assert!(
+            indexed.metadata_accesses < scan.metadata_accesses,
+            "indexed {} >= scan {}",
+            indexed.metadata_accesses,
+            scan.metadata_accesses
+        );
+    }
+
+    #[test]
+    fn evict_one_drains_pool_in_policy_order() {
+        let mut r = rt(u64::MAX, Heuristic::lru());
+        let ts = run_chain(&mut r, 8);
+        let pool_before = r.pool_len();
+        assert!(pool_before > 0);
+        let first = r.evict_one().unwrap();
+        // h_lru: the stalest storage is the chain's first output.
+        assert_eq!(first, r.graph.storage_of(ts[1]));
+        let mut evicted = 1;
+        while r.evict_one().is_some() {
+            evicted += 1;
+        }
+        assert_eq!(evicted, pool_before);
+        assert_eq!(r.pool_len(), 0);
+        assert!(r.evict_one().is_none());
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pool_bytes_counter_tracks_membership() {
+        let mut r = rt(6, Heuristic::dtr_eq());
+        let ts = run_chain(&mut r, 64);
+        r.access(ts[32]).unwrap();
+        r.check_invariants().unwrap(); // asserts pool_bytes == fresh sum
+        for &t in &ts[1..20] {
+            r.release(t);
+        }
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn indexed_runtime_survives_banish_policy() {
+        for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::lru(), Heuristic::size()] {
+            let cfg = Config {
+                budget: 10,
+                heuristic: h,
+                policy: DeallocPolicy::Banish,
+                index: PolicyKind::Indexed,
+                ..Config::default()
+            };
+            let mut r = Runtime::new(cfg, NullBackend::new());
+            let ts = run_chain(&mut r, 48);
+            for &t in &ts[1..24] {
+                r.release(t);
+            }
+            r.access(ts[48]).unwrap();
+            r.check_invariants().unwrap();
+        }
     }
 }

@@ -57,10 +57,21 @@ impl UnionFind {
     /// Merge the components of `a` and `b`, summing their running costs.
     /// Returns the new root.
     pub fn union(&mut self, a: u32, b: u32) -> u32 {
+        match self.union_roots(a, b) {
+            Some((kept, _)) => kept,
+            None => self.find(a),
+        }
+    }
+
+    /// Like [`UnionFind::union`], but reports what happened: `Some((kept,
+    /// absorbed))` root pair when two distinct components merged, `None` if
+    /// they were already one. Lets eviction indexes invalidate per-component
+    /// subscriptions without redundant `find` traversals.
+    pub fn union_roots(&mut self, a: u32, b: u32) -> Option<(u32, u32)> {
         let ra = self.find(a);
         let rb = self.find(b);
         if ra == rb {
-            return ra;
+            return None;
         }
         self.accesses += 1;
         let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
@@ -74,7 +85,7 @@ impl UnionFind {
         }
         self.cost[hi as usize] += self.cost[lo as usize];
         self.cost[lo as usize] = 0.0;
-        hi
+        Some((hi, lo))
     }
 
     /// Running cost sum of `x`'s component.
@@ -83,14 +94,18 @@ impl UnionFind {
         self.cost[r as usize]
     }
 
-    pub fn add_cost(&mut self, x: u32, c: f64) {
+    /// Add `c` to `x`'s component; returns the component root so eviction
+    /// indexes can invalidate cached ẽ* sums subscribed to it.
+    pub fn add_cost(&mut self, x: u32, c: f64) -> u32 {
         let r = self.find(x);
         self.cost[r as usize] += c;
+        r
     }
 
     /// Subtract `c` from `x`'s component (the splitting approximation:
-    /// rematerialization removes a cost but not the connectivity).
-    pub fn sub_cost(&mut self, x: u32, c: f64) {
+    /// rematerialization removes a cost but not the connectivity). Returns
+    /// the component root, like [`UnionFind::add_cost`].
+    pub fn sub_cost(&mut self, x: u32, c: f64) -> u32 {
         let r = self.find(x);
         self.cost[r as usize] -= c;
         // Numerical hygiene: running sums can drift slightly negative after
@@ -98,6 +113,7 @@ impl UnionFind {
         if self.cost[r as usize] < 0.0 {
             self.cost[r as usize] = 0.0;
         }
+        r
     }
 
     pub fn same_set(&mut self, a: u32, b: u32) -> bool {

@@ -64,7 +64,11 @@ pub fn fig11(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> R
     Ok(())
 }
 
-/// Fig. 12: metadata/storage accesses per heuristic and budget.
+/// Fig. 12: metadata/storage accesses per heuristic and budget. Pinned to
+/// the reference scan so the counts keep Appendix D.3's meaning — the cost
+/// of evaluating each heuristic fresh per search. (The incremental policy
+/// indexes exist precisely to cut these; compare by flipping
+/// `Config::index` to `PolicyKind::Auto`.)
 pub fn fig12(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> Result<()> {
     out.row(&["model", "heuristic", "budget_ratio", "metadata_accesses", "evictions"])?;
     for &model in models {
@@ -73,7 +77,15 @@ pub fn fig12(out: &mut CsvOut, models: &[&str], ratios: &[f64], scale: u64) -> R
         for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()] {
             for &ratio in ratios {
                 let budget = (b.peak_memory as f64 * ratio) as u64;
-                let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+                let o = simulate(
+                    &log,
+                    Config {
+                        budget,
+                        heuristic: h,
+                        index: crate::dtr::PolicyKind::Scan,
+                        ..Config::default()
+                    },
+                );
                 if o.ok() {
                     out.row(&[
                         model.to_string(),
@@ -108,7 +120,17 @@ mod tests {
         // *many* searches each heuristic's decisions caused, which is the
         // overhead-vs-quality tradeoff the paper plots separately.
         let acc = |h: Heuristic| {
-            let o = simulate(&log, Config { budget, heuristic: h, ..Config::default() });
+            // Scan-pinned like the fig12 harness: the ordering is about the
+            // per-search cost of *fresh* heuristic evaluation.
+            let o = simulate(
+                &log,
+                Config {
+                    budget,
+                    heuristic: h,
+                    index: crate::dtr::PolicyKind::Scan,
+                    ..Config::default()
+                },
+            );
             assert!(o.ok(), "{}: {:?}", h.name(), o.failed);
             o.stats.metadata_accesses as f64 / o.stats.eviction_searches.max(1) as f64
         };

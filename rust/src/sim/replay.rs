@@ -325,6 +325,34 @@ mod tests {
     }
 
     #[test]
+    fn indexed_replay_matches_scan() {
+        use crate::dtr::PolicyKind;
+        let log = training_log(16, 256);
+        let b = baseline(&log);
+        let budget = b.constant_bytes + (b.peak_memory - b.constant_bytes) * 2 / 5;
+        for h in Heuristic::fig2_set() {
+            let mk = |kind: PolicyKind| {
+                simulate(
+                    &log,
+                    Config {
+                        budget,
+                        heuristic: h,
+                        index: kind,
+                        trace_victims: true,
+                        ..Config::default()
+                    },
+                )
+            };
+            let scan = mk(PolicyKind::Scan);
+            let indexed = mk(PolicyKind::Auto);
+            assert!(scan.ok(), "{}: {:?}", h.name(), scan.failed);
+            assert!(indexed.ok(), "{}: {:?}", h.name(), indexed.failed);
+            assert_eq!(scan.stats.victims, indexed.stats.victims, "{} victims", h.name());
+            assert!(scan.stats.same_decisions(&indexed.stats), "{} stats", h.name());
+        }
+    }
+
+    #[test]
     fn all_fig2_heuristics_replay() {
         let log = training_log(12, 256);
         let b = baseline(&log);

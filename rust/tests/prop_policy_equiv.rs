@@ -1,0 +1,261 @@
+//! Index/scan equivalence properties for the `dtr::policy` subsystem:
+//! every incremental victim-selection index must make *identical decisions*
+//! to the reference `ScanIndex` — the same victim sequence and the same
+//! decision-level `Stats` (`Stats::same_decisions`) — over random
+//! training-shaped tapes, for the full Fig. 2 heuristic set plus
+//! ablation-grid and Appendix-A heuristics. The indexes may only differ in
+//! metadata-access counts (that is their point: Appendix E).
+//!
+//! Also pins that the Appendix E.2 search approximations (√n sampling +
+//! small-tensor filter) compose with forced indexes without livelock, and
+//! that the small filter alone preserves exact equivalence.
+
+use dtr::dtr::{Config, CostKind, Heuristic, ParamSpec, PolicyKind};
+use dtr::graphs::tape::{R, Tape};
+use dtr::sim::log::Log;
+use dtr::sim::replay::{baseline, simulate, SimOutcome};
+use dtr::util::miniprop::check;
+use dtr::util::rng::Rng;
+
+/// Random layered training DAG via the Tape (fan-out, weights, releases).
+fn random_model(rng: &mut Rng, size: usize) -> Log {
+    let mut t = Tape::new("prop_policy");
+    let x = t.data("x", 64 + rng.below(512));
+    let mut frontier: Vec<R> = vec![x];
+    let mut nodes = 0usize;
+    while nodes < size {
+        let k = 1 + rng.index(2.min(frontier.len()));
+        let mut inputs: Vec<R> = (0..k).map(|_| *rng.choose(&frontier)).collect();
+        if rng.chance(0.4) {
+            let w = t.weight(&format!("w{nodes}"), 16 + rng.below(128));
+            inputs.push(w);
+        }
+        let out = t.op(
+            &format!("op{nodes}"),
+            1 + rng.below(50),
+            &inputs,
+            32 + rng.below(1024),
+        );
+        frontier.push(out);
+        if frontier.len() > 4 {
+            frontier.remove(0);
+        }
+        nodes += 1;
+    }
+    let last = *frontier.last().unwrap();
+    let loss = t.op("loss", 1, &[last], 8);
+    t.finish(loss)
+}
+
+/// Heuristics under equivalence test: the Fig. 2 set, the Appendix-A
+/// reduced heuristic, and staleness-/size-ablated grid cells that exercise
+/// the lazy-heap index family.
+fn equivalence_set() -> Vec<Heuristic> {
+    let mut hs = Heuristic::fig2_set();
+    hs.push(Heuristic::EStarCount);
+    hs.push(Heuristic::Param(ParamSpec {
+        cost: CostKind::EStar,
+        use_size: true,
+        use_staleness: false,
+    }));
+    hs.push(Heuristic::Param(ParamSpec {
+        cost: CostKind::EqClass,
+        use_size: false,
+        use_staleness: false,
+    }));
+    hs.push(Heuristic::Param(ParamSpec {
+        cost: CostKind::Local,
+        use_size: false,
+        use_staleness: true,
+    }));
+    hs
+}
+
+fn run(log: &Log, budget: u64, h: Heuristic, kind: PolicyKind, small_filter: bool) -> SimOutcome {
+    simulate(
+        log,
+        Config {
+            budget,
+            heuristic: h,
+            index: kind,
+            small_filter,
+            trace_victims: true,
+            ..Config::default()
+        },
+    )
+}
+
+fn assert_equivalent(
+    scan: &SimOutcome,
+    indexed: &SimOutcome,
+    h: Heuristic,
+    what: &str,
+) -> Result<(), String> {
+    if scan.failed != indexed.failed {
+        return Err(format!(
+            "{} [{}]: feasibility diverged — scan {:?} vs indexed {:?}",
+            h.name(),
+            what,
+            scan.failed,
+            indexed.failed
+        ));
+    }
+    if scan.stats.victims != indexed.stats.victims {
+        let first = scan
+            .stats
+            .victims
+            .iter()
+            .zip(&indexed.stats.victims)
+            .position(|(a, b)| a != b);
+        return Err(format!(
+            "{} [{}]: victim sequences diverged at {:?} (scan {} victims, indexed {})",
+            h.name(),
+            what,
+            first,
+            scan.stats.victims.len(),
+            indexed.stats.victims.len()
+        ));
+    }
+    if !scan.stats.same_decisions(&indexed.stats) {
+        return Err(format!(
+            "{} [{}]: victim sequences equal but decision stats diverged\n scan:    {:?}\n indexed: {:?}",
+            h.name(),
+            what,
+            scan.stats,
+            indexed.stats
+        ));
+    }
+    Ok(())
+}
+
+/// The headline property: identical victim sequence and decision stats,
+/// scan vs indexed, across the heuristic families and random budgets
+/// (including infeasible ones — both sides must fail identically).
+#[test]
+fn prop_index_matches_scan_victim_sequences() {
+    check("index_scan_equivalence", 40, 5, 35, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let budget = b.budget_at(0.2 + rng.f64() * 0.8);
+        for h in equivalence_set() {
+            let scan = run(&log, budget, h, PolicyKind::Scan, false);
+            let indexed = run(&log, budget, h, PolicyKind::Indexed, false);
+            assert_equivalent(&scan, &indexed, h, "plain")?;
+        }
+        Ok(())
+    });
+}
+
+/// The small-tensor filter threshold is computed from the running pool-byte
+/// counter and applied inside each index; equivalence must survive it.
+#[test]
+fn prop_small_filter_preserves_equivalence() {
+    check("small_filter_equivalence", 30, 5, 30, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let budget = b.budget_at(0.3 + rng.f64() * 0.6);
+        for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::lru(), Heuristic::size()] {
+            let scan = run(&log, budget, h, PolicyKind::Scan, true);
+            let indexed = run(&log, budget, h, PolicyKind::Indexed, true);
+            assert_equivalent(&scan, &indexed, h, "small_filter")?;
+        }
+        Ok(())
+    });
+}
+
+/// √n sampling is a scan-coupled approximation: under `PolicyKind::Auto` it
+/// routes to the scan (same RNG stream as the legacy inline path; victim
+/// ties now resolve by lowest id), and under a forced index it is
+/// superseded by the exact argmin — either way the run must terminate under
+/// budget with invariants intact (no livelock when composed with the small
+/// filter).
+#[test]
+fn prop_sampling_and_filter_compose_with_indexes() {
+    check("sampling_filter_composition", 30, 8, 35, |rng, size| {
+        let log = random_model(rng, size);
+        let b = baseline(&log);
+        let budget = b.budget_at(0.3 + rng.f64() * 0.6);
+        let h = *rng.choose(&[
+            Heuristic::dtr(),
+            Heuristic::dtr_eq(),
+            Heuristic::lru(),
+            Heuristic::size(),
+            Heuristic::Msps,
+        ]);
+        for kind in [PolicyKind::Auto, PolicyKind::Indexed] {
+            let out = simulate(
+                &log,
+                Config {
+                    budget,
+                    heuristic: h,
+                    index: kind,
+                    sqrt_sample: true,
+                    small_filter: true,
+                    ..Config::default()
+                },
+            );
+            if let Some(fail) = &out.failed {
+                if !fail.contains("out of memory") {
+                    return Err(format!("{} [{}]: {fail}", h.name(), kind.name()));
+                }
+                continue;
+            }
+            if out.stats.peak_memory > budget {
+                return Err(format!(
+                    "{} [{}]: peak {} exceeded budget {budget}",
+                    h.name(),
+                    kind.name(),
+                    out.stats.peak_memory
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic structured workload (a deep alias-free chain with releases
+/// mid-stream) exercising banishment under both index kinds: decisions must
+/// match even when the dealloc policy permanently removes storages.
+#[test]
+fn banish_policy_equivalence_on_chain() {
+    use dtr::dtr::DeallocPolicy;
+    let mut log = Log::new("banish_chain");
+    log.constant("x", 8);
+    let mut prev = "x".to_string();
+    for i in 0..64usize {
+        let out = format!("a{i}");
+        log.call1(&format!("f{i}"), 1 + (i as u64 % 7), &[&prev], &out, 8 + (i as u64 % 5) * 4);
+        if i >= 2 {
+            // Keep a sliding window of two live activations.
+            log.release(&format!("a{}", i - 2));
+        }
+        prev = out;
+    }
+    for h in [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::lru()] {
+        for policy in [DeallocPolicy::EagerEvict, DeallocPolicy::Banish, DeallocPolicy::Ignore] {
+            let mk = |kind: PolicyKind| {
+                simulate(
+                    &log,
+                    Config {
+                        budget: 160,
+                        heuristic: h,
+                        policy,
+                        index: kind,
+                        trace_victims: true,
+                        ..Config::default()
+                    },
+                )
+            };
+            let scan = mk(PolicyKind::Scan);
+            let indexed = mk(PolicyKind::Indexed);
+            assert_equivalent(&scan, &indexed, h, policy.name()).unwrap_or_else(|e| panic!("{e}"));
+            assert!(
+                scan.ok(),
+                "chain under {} / {} should be feasible at 160 bytes: {:?}",
+                h.name(),
+                policy.name(),
+                scan.failed
+            );
+        }
+    }
+}
