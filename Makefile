@@ -3,11 +3,14 @@
 # `make verify` is the tier-1 gate (hermetic: no network, no Python, no
 # artifacts needed — the engine runs on the pure-Rust interpreter backend).
 
-.PHONY: verify build test bench bench-json fmt clippy e2e artifacts clean
+.PHONY: verify build test bench bench-json bench-json-dtr bench-json-serve fmt clippy e2e artifacts clean
 
-# Tier-1 first (build + test), then the lint gates (same jobs CI runs).
+# Tier-1 first (build + test), then the same gates CI runs: the pjrt
+# feature-gate type-check (so the gated path cannot rot locally) and lints.
 verify:
-	cargo build --release && cargo test -q && cargo fmt --check && cargo clippy -- -D warnings
+	cargo build --release && cargo test -q \
+		&& cargo build --release --features pjrt \
+		&& cargo fmt --check && cargo clippy -- -D warnings
 
 build:
 	cargo build --release
@@ -18,11 +21,20 @@ test:
 bench:
 	cargo bench
 
-# Machine-readable perf trajectory: the bench_dtr eviction-scaling section
-# (ns/eviction at 1k/10k/100k pools, reference scan vs policy index) as
-# BENCH_dtr.json in the repo root.
-bench-json:
+# Machine-readable perf trajectory, committed as BENCH_*.json baselines in
+# the repo root (CI also uploads fresh copies as workflow artifacts):
+#  * BENCH_dtr.json   — bench_dtr eviction-scaling (ns/eviction at
+#    1k/10k/100k pools, reference scan vs policy index);
+#  * BENCH_serve.json — bench_serve multi-tenant scaling (aggregate
+#    steps/sec + remat overhead at 1/2/4/8 tenants, static-split vs
+#    global-reclaim arbitration).
+bench-json: bench-json-dtr bench-json-serve
+
+bench-json-dtr:
 	cargo bench --bench bench_dtr -- --json BENCH_dtr.json
+
+bench-json-serve:
+	cargo bench --bench bench_serve -- --json BENCH_serve.json
 
 fmt:
 	cargo fmt --check

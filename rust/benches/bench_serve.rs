@@ -1,0 +1,113 @@
+//! Serving-throughput bench: aggregate steps/sec and rematerialization
+//! overhead vs tenant count (1/2/4/8) under one global budget, for both
+//! arbitration policies (static-split vs global-reclaim). Custom harness
+//! (criterion is not in the offline crate cache).
+//!
+//! `--json PATH` writes the scaling table as a JSON report
+//! (`make bench-json` -> `BENCH_serve.json`) — the serving arm of the perf
+//! trajectory next to `BENCH_dtr.json`. Rows with `completed <
+//! requested` mark tenants that OOMed under their policy (static-split
+//! boxes tenants into `total/N` shares; global-reclaim lets hot tenants
+//! borrow idle bytes), so the comparison is throughput *and* admission.
+
+use dtr::dtr::Config;
+use dtr::serve::{fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantSpec};
+
+struct Row {
+    tenants: usize,
+    arbiter: &'static str,
+    requested: usize,
+    completed: usize,
+    steps_per_sec: f64,
+    slowdown: f64,
+    evictions: u64,
+    budget: u64,
+}
+
+fn run_point(n: usize, policy: ArbiterPolicy, steps: usize, budget: u64) -> Row {
+    let specs = TenantSpec::fleet(n);
+    let pool = ServePool::new(budget, policy, n);
+    let base = Config::default();
+    let t0 = std::time::Instant::now();
+    let reports = run_tenants(&pool, &specs, &base, steps).expect("tenant threads");
+    let wall_s = t0.elapsed().as_secs_f64();
+    pool.check_invariants().expect("ledger");
+    let completed: usize = reports.iter().map(|r| r.completed).sum();
+    let base_c: u64 = reports.iter().map(|r| r.stats.base_compute).sum();
+    let remat_c: u64 = reports.iter().map(|r| r.stats.remat_compute).sum();
+    let evictions: u64 = reports.iter().map(|r| r.stats.evict_count).sum();
+    Row {
+        tenants: n,
+        arbiter: policy.name(),
+        requested: steps * n,
+        completed,
+        steps_per_sec: completed as f64 / wall_s.max(1e-9),
+        slowdown: if base_c == 0 { 1.0 } else { (base_c + remat_c) as f64 / base_c as f64 },
+        evictions,
+        budget,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json_out = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let steps = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6usize);
+
+    println!("# bench_serve — multi-tenant throughput vs tenant count\n");
+    let mut rows = Vec::new();
+    for &n in &[1usize, 2, 4, 8] {
+        // The budget depends only on the fleet, not the policy: measure
+        // the tenant envelopes once per point.
+        let budget = fleet_budget(&TenantSpec::fleet(n), 70).expect("envelope measurement");
+        for policy in ArbiterPolicy::all() {
+            let r = run_point(n, policy, steps, budget);
+            println!(
+                "tenants={:<2} [{:<14}] {:>7.2} steps/s  slowdown {:>5.2}  \
+                 {}/{} steps  {} evictions  budget {} B",
+                r.tenants,
+                r.arbiter,
+                r.steps_per_sec,
+                r.slowdown,
+                r.completed,
+                r.requested,
+                r.evictions,
+                r.budget
+            );
+            rows.push(r);
+        }
+    }
+
+    if let Some(path) = json_out {
+        let mut s = String::from(
+            "{\n  \"bench\": \"serve_scaling\",\n  \"unit\": \"aggregate_steps_per_sec\",\n  \"results\": [\n",
+        );
+        for (i, r) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"tenants\": {}, \"arbiter\": \"{}\", \"steps_per_sec\": {:.3}, \
+                 \"slowdown\": {:.4}, \"completed\": {}, \"requested\": {}, \
+                 \"evictions\": {}, \"budget\": {}}}{}\n",
+                r.tenants,
+                r.arbiter,
+                r.steps_per_sec,
+                r.slowdown,
+                r.completed,
+                r.requested,
+                r.evictions,
+                r.budget,
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, s).expect("writing bench JSON");
+        println!("\nwrote {path}");
+    }
+}

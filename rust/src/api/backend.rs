@@ -4,9 +4,8 @@
 //! place outside the core runtime that touches raw tensor ids — so it
 //! lives inside `dtr::api` with the session that drives it.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -15,8 +14,12 @@ use crate::dtr::{Backend, TensorId};
 use crate::runtime::executor::{Executor, HostTensor};
 
 /// Shared handle to the executor: the engine keeps it across steps while
-/// each per-step session's backend borrows it for operator execution.
-pub type SharedExecutor = Rc<RefCell<Box<dyn Executor>>>;
+/// each per-step session's backend locks it for operator execution. The
+/// mutex makes an executor shareable across serving tenants too (compiled
+/// state is built once; tenants serialize on the op-execute hot path only
+/// if they genuinely share one executor — each tenant normally owns its
+/// own).
+pub type SharedExecutor = Arc<Mutex<Box<dyn Executor>>>;
 
 /// Buffer store implementing the DTR backend trait over any [`Executor`].
 pub struct ExecBackend {
@@ -48,7 +51,7 @@ impl Backend for ExecBackend {
             .iter()
             .map(|t| self.bufs.get(t).with_context(|| format!("missing buffer {t}")))
             .collect::<Result<_>>()?;
-        let outs = self.exec.borrow_mut().execute(name, &ins)?;
+        let outs = self.exec.lock().expect("executor poisoned").execute(name, &ins)?;
         anyhow::ensure!(
             outs.len() == outputs.len(),
             "{name}: {} outputs from executor, {} expected",

@@ -8,39 +8,45 @@
 //! [`Session::call`] (sizes and costs derived from the executor's manifest)
 //! or [`Session::call_sized`] (explicit sizes, for accounting workloads),
 //! and host I/O happens in [`Session::constant`] / [`Session::get`].
+//!
+//! The runtime sits behind an `Arc<Mutex<…>>`, so sessions (and their
+//! handles) are `Send`: a serving tenant runs its session on a worker
+//! thread while the budget arbiter (`crate::serve`) may briefly `try_lock`
+//! the same runtime to reclaim memory across shards. When the session's
+//! `Config` carries a [`crate::dtr::GateRef`], construction registers the
+//! runtime with that gate so cross-shard eviction can reach it.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{Context, Result};
 
 use super::backend::{ExecBackend, SharedExecutor};
 use super::tensor::{Releaser, Tensor};
-use crate::dtr::{Backend, Config, NullBackend, OutSpec, Runtime, Stats, TensorId};
+use crate::dtr::{Backend, Config, NullBackend, OutSpec, Runtime, RuntimeHandle, Stats, TensorId};
 use crate::runtime::executor::{analytic_cost, HostTensor};
 use crate::runtime::{Executor, Manifest};
 
 /// The op/shape/cost contract a session serves, precomputed once per
-/// executor and shared (cheap `Rc` clones) across the per-step sessions of
+/// executor and shared (cheap `Arc` clones) across the per-step sessions of
 /// a long-lived driver — building it is O(op-set), which must not recur in
 /// every step's wall-clock window.
 #[derive(Clone)]
 pub struct OpContract {
-    manifest: Rc<Manifest>,
-    op_cost: Rc<HashMap<String, u64>>,
+    manifest: Arc<Manifest>,
+    op_cost: Arc<HashMap<String, u64>>,
 }
 
 impl OpContract {
     /// Derive the contract from an executor's manifest, with deterministic
     /// analytic per-op costs.
     pub fn of(exec: &SharedExecutor) -> OpContract {
-        let manifest = exec.borrow().manifest().clone();
+        let manifest = exec.lock().expect("executor poisoned").manifest().clone();
         let mut op_cost = HashMap::new();
         for (name, op) in &manifest.ops {
             op_cost.insert(name.clone(), analytic_cost(name, op, &manifest.config));
         }
-        OpContract { manifest: Rc::new(manifest), op_cost: Rc::new(op_cost) }
+        OpContract { manifest: Arc::new(manifest), op_cost: Arc::new(op_cost) }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -48,35 +54,46 @@ impl OpContract {
     }
 }
 
-/// A DTR session: one runtime, one budget, one stream of interposed
-/// operator calls. See the module docs of [`crate::api`] for a complete
-/// training example.
+/// A DTR session: one runtime, one budget (fixed or leased from a shared
+/// pool), one stream of interposed operator calls. See the module docs of
+/// [`crate::api`] for a complete training example.
 pub struct Session<B: Backend + 'static> {
-    rt: Rc<RefCell<Runtime<B>>>,
+    rt: Arc<Mutex<Runtime<B>>>,
     /// The op/shape contract, present on executor-backed sessions; `None`
     /// for accounting sessions driven via [`Session::call_sized`].
-    manifest: Option<Rc<Manifest>>,
+    manifest: Option<Arc<Manifest>>,
     /// Deterministic analytic per-op costs derived from the manifest.
-    op_cost: Rc<HashMap<String, u64>>,
+    op_cost: Arc<HashMap<String, u64>>,
 }
 
 impl<B: Backend + 'static> Session<B> {
     fn from_runtime(
         rt: Runtime<B>,
-        manifest: Option<Rc<Manifest>>,
-        op_cost: Rc<HashMap<String, u64>>,
+        manifest: Option<Arc<Manifest>>,
+        op_cost: Arc<HashMap<String, u64>>,
     ) -> Session<B> {
-        Session { rt: Rc::new(RefCell::new(rt)), manifest, op_cost }
+        let gate = rt.cfg.gate.clone();
+        let rt = Arc::new(Mutex::new(rt));
+        // Shared-budget shard: register this runtime with its gate so the
+        // arbiter can peek/reclaim across shards (try_lock only).
+        if let Some(g) = gate {
+            g.0.bind(Arc::new(RuntimeHandle::new(Arc::downgrade(&rt))));
+        }
+        Session { rt, manifest, op_cost }
+    }
+
+    fn rt(&self) -> MutexGuard<'_, Runtime<B>> {
+        self.rt.lock().expect("DTR runtime poisoned by a panicked session call")
     }
 
     fn wrap(&self, id: TensorId) -> Tensor {
-        Tensor::from_parts(Rc::clone(&self.rt) as Rc<dyn Releaser>, id)
+        Tensor::from_parts(Arc::clone(&self.rt) as Arc<dyn Releaser>, id)
     }
 
     /// Register a pinned, never-rematerializable constant of `bytes` bytes
     /// (weights and inputs in accounting workloads).
     pub fn constant_sized(&self, bytes: u64) -> Tensor {
-        let id = self.rt.borrow_mut().constant(bytes);
+        let id = self.rt().constant(bytes);
         self.wrap(id)
     }
 
@@ -92,50 +109,50 @@ impl<B: Backend + 'static> Session<B> {
     ) -> Result<Vec<Tensor>> {
         let ids: Vec<TensorId> = inputs.iter().map(|t| t.id()).collect();
         let specs: Vec<OutSpec> = out_bytes.iter().map(|&b| OutSpec::sized(b)).collect();
-        let outs = self.rt.borrow_mut().call(op, cost, &ids, &specs)?;
+        let outs = self.rt().call(op, cost, &ids, &specs)?;
         Ok(outs.into_iter().map(|id| self.wrap(id)).collect())
     }
 
     /// Rematerialize (if evicted) and touch a tensor — the prototype's
     /// `decheckpoint()`.
     pub fn touch(&self, t: &Tensor) -> Result<()> {
-        self.rt.borrow_mut().access(t.id())
+        self.rt().access(t.id())
     }
 
     /// Is the tensor currently materialized?
     pub fn is_defined(&self, t: &Tensor) -> bool {
-        self.rt.borrow().is_defined(t.id())
+        self.rt().is_defined(t.id())
     }
 
     /// Output condition (Appendix C.6): rematerialize and pin everything
     /// still referenced by live handles.
     pub fn pin_live(&self) -> Result<()> {
-        self.rt.borrow_mut().pin_live_outputs()
+        self.rt().pin_live_outputs()
     }
 
     pub fn stats(&self) -> Stats {
-        self.rt.borrow().stats.clone()
+        self.rt().stats.clone()
     }
 
     /// Name of the victim-selection index the runtime resolved from
     /// `Config::index` (e.g. `"staleness_list"` for `h_lru` under the
     /// default `PolicyKind::Auto`; `"scan"` for the reference path).
     pub fn policy_index(&self) -> &'static str {
-        self.rt.borrow().index_name()
+        self.rt().index_name()
     }
 
     /// Currently resident bytes.
     pub fn memory(&self) -> u64 {
-        self.rt.borrow().stats.memory
+        self.rt().stats.memory
     }
 
     pub fn peak_memory(&self) -> u64 {
-        self.rt.borrow().stats.peak_memory
+        self.rt().stats.peak_memory
     }
 
     /// Verify the runtime's internal accounting.
     pub fn check_invariants(&self) -> Result<()> {
-        self.rt.borrow().check_invariants()
+        self.rt().check_invariants()
     }
 }
 
@@ -145,14 +162,14 @@ impl Session<NullBackend> {
     /// its stats must be identical to a real-executor session issuing the
     /// same op stream (the backend-equivalence property).
     pub fn accounting(cfg: Config) -> Session<NullBackend> {
-        Session::from_runtime(Runtime::new(cfg, NullBackend::new()), None, Rc::new(HashMap::new()))
+        Session::from_runtime(Runtime::new(cfg, NullBackend::new()), None, Arc::new(HashMap::new()))
     }
 }
 
 impl Session<ExecBackend> {
     /// A session owning its executor.
     pub fn new(exec: Box<dyn Executor>, cfg: Config) -> Session<ExecBackend> {
-        Session::over(Rc::new(RefCell::new(exec)), cfg)
+        Session::over(Arc::new(Mutex::new(exec)), cfg)
     }
 
     /// A session over a shared executor, deriving a fresh [`OpContract`].
@@ -174,8 +191,8 @@ impl Session<ExecBackend> {
         let backend = ExecBackend::new(exec);
         Session::from_runtime(
             Runtime::new(cfg, backend),
-            Some(Rc::clone(&contract.manifest)),
-            Rc::clone(&contract.op_cost),
+            Some(Arc::clone(&contract.manifest)),
+            Arc::clone(&contract.op_cost),
         )
     }
 
@@ -192,7 +209,7 @@ impl Session<ExecBackend> {
     /// Register a constant with its host value (weights, data batches,
     /// optimizer state).
     pub fn constant(&self, v: HostTensor) -> Tensor {
-        let mut rt = self.rt.borrow_mut();
+        let mut rt = self.rt();
         let id = rt.constant(v.size_bytes());
         rt.backend_mut().put(id, v);
         drop(rt);
@@ -215,15 +232,15 @@ impl Session<ExecBackend> {
         };
         let cost = self.op_cost(op);
         let ids: Vec<TensorId> = inputs.iter().map(|t| t.id()).collect();
-        let outs = self.rt.borrow_mut().call(op, cost, &ids, &specs)?;
+        let outs = self.rt().call(op, cost, &ids, &specs)?;
         Ok(outs.into_iter().map(|id| self.wrap(id)).collect())
     }
 
     /// Read a tensor's host value, transparently rematerializing it first
     /// if DTR evicted it.
     pub fn get(&self, t: &Tensor) -> Result<HostTensor> {
-        self.rt.borrow_mut().access(t.id())?;
-        let rt = self.rt.borrow();
+        let mut rt = self.rt();
+        rt.access(t.id())?;
         rt.backend()
             .get(t.id())
             .cloned()
@@ -237,10 +254,23 @@ impl Session<ExecBackend> {
 
     /// Wall time spent executing operators so far (Fig. 4 "operator time").
     pub fn exec_ns(&self) -> u64 {
-        self.rt.borrow().backend().exec_ns
+        self.rt().backend().exec_ns
     }
 
     pub fn exec_count(&self) -> u64 {
-        self.rt.borrow().backend().exec_count
+        self.rt().backend().exec_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sessions_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Session<NullBackend>>();
+        assert_send::<Session<ExecBackend>>();
+        assert_send::<OpContract>();
     }
 }

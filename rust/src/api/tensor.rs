@@ -5,29 +5,33 @@
 //! [`TensorId`]s never escape `dtr::api`, so callers cannot leak pins,
 //! double-release, or touch another session's ids.
 
-use std::cell::RefCell;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::dtr::{Backend, Runtime, TensorId};
 
 /// Type-erased refcount sink: lets `Tensor` stay non-generic while the
-/// session it came from wraps a `Runtime<B>` for any backend `B`.
-pub(crate) trait Releaser {
+/// session it came from wraps a `Runtime<B>` for any backend `B`. `Send +
+/// Sync` supertraits keep handles movable across serving worker threads.
+pub(crate) trait Releaser: Send + Sync {
     fn retain_id(&self, t: TensorId);
     fn release_id(&self, t: TensorId);
 }
 
-impl<B: Backend> Releaser for RefCell<Runtime<B>> {
+impl<B: Backend> Releaser for Mutex<Runtime<B>> {
     fn retain_id(&self, t: TensorId) {
-        self.borrow_mut().retain(t);
+        if let Ok(mut rt) = self.lock() {
+            rt.retain(t);
+        }
     }
 
     fn release_id(&self, t: TensorId) {
-        // `try_borrow_mut` only fails while a session call is unwinding with
-        // the runtime borrowed; skipping the release then merely leaks a
-        // refcount in a runtime that is already being torn down.
-        if let Ok(mut rt) = self.try_borrow_mut() {
+        // `lock` only fails when a session call panicked with the runtime
+        // poisoned; skipping the release then merely leaks a refcount in a
+        // runtime that is already being torn down. Note this is a *blocking*
+        // lock: under serving, the arbiter may briefly hold this runtime for
+        // a cross-shard reclaim, and a dropped handle must still release.
+        if let Ok(mut rt) = self.lock() {
             rt.release(t);
         }
     }
@@ -38,14 +42,15 @@ impl<B: Backend> Releaser for RefCell<Runtime<B>> {
 /// Dropping the last handle to a storage triggers the session's
 /// deallocation policy (eager eviction by default); cloning increments the
 /// external reference count. Handles keep the underlying runtime alive, so
-/// they may safely outlive the [`super::Session`] that created them.
+/// they may safely outlive the [`super::Session`] that created them, and
+/// they are `Send` — a tenant's handles can live on its worker thread.
 pub struct Tensor {
     id: TensorId,
-    rt: Rc<dyn Releaser>,
+    rt: Arc<dyn Releaser>,
 }
 
 impl Tensor {
-    pub(crate) fn from_parts(rt: Rc<dyn Releaser>, id: TensorId) -> Tensor {
+    pub(crate) fn from_parts(rt: Arc<dyn Releaser>, id: TensorId) -> Tensor {
         Tensor { id, rt }
     }
 
@@ -58,7 +63,7 @@ impl Tensor {
 impl Clone for Tensor {
     fn clone(&self) -> Tensor {
         self.rt.retain_id(self.id);
-        Tensor { id: self.id, rt: Rc::clone(&self.rt) }
+        Tensor { id: self.id, rt: Arc::clone(&self.rt) }
     }
 }
 
@@ -71,5 +76,16 @@ impl Drop for Tensor {
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor({})", self.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_handles_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Tensor>();
     }
 }

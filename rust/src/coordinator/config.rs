@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 use crate::dtr::{DeallocPolicy, Heuristic, PolicyKind};
 use crate::exec::Optimizer;
 use crate::runtime::{BackendKind, Executor, InterpExecutor, ModelConfig};
+use crate::serve::ArbiterPolicy;
 use crate::util::cli::Args;
 use crate::util::json::parse;
 
@@ -35,6 +36,11 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Where to write the loss-curve CSV (optional).
     pub curve_out: Option<PathBuf>,
+    /// Serving knobs (`dtr-repro serve`): concurrent tenant count sharing
+    /// one global budget...
+    pub tenants: usize,
+    /// ...and how the arbiter divides it (static-split vs global-reclaim).
+    pub arbiter: ArbiterPolicy,
 }
 
 impl Default for TrainConfig {
@@ -60,6 +66,8 @@ impl Default for TrainConfig {
             small_filter: false,
             log_every: 10,
             curve_out: None,
+            tenants: 1,
+            arbiter: ArbiterPolicy::GlobalReclaim,
         }
     }
 }
@@ -147,6 +155,12 @@ impl TrainConfig {
                         other => anyhow::bail!("unknown optimizer {other}"),
                     }
                 }
+                "tenants" => cfg.tenants = val.as_usize().context("tenants")?,
+                "arbiter" => {
+                    let name = val.as_str().context("arbiter")?;
+                    cfg.arbiter = ArbiterPolicy::parse(name)
+                        .with_context(|| format!("unknown arbiter policy {name}"))?;
+                }
                 "sqrt_sample" => cfg.sqrt_sample = val.as_bool().context("sqrt_sample")?,
                 "small_filter" => cfg.small_filter = val.as_bool().context("small_filter")?,
                 "log_every" => cfg.log_every = val.as_usize().context("log_every")?,
@@ -198,6 +212,11 @@ impl TrainConfig {
                 "sgd" => Optimizer::Sgd,
                 other => anyhow::bail!("unknown optimizer {other}"),
             };
+        }
+        self.tenants = args.usize_or("tenants", self.tenants);
+        if let Some(a) = args.get("arbiter") {
+            self.arbiter =
+                ArbiterPolicy::parse(a).with_context(|| format!("arbiter policy {a}"))?;
         }
         if args.bool("sqrt-sample") {
             self.sqrt_sample = true;
@@ -312,6 +331,33 @@ mod tests {
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.index, PolicyKind::Indexed);
         let bad = write_tmp(r#"{"index": "fancy"}"#);
+        assert!(TrainConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_knobs_parse_and_override() {
+        let c = TrainConfig::default();
+        assert_eq!(c.tenants, 1);
+        assert_eq!(c.arbiter, ArbiterPolicy::GlobalReclaim);
+        let p = write_tmp(r#"{"tenants": 4, "arbiter": "static-split"}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.tenants, 4);
+        assert_eq!(c.arbiter, ArbiterPolicy::StaticSplit);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--tenants".to_string(),
+                "8".to_string(),
+                "--arbiter".to_string(),
+                "global".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.tenants, 8);
+        assert_eq!(c.arbiter, ArbiterPolicy::GlobalReclaim);
+        let bad = write_tmp(r#"{"arbiter": "roundrobin"}"#);
         assert!(TrainConfig::from_file(&bad).is_err());
     }
 

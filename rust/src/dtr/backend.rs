@@ -12,7 +12,11 @@ use anyhow::Result;
 /// Buffers are keyed by *root tensor id*: one buffer per storage. Alias
 /// views carry no data of their own (size 0), matching the paper's
 /// storage/tensor split.
-pub trait Backend {
+///
+/// `Send` is a supertrait: a `Runtime<B>` must be movable to (and lockable
+/// from) worker threads so sessions can shard over threads under one
+/// arbitrated budget (`crate::serve`).
+pub trait Backend: Send {
     /// Execute operator `name`, reading buffers for `inputs` and producing
     /// buffers for `outputs` (root tensors only need storage; alias outputs
     /// may be ignored by the backend).

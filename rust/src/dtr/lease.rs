@@ -1,0 +1,180 @@
+//! The budget-lease seam: how a `Runtime` participates in a *shared* memory
+//! budget instead of owning a fixed one.
+//!
+//! The paper's §5 prototype interposes on a single allocator; a serving
+//! deployment (`crate::serve`) runs many tenants against **one** global byte
+//! budget, so the budget check in [`Runtime::free_for`] splits in two:
+//!
+//! * **fast path** — [`BudgetGate::try_reserve`]: a lock-free reservation
+//!   against the shard's current *lease* (byte allowance). No arbitration,
+//!   no cross-thread traffic; this is the common case.
+//! * **slow path** — [`BudgetGate::reserve`]: the shard's lease is
+//!   exhausted, so the gate escalates to the central arbiter, which may
+//!   grant unleased budget, revoke idle leases, or reclaim bytes by
+//!   evicting the *globally* least-valuable evictable tensor — possibly
+//!   from another shard ([`RemoteEvictor`]), possibly from the requester
+//!   itself ([`LocalEvictor`], passed in by `&mut` because the requesting
+//!   thread already holds its own runtime).
+//!
+//! The traits live in `dtr` (not `serve`) so the runtime stays ignorant of
+//! arbitration policy: a `Runtime` only knows how to reserve, refund, and
+//! surrender victims. `crate::serve::BudgetArbiter` is the one production
+//! implementation; tests can plug in anything.
+//!
+//! Deadlock discipline: a remote reclaim may only use `try_lock` on another
+//! shard's runtime ([`RuntimeHandle`]), and the requester's own runtime is
+//! reached exclusively through the `&mut dyn LocalEvictor` argument — so no
+//! thread ever *blocks* on a runtime mutex while holding another.
+
+use std::fmt;
+use std::sync::{Arc, Mutex, TryLockError, Weak};
+
+use anyhow::Result;
+
+use super::backend::Backend;
+use super::ids::StorageId;
+use super::runtime::Runtime;
+
+/// The requester's own runtime, surrendered to the arbiter for the duration
+/// of one slow-path reservation. Implemented by [`Runtime`].
+pub trait LocalEvictor {
+    /// Run one victim search and return the would-be victim with its
+    /// heuristic score and size — without evicting it. The caller either
+    /// evicts it via [`LocalEvictor::evict_storage`] or discards the peek
+    /// (a better victim existed on another shard).
+    fn peek_scored(&mut self) -> Option<(StorageId, f64, u64)>;
+
+    /// Evict a specific storage (previously peeked); returns its size.
+    fn evict_storage(&mut self, s: StorageId) -> u64;
+
+    /// Bytes currently resident (for OOM diagnostics).
+    fn resident_bytes(&self) -> u64;
+}
+
+/// Result of peeking another shard's victim candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RemotePeek {
+    /// The shard's runtime is locked by its own thread right now.
+    Busy,
+    /// The shard's runtime has been dropped (between serving steps).
+    Gone,
+    /// The shard has nothing evictable.
+    Empty,
+    /// The shard's least-valuable evictable storage.
+    Candidate { score: f64, bytes: u64 },
+}
+
+/// Result of asking another shard to evict its top victim.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RemoteReclaim {
+    Busy,
+    Gone,
+    Empty,
+    /// Evicted; this many bytes were freed (credited to the *owner's*
+    /// headroom — the arbiter revokes them on its next pass).
+    Freed(u64),
+}
+
+/// A cross-shard eviction handle: lets the arbiter reclaim memory from a
+/// shard it does not own. Implementations must never block on the shard's
+/// runtime lock.
+pub trait RemoteEvictor: Send + Sync {
+    fn peek(&self) -> RemotePeek;
+    fn reclaim_top(&self) -> RemoteReclaim;
+}
+
+/// [`RemoteEvictor`] over a shared runtime, as handed out by
+/// `api::Session`: a weak reference (sessions are per-step; a tenant
+/// between steps is simply `Gone`) plus `try_lock`-only access.
+pub struct RuntimeHandle<B: Backend> {
+    rt: Weak<Mutex<Runtime<B>>>,
+}
+
+impl<B: Backend> RuntimeHandle<B> {
+    pub fn new(rt: Weak<Mutex<Runtime<B>>>) -> RuntimeHandle<B> {
+        RuntimeHandle { rt }
+    }
+}
+
+impl<B: Backend> RemoteEvictor for RuntimeHandle<B> {
+    fn peek(&self) -> RemotePeek {
+        let Some(arc) = self.rt.upgrade() else { return RemotePeek::Gone };
+        match arc.try_lock() {
+            Ok(mut rt) => match rt.peek_scored() {
+                Some((_, score, bytes)) => RemotePeek::Candidate { score, bytes },
+                None => RemotePeek::Empty,
+            },
+            Err(TryLockError::WouldBlock) => RemotePeek::Busy,
+            Err(TryLockError::Poisoned(_)) => RemotePeek::Gone,
+        }
+    }
+
+    fn reclaim_top(&self) -> RemoteReclaim {
+        let Some(arc) = self.rt.upgrade() else { return RemoteReclaim::Gone };
+        match arc.try_lock() {
+            Ok(mut rt) => match rt.peek_scored() {
+                Some((s, _, _)) => RemoteReclaim::Freed(rt.evict_storage(s)),
+                None => RemoteReclaim::Empty,
+            },
+            Err(TryLockError::WouldBlock) => RemoteReclaim::Busy,
+            Err(TryLockError::Poisoned(_)) => RemoteReclaim::Gone,
+        }
+    }
+}
+
+/// A shard's view of a shared budget. All byte deltas of the runtime's
+/// resident set flow through here so the lease ledger can never drift from
+/// the runtime's own accounting (`Stats::memory`).
+pub trait BudgetGate: Send + Sync {
+    /// Short name for diagnostics (`Debug` on [`GateRef`]).
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+
+    /// Fast path: atomically take `bytes` from the shard's current lease
+    /// headroom. Returns false if the lease is exhausted (caller escalates
+    /// to [`BudgetGate::reserve`]).
+    fn try_reserve(&self, bytes: u64) -> bool;
+
+    /// Slow path: arbitrate. On success `bytes` are reserved; on failure
+    /// the global pool is genuinely exhausted (a true OOM).
+    fn reserve(&self, bytes: u64, local: &mut dyn LocalEvictor) -> Result<()>;
+
+    /// Reserve bytes for a pinned constant. Constants never trigger
+    /// eviction in DTR (the paper's runtime registers them unconditionally;
+    /// feasibility floors are the caller's concern), so this may overdraw
+    /// the lease — the overdraft is visible to the arbiter's ledger.
+    fn reserve_pinned(&self, bytes: u64);
+
+    /// The runtime's resident set grew by `bytes` (the reservation was
+    /// already taken); gauge update only.
+    fn on_alloc(&self, bytes: u64);
+
+    /// The runtime's resident set shrank by `bytes`: refund the lease
+    /// headroom (eviction, banishment, ephemeral double-compute frees, and
+    /// the runtime's final drop all land here).
+    fn on_free(&self, bytes: u64);
+
+    /// (Re)register the cross-shard eviction handle for the shard's
+    /// *current* runtime. Sessions are per-step objects, so this is called
+    /// once per session construction.
+    fn bind(&self, remote: Arc<dyn RemoteEvictor>);
+}
+
+/// Cloneable, `Debug`-able handle to a [`BudgetGate`], carried inside
+/// [`super::Config`]. Cloning a `Config` (one session per training step)
+/// keeps pointing at the same shard lease.
+#[derive(Clone)]
+pub struct GateRef(pub Arc<dyn BudgetGate>);
+
+impl GateRef {
+    pub fn new(gate: Arc<dyn BudgetGate>) -> GateRef {
+        GateRef(gate)
+    }
+}
+
+impl fmt::Debug for GateRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "GateRef({})", self.0.name())
+    }
+}

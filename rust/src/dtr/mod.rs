@@ -6,6 +6,9 @@
 //! * [`policy`] — victim selection behind the [`policy::PolicyIndex`] seam
 //!   (incremental indexes vs. the reference scan, [`PolicyKind`]) and the
 //!   deallocation policies ([`DeallocPolicy`], Sec. 2);
+//! * [`lease`] — the shared-budget seam: an optional [`BudgetGate`] in
+//!   [`Config`] replaces the fixed budget with a revocable lease on a
+//!   global pool, arbitrated by `crate::serve` (cross-shard eviction);
 //! * [`Backend`] — pluggable compute: accounting-only for simulation, PJRT
 //!   for real execution.
 
@@ -14,6 +17,7 @@ pub mod evicted;
 pub mod graph;
 pub mod heuristics;
 pub mod ids;
+pub mod lease;
 pub mod policy;
 pub mod runtime;
 pub mod unionfind;
@@ -22,5 +26,8 @@ pub use backend::{Backend, NullBackend};
 pub use graph::{Graph, Operator, Storage, Tensor};
 pub use heuristics::{CostKind, Heuristic, InvalidationScope, ParamSpec};
 pub use ids::{OpId, StorageId, TensorId};
+pub use lease::{
+    BudgetGate, GateRef, LocalEvictor, RemoteEvictor, RemotePeek, RemoteReclaim, RuntimeHandle,
+};
 pub use policy::{DeallocPolicy, PolicyIndex, PolicyKind};
 pub use runtime::{Config, DtrError, OutSpec, Runtime, Stats};

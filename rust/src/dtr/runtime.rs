@@ -13,8 +13,9 @@ use anyhow::Result;
 use super::backend::Backend;
 use super::evicted::EvictedScratch;
 use super::graph::Graph;
-use super::heuristics::Heuristic;
+use super::heuristics::{score, Heuristic, ScoreCtx};
 use super::ids::{OpId, StorageId, TensorId};
+use super::lease::{GateRef, LocalEvictor};
 use super::policy::{make_index, DeallocPolicy, PolicyIndex, PolicyKind, SelectCtx};
 use super::unionfind::UnionFind;
 use crate::util::rng::Rng;
@@ -41,6 +42,12 @@ pub struct Config {
     /// Record every eviction victim into `Stats::victims` (diagnostics and
     /// the index/scan equivalence property).
     pub trace_victims: bool,
+    /// Shared-budget lease (`dtr::lease`): when set, `budget` is ignored
+    /// and every allocation reserves bytes through the gate — the fast
+    /// path against the shard's lease headroom, the slow path through the
+    /// central arbiter (`crate::serve::BudgetArbiter`), which may evict
+    /// across shards. `None` (the default) keeps the classic fixed budget.
+    pub gate: Option<GateRef>,
 }
 
 impl Default for Config {
@@ -55,7 +62,17 @@ impl Default for Config {
             seed: 0x5EED,
             profile: false,
             trace_victims: false,
+            gate: None,
         }
+    }
+}
+
+impl Config {
+    /// This configuration with the budget removed — both the fixed budget
+    /// and any shared-budget lease. Probe and envelope-measurement sessions
+    /// use this so they never reserve bytes from a serving shard's lease.
+    pub fn unbudgeted(&self) -> Config {
+        Config { budget: u64::MAX, gate: None, ..self.clone() }
     }
 }
 
@@ -264,6 +281,13 @@ impl<B: Backend> Runtime<B> {
         st.pinned = true;
         st.refs = 1;
         st.last_access = self.stats.clock;
+        // Constants never trigger eviction (matching the fixed-budget
+        // path, which registers them unconditionally); under a lease this
+        // may overdraw, which the arbiter's ledger surfaces.
+        if let Some(g) = &self.cfg.gate {
+            g.0.reserve_pinned(size);
+            g.0.on_alloc(size);
+        }
         self.stats.memory += size;
         self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
         t
@@ -377,6 +401,9 @@ impl<B: Backend> Runtime<B> {
             }
         }
         self.free_for(need)?;
+        if let Some(g) = &self.cfg.gate {
+            g.0.on_alloc(need);
+        }
         self.stats.memory += need;
         self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
 
@@ -398,7 +425,11 @@ impl<B: Backend> Runtime<B> {
             } else if self.graph.storage(sid).resident && self.was_defined[k] {
                 // Double-computed ephemeral (multi-output replay): free the
                 // duplicate immediately.
-                self.stats.memory -= self.graph.storage(sid).size;
+                let size = self.graph.storage(sid).size;
+                self.stats.memory -= size;
+                if let Some(g) = &self.cfg.gate {
+                    g.0.on_free(size);
+                }
             } else {
                 let st = self.graph.storage_mut(sid);
                 st.resident = true;
@@ -453,8 +484,17 @@ impl<B: Backend> Runtime<B> {
 
     // ------------------------------------------------------------ eviction
 
-    /// Evict until `need` additional bytes fit under the budget.
+    /// Make room for `need` additional bytes: under a shared-budget lease,
+    /// reserve through the gate (fast path against the shard's headroom,
+    /// slow path through the arbiter, which may evict across shards);
+    /// under a fixed budget, evict locally until the bytes fit.
     fn free_for(&mut self, need: u64) -> Result<()> {
+        if let Some(gate) = self.cfg.gate.clone() {
+            if gate.0.try_reserve(need) {
+                return Ok(());
+            }
+            return gate.0.reserve(need, self);
+        }
         if self.cfg.budget == u64::MAX {
             return Ok(());
         }
@@ -535,7 +575,11 @@ impl<B: Backend> Runtime<B> {
         }
         let root = self.graph.storage(s).root;
         self.backend.free(&[root]);
-        self.stats.memory -= self.graph.storage(s).size;
+        let size = self.graph.storage(s).size;
+        self.stats.memory -= size;
+        if let Some(g) = &self.cfg.gate {
+            g.0.on_free(size);
+        }
         self.graph.storage_mut(s).resident = false;
         self.pool_remove(s);
         self.stats.evict_count += 1;
@@ -621,7 +665,11 @@ impl<B: Backend> Runtime<B> {
             }
             let root = self.graph.storage(s).root;
             self.backend.free(&[root]);
-            self.stats.memory -= self.graph.storage(s).size;
+            let size = self.graph.storage(s).size;
+            self.stats.memory -= size;
+            if let Some(g) = &self.cfg.gate {
+                g.0.on_free(size);
+            }
         }
         let st = self.graph.storage_mut(s);
         st.resident = false;
@@ -736,13 +784,72 @@ impl<B: Backend> Runtime<B> {
                 anyhow::ensure!(s.evictable(), "non-evictable S{} in pool", i);
             } else {
                 anyhow::ensure!(
-                    !s.evictable() || self.cfg.budget == u64::MAX,
+                    !s.evictable() || (self.cfg.budget == u64::MAX && self.cfg.gate.is_none()),
                     "evictable S{} missing from pool",
                     i
                 );
             }
         }
         Ok(())
+    }
+
+    /// Heuristic score of `s` (used for cross-shard victim comparison; the
+    /// metadata accesses it performs are counted, but it does not disturb
+    /// any decision-relevant state).
+    fn victim_score(&mut self, s: StorageId) -> f64 {
+        let mut ctx = ScoreCtx {
+            graph: &self.graph,
+            uf: &mut self.uf,
+            scratch: &mut self.scratch,
+            clock: self.stats.clock,
+            rng: &mut self.rng,
+            accesses: &mut self.stats.metadata_accesses,
+            root_buf: &mut self.root_buf,
+        };
+        score(self.cfg.heuristic, s, &mut ctx)
+    }
+}
+
+/// The runtime as the *requester's* side of an arbitrated reservation: one
+/// victim search per call, so an N=1-tenant serve run issues exactly the
+/// same `select_victim`/`evict` sequence as the fixed-budget `free_for`
+/// loop (the decision-exactness property pinned in `tests/serve_exact.rs`).
+impl<B: Backend> LocalEvictor for Runtime<B> {
+    fn peek_scored(&mut self) -> Option<(StorageId, f64, u64)> {
+        let v = self.select_victim()?;
+        let bytes = self.graph.storage(v).size;
+        // `h_rand` draws from the decision RNG inside `score`; peeking must
+        // not advance that stream, so random victims compare as score 0
+        // (cross-shard arbitration over h_rand is arbitrary anyway).
+        let score = if matches!(self.cfg.heuristic, Heuristic::Random) {
+            0.0
+        } else {
+            self.victim_score(v)
+        };
+        Some((v, score, bytes))
+    }
+
+    fn evict_storage(&mut self, s: StorageId) -> u64 {
+        let bytes = self.graph.storage(s).size;
+        self.evict(s);
+        bytes
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.stats.memory
+    }
+}
+
+impl<B: Backend> Drop for Runtime<B> {
+    /// Return every still-resident byte to the shard lease: sessions are
+    /// per-step objects, and without this the lease ledger would leak the
+    /// pinned constants (which no eviction ever refunds) every step.
+    fn drop(&mut self) {
+        if let Some(g) = &self.cfg.gate {
+            if self.stats.memory > 0 {
+                g.0.on_free(self.stats.memory);
+            }
+        }
     }
 }
 

@@ -18,8 +18,7 @@
 //! under any feasible budget, bitwise-identically to the unbudgeted run,
 //! because rematerialization is exact replay of pure ops.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -108,7 +107,7 @@ impl LstmTrainer {
         for k in h..2 * h {
             b.data[k] = 1.0;
         }
-        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let exec: SharedExecutor = Arc::new(Mutex::new(exec));
         let contract = OpContract::of(&exec);
         Ok(LstmTrainer {
             exec,
@@ -168,7 +167,8 @@ impl LstmTrainer {
         let (seq_len, x, tgt) =
             Self::sample_batch(rnn, self.min_len, self.max_len, &mut self.data_rng);
 
-        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
 
         // --- constants: weights + per-timestep data + BPTT seeds ---
         let wx = s.constant(self.wx.clone());
@@ -266,8 +266,8 @@ impl LstmTrainer {
         let rnn = self.rnn;
         let mut rng = Rng::new(probe_seed);
         let (seq_len, x, tgt) = Self::sample_batch(rnn, self.min_len, self.max_len, &mut rng);
-        let cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
-        let s = Session::with_contract(Rc::clone(&self.exec), cfg, &self.contract);
+        let cfg = self.dtr_cfg.unbudgeted();
+        let s = Session::with_contract(Arc::clone(&self.exec), cfg, &self.contract);
         let wx = s.constant(self.wx.clone());
         let wh = s.constant(self.wh.clone());
         let bias = s.constant(self.b.clone());
@@ -299,7 +299,7 @@ impl LstmTrainer {
             self.data_rng.clone(),
             self.dtr_cfg.clone(),
         );
-        self.dtr_cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        self.dtr_cfg = self.dtr_cfg.unbudgeted();
         let mut peak = 0u64;
         let mut floor = 0u64;
         let mut result = Ok(());
@@ -393,7 +393,7 @@ impl TreeLstmTrainer {
         let wl = randn_host(&mut wrng, &[h, h], INIT_SCALE);
         let wr = randn_host(&mut wrng, &[h, h], INIT_SCALE);
         let w_out = randn_host(&mut wrng, &[h, rnn.classes], INIT_SCALE);
-        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let exec: SharedExecutor = Arc::new(Mutex::new(exec));
         let contract = OpContract::of(&exec);
         Ok(TreeLstmTrainer {
             exec,
@@ -521,7 +521,8 @@ impl TreeLstmTrainer {
             Self::sample_batch(rnn, self.max_depth, self.split_p, &mut self.data_rng);
         let n_leaves = shape.leaves();
 
-        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
         let wc = s.constant(self.wc.clone());
         let wl = s.constant(self.wl.clone());
         let wr = s.constant(self.wr.clone());
@@ -576,8 +577,8 @@ impl TreeLstmTrainer {
         let rnn = self.rnn;
         let mut rng = Rng::new(probe_seed);
         let (shape, x, tgt) = Self::sample_batch(rnn, self.max_depth, self.split_p, &mut rng);
-        let cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
-        let s = Session::with_contract(Rc::clone(&self.exec), cfg, &self.contract);
+        let cfg = self.dtr_cfg.unbudgeted();
+        let s = Session::with_contract(Arc::clone(&self.exec), cfg, &self.contract);
         let wc = s.constant(self.wc.clone());
         let wl = s.constant(self.wl.clone());
         let wr = s.constant(self.wr.clone());
@@ -601,7 +602,7 @@ impl TreeLstmTrainer {
             self.data_rng.clone(),
             self.dtr_cfg.clone(),
         );
-        self.dtr_cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        self.dtr_cfg = self.dtr_cfg.unbudgeted();
         let mut peak = 0u64;
         let mut floor = 0u64;
         let mut result = Ok(());

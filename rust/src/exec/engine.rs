@@ -21,8 +21,7 @@
 //! come from a deterministic analytic model, so budgeted runs are exactly
 //! reproducible and DTR's decisions are identical across backends.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -80,7 +79,7 @@ impl Engine {
     pub fn new(exec: Box<dyn Executor>, dtr_cfg: dtr::Config, optimizer: Optimizer) -> Result<Engine> {
         let manifest = exec.manifest().clone();
         let cfg = manifest.config;
-        let exec: SharedExecutor = Rc::new(RefCell::new(exec));
+        let exec: SharedExecutor = Arc::new(Mutex::new(exec));
         let contract = OpContract::of(&exec);
         let mut engine = Engine {
             exec,
@@ -115,7 +114,7 @@ impl Engine {
     }
 
     pub fn backend_name(&self) -> &'static str {
-        self.exec.borrow().name()
+        self.exec.lock().expect("executor poisoned").name()
     }
 
     /// Initialize parameters + optimizer state host-side (same scheme as
@@ -179,7 +178,8 @@ impl Engine {
         let (tokens, targets) = self.make_batch();
         let cfg = self.cfg;
 
-        let s = Session::with_contract(Rc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
 
         // --- constants: data + params + optimizer state ---
         let as_f32 = |xs: &[i32]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
@@ -309,7 +309,7 @@ impl Engine {
             .iter()
             .map(|p| (p.value.clone(), p.m.clone(), p.v.clone()))
             .collect();
-        self.dtr_cfg = dtr::Config { budget: u64::MAX, ..self.dtr_cfg.clone() };
+        self.dtr_cfg = self.dtr_cfg.unbudgeted();
         let peak = self.train_step()?.stats.peak_memory;
         // Restore.
         self.dtr_cfg = saved_cfg;

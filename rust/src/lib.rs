@@ -34,6 +34,12 @@
 //! * **Engine + coordinator** (`exec::`, `coordinator::`) — a real
 //!   transformer-LM training step driven through DTR, with deterministic
 //!   analytic op costs so budgeted runs reproduce exactly.
+//! * **Serving** ([`serve`]) — N concurrent tenants (sessions on worker
+//!   threads, each with its own runtime and policy index) sharded over
+//!   **one** global byte budget: a central [`serve::BudgetArbiter`] hands
+//!   out revocable leases and reclaims by evicting the globally
+//!   least-valuable tensor across shards. N=1 serving is decision-exact
+//!   vs. a plain session.
 //! * **Experiments** (`repro::`, `sim::`, `graphs::`, `baselines::`) — the
 //!   paper's figures/tables over the simulator and the engine.
 //!
@@ -71,5 +77,6 @@ pub mod exec;
 pub mod graphs;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;

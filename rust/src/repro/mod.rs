@@ -6,6 +6,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod formal;
+pub mod serve;
 pub mod tables;
 
 use std::path::{Path, PathBuf};
@@ -38,6 +39,10 @@ experiment commands (regenerate paper tables/figures):
   fig12      metadata-access overhead per heuristic
 
 system commands:
+  serve      multi-tenant serving: N tenants (transformer + LSTM/TreeLSTM
+             mix) on worker threads under ONE global budget
+             [--tenants 4 --arbiter static|global (default: both policies)
+              --steps 10 --budget-ratio 0.6 --heuristic h_dtr_eq]
   train      train the transformer LM under a DTR budget (budget-ratio is
              a fraction of the non-pinned headroom; floor is ~0.6)
              [--config cfg.json --steps 50 --budget-ratio 0.8
@@ -121,6 +126,30 @@ pub fn dispatch() -> Result<()> {
             let model_refs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
             let ratios = args.f64_list_or("ratios", &[0.4, 0.5, 0.6, 0.8]);
             ablation::fig12(&mut out, &model_refs, &ratios, scale)?;
+        }
+        "serve" => {
+            let mut tc = TrainConfig::load(&args)?;
+            // A config file (or CLI flags) fully specifies the run — its
+            // `arbiter` is honored as-is. With neither, apply serve demo
+            // defaults and sweep BOTH arbitration policies for comparison.
+            let pinned_policy = args.get("arbiter").is_some() || args.get("config").is_some();
+            if args.get("config").is_none() {
+                if args.get("steps").is_none() {
+                    tc.steps = 10;
+                }
+                if args.get("budget-ratio").is_none() {
+                    tc.budget_ratio = Some(0.6);
+                }
+                if args.get("tenants").is_none() {
+                    tc.tenants = 4;
+                }
+            }
+            let policies: Vec<crate::serve::ArbiterPolicy> = if pinned_policy {
+                vec![tc.arbiter]
+            } else {
+                crate::serve::ArbiterPolicy::all().to_vec()
+            };
+            serve::default_run(&mut out, &tc, &policies)?;
         }
         "train" => {
             let cfg = TrainConfig::load(&args)?;

@@ -1,0 +1,100 @@
+//! `dtr-repro serve` — the multi-tenant serving scenario: N concurrent
+//! tenants (transformer + dynamic LSTM/TreeLSTM mix) train on worker
+//! threads under **one** global byte budget, arbitrated per
+//! `TrainConfig::arbiter` (static-split vs global-reclaim). Emits one CSV
+//! row per tenant plus an aggregate row per run: steps/sec, remat overhead
+//! (slowdown), evictions, and probe-loss descent for the dynamic tenants.
+
+use anyhow::Result;
+
+use crate::coordinator::TrainConfig;
+use crate::dtr;
+use crate::serve::{fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantSpec};
+use crate::util::csv::{f, CsvOut};
+
+/// Run the serving scenario from the coordinator config: `tenants`,
+/// `arbiter`, `steps`, `budget_ratio` (fraction of each tenant's non-pinned
+/// headroom, summed into the global budget; `None` = 1.0), and the DTR
+/// knobs (heuristic, policy, index).
+pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy]) -> Result<()> {
+    let specs = TenantSpec::fleet(tc.tenants.max(1));
+    let pct = (tc.budget_ratio.unwrap_or(1.0).clamp(0.05, 4.0) * 100.0) as u64;
+    let budget = fleet_budget(&specs, pct)?;
+    let base = dtr::Config {
+        heuristic: tc.heuristic,
+        policy: tc.policy,
+        index: tc.index,
+        ..dtr::Config::default()
+    };
+    out.row(&[
+        "arbiter",
+        "tenant",
+        "kind",
+        "steps",
+        "completed",
+        "steps_per_sec",
+        "slowdown",
+        "evictions",
+        "remats",
+        "peak_bytes",
+        "budget_bytes",
+        "probe_before",
+        "probe_after",
+        "error",
+    ])?;
+    for &policy in policies {
+        let pool = ServePool::new(budget, policy, specs.len());
+        let reports = run_tenants(&pool, &specs, &base, tc.steps)?;
+        pool.check_invariants()?;
+        let mut agg_steps = 0usize;
+        let mut agg_sps = 0.0f64;
+        let mut agg_base = 0u64;
+        let mut agg_remat = 0u64;
+        let mut agg_evict = 0u64;
+        for (i, r) in reports.iter().enumerate() {
+            agg_steps += r.completed;
+            agg_sps += r.steps_per_sec();
+            agg_base += r.stats.base_compute;
+            agg_remat += r.stats.remat_compute;
+            agg_evict += r.stats.evict_count;
+            out.row(&[
+                policy.name().to_string(),
+                i.to_string(),
+                r.kind.to_string(),
+                r.steps.to_string(),
+                r.completed.to_string(),
+                f(r.steps_per_sec()),
+                f(r.stats.slowdown()),
+                r.stats.evict_count.to_string(),
+                r.stats.remat_count.to_string(),
+                r.stats.peak_memory.to_string(),
+                budget.to_string(),
+                r.probe_before.map(|v| f(v as f64)).unwrap_or_default(),
+                r.probe_after.map(|v| f(v as f64)).unwrap_or_default(),
+                r.error.clone().unwrap_or_default(),
+            ])?;
+        }
+        let agg_slowdown = if agg_base == 0 {
+            1.0
+        } else {
+            (agg_base + agg_remat) as f64 / agg_base as f64
+        };
+        out.row(&[
+            policy.name().to_string(),
+            "all".to_string(),
+            "aggregate".to_string(),
+            (tc.steps * specs.len()).to_string(),
+            agg_steps.to_string(),
+            f(agg_sps),
+            f(agg_slowdown),
+            agg_evict.to_string(),
+            String::new(),
+            String::new(),
+            budget.to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ])?;
+    }
+    Ok(())
+}

@@ -54,7 +54,11 @@ impl HostTensor {
 /// Executes manifest operators on host tensors. Implementations own any
 /// compiled state (executables, scratch buffers); the DTR engine owns the
 /// tensors themselves.
-pub trait Executor {
+///
+/// `Send` is a supertrait so executors can back serving tenants on worker
+/// threads (`crate::serve`); compiled state that is not `Send` must be
+/// wrapped by the implementation.
+pub trait Executor: Send {
     /// Short backend name for logs and CSV output.
     fn name(&self) -> &'static str;
 

@@ -1,0 +1,702 @@
+//! The central budget arbiter: one global byte budget, revocable per-shard
+//! leases, cross-shard eviction by globally-minimal heuristic score.
+//!
+//! Every shard owns a [`ShardMeter`] — two atomics mirroring its runtime's
+//! resident bytes (`used`) and its unspent lease (`headroom`). The fast
+//! path of a reservation is a lock-free CAS against `headroom`; only when a
+//! shard's lease is exhausted does it enter [`BudgetArbiter::request`],
+//! which serializes on the arbiter mutex and, in order of preference:
+//!
+//! 1. grants unleased budget from the global pool;
+//! 2. **revokes** lease headroom idling on other shards (global-reclaim
+//!    policy) — an idle tenant's unspent allowance moves to the hot one
+//!    without evicting anything;
+//! 3. **reclaims**: compares the requester's own victim candidate against
+//!    every other shard's ([`RemoteEvictor::peek`]) and evicts the globally
+//!    least-valuable storage — an idle tenant's stale activations go before
+//!    a hot tenant's fresh ones.
+//!
+//! Lock discipline (deadlock freedom): a requester holds (a) its own
+//! runtime lock — it arrived here from inside `Runtime::free_for` — and
+//! (b) the arbiter state mutex. Other shards' runtimes are only ever
+//! `try_lock`ed; a busy peer is skipped and retried after a bounded
+//! `Condvar` wait that releases the arbiter mutex. No thread blocks on a
+//! runtime mutex while holding another, so no cycle of blocking waits can
+//! form; exhausted retries surface as a genuine OOM.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::dtr::lease::{BudgetGate, LocalEvictor, RemoteEvictor, RemotePeek, RemoteReclaim};
+use crate::dtr::DtrError;
+
+/// How the arbiter divides the global budget among shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbiterPolicy {
+    /// Each shard's lease is capped at `total / planned_tenants`; shards
+    /// reclaim only from themselves. The offline-partitioning baseline.
+    StaticSplit,
+    /// Any shard may lease up to the whole budget; the arbiter revokes idle
+    /// leases and evicts the globally least-valuable tensor across shards.
+    GlobalReclaim,
+}
+
+impl ArbiterPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbiterPolicy::StaticSplit => "static-split",
+            ArbiterPolicy::GlobalReclaim => "global-reclaim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArbiterPolicy> {
+        Some(match s {
+            "static" | "static-split" | "static_split" => ArbiterPolicy::StaticSplit,
+            "global" | "global-reclaim" | "global_reclaim" => ArbiterPolicy::GlobalReclaim,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [ArbiterPolicy; 2] {
+        [ArbiterPolicy::StaticSplit, ArbiterPolicy::GlobalReclaim]
+    }
+}
+
+/// Per-shard byte gauges. `lease == used + headroom` is the ledger identity
+/// the arbiter maintains (checked at quiescence by
+/// [`BudgetArbiter::check_ledger`]); `headroom` goes negative only for
+/// pinned-constant overdraft, mirroring the fixed-budget runtime where
+/// constants register unconditionally.
+#[derive(Debug, Default)]
+pub struct ShardMeter {
+    used: AtomicU64,
+    headroom: AtomicI64,
+    /// Set (lock-free) by `LeaseGate::drop`; the arbiter lazily reaps
+    /// flagged shards next time it holds the state mutex. Unregistration
+    /// must not take that mutex itself: the last gate reference can die
+    /// inside a remote peek, on a thread already holding it.
+    dead: AtomicBool,
+}
+
+impl ShardMeter {
+    /// Resident bytes of the shard's runtime (mirror of `Stats::memory`).
+    pub fn used(&self) -> u64 {
+        self.used.load(Ordering::Acquire)
+    }
+
+    /// Unspent lease bytes (negative = pinned-constant overdraft).
+    pub fn headroom(&self) -> i64 {
+        self.headroom.load(Ordering::Acquire)
+    }
+
+    /// Lock-free reservation: take `bytes` from the headroom iff it covers
+    /// them entirely. Absurd requests that do not fit the signed ledger can
+    /// never be covered by a real lease.
+    fn try_take(&self, bytes: u64) -> bool {
+        if bytes > i64::MAX as u64 {
+            return false;
+        }
+        let want = bytes as i64;
+        let mut cur = self.headroom.load(Ordering::Acquire);
+        loop {
+            if cur < want {
+                return false;
+            }
+            match self.headroom.compare_exchange_weak(
+                cur,
+                cur - want,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Unconditional reservation (pinned constants): may overdraw.
+    fn take_unchecked(&self, bytes: u64) {
+        self.headroom.fetch_sub(bytes.min(i64::MAX as u64) as i64, Ordering::AcqRel);
+    }
+
+    fn credit(&self, bytes: u64) {
+        self.headroom.fetch_add(bytes.min(i64::MAX as u64) as i64, Ordering::AcqRel);
+    }
+
+    /// Revoke up to `want` bytes of *positive* headroom; returns the bytes
+    /// actually taken.
+    fn steal_up_to(&self, want: u64) -> u64 {
+        let want = want.min(i64::MAX as u64) as i64;
+        let mut cur = self.headroom.load(Ordering::Acquire);
+        loop {
+            let take = cur.min(want);
+            if take <= 0 {
+                return 0;
+            }
+            match self.headroom.compare_exchange_weak(
+                cur,
+                cur - take,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return take as u64,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Read-only view of one shard's ledger row.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    pub id: usize,
+    pub live: bool,
+    pub lease: u64,
+    pub used: u64,
+    pub headroom: i64,
+}
+
+struct Shard {
+    live: bool,
+    lease: u64,
+    cap: u64,
+    meter: Arc<ShardMeter>,
+    remote: Option<Arc<dyn RemoteEvictor>>,
+}
+
+struct ArbState {
+    shards: Vec<Shard>,
+}
+
+/// The central allocator-interposition point of PAPER §5, generalized to N
+/// tenants: all shard leases sum to at most `total`.
+pub struct BudgetArbiter {
+    total: u64,
+    policy: ArbiterPolicy,
+    /// Per-shard lease cap, fixed at construction (`StaticSplit` divides
+    /// the total across the planned tenant count; `GlobalReclaim` lets any
+    /// shard lease everything).
+    cap: u64,
+    state: Mutex<ArbState>,
+    cv: Condvar,
+}
+
+/// Bounded retry against busy peers: 2000 rounds x 2 ms ~ 4 s of
+/// consecutive stall before a request gives up and reports OOM.
+const STALL_WAIT: Duration = Duration::from_millis(2);
+const MAX_STALLED_ROUNDS: usize = 2_000;
+
+impl BudgetArbiter {
+    pub fn new(total: u64, policy: ArbiterPolicy, planned_tenants: usize) -> Arc<BudgetArbiter> {
+        // Ledger arithmetic runs in i64 (signed headroom); clamp the total
+        // accordingly — practically unlimited.
+        let total = total.min(i64::MAX as u64);
+        let cap = match policy {
+            ArbiterPolicy::StaticSplit => total / planned_tenants.max(1) as u64,
+            ArbiterPolicy::GlobalReclaim => total,
+        };
+        Arc::new(BudgetArbiter {
+            total,
+            policy,
+            cap,
+            state: Mutex::new(ArbState { shards: Vec::new() }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn policy(&self) -> ArbiterPolicy {
+        self.policy
+    }
+
+    /// Register a new shard; returns its gate (install it as
+    /// `Config::gate`). Dropping every clone of the gate unregisters the
+    /// shard and returns its lease to the pool.
+    pub fn register(self: &Arc<Self>) -> LeaseGate {
+        let meter = Arc::new(ShardMeter::default());
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        let shard = Shard {
+            live: true,
+            lease: 0,
+            cap: self.cap,
+            meter: Arc::clone(&meter),
+            remote: None,
+        };
+        // Recycle a dead slot (a departed tenant cannot bind or reserve
+        // through it anymore — its gate is gone), so tenant churn does not
+        // grow the shard table without bound.
+        let id = match st.shards.iter().position(|sh| !sh.live) {
+            Some(free) => {
+                st.shards[free] = shard;
+                free
+            }
+            None => {
+                st.shards.push(shard);
+                st.shards.len() - 1
+            }
+        };
+        drop(st);
+        LeaseGate { arb: Arc::clone(self), id, meter }
+    }
+
+    /// Retire shards whose gate has been dropped (`ShardMeter::dead`),
+    /// returning their leases to the pool. Called whenever the state mutex
+    /// is (re)acquired; `LeaseGate::drop` itself only flips the atomic —
+    /// taking the mutex there could self-deadlock, because the last gate
+    /// reference can die on a thread that already holds it (a remote
+    /// peek's temporary `Arc` upgrade being the final strong reference).
+    fn reap_locked(&self, st: &mut ArbState) {
+        for sh in &mut st.shards {
+            if sh.live && sh.meter.dead.load(Ordering::Acquire) {
+                sh.live = false;
+                sh.lease = 0;
+                sh.remote = None;
+            }
+        }
+    }
+
+    fn bind(&self, id: usize, remote: Arc<dyn RemoteEvictor>) {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        st.shards[id].remote = Some(remote);
+    }
+
+    fn leased_total(st: &ArbState) -> u64 {
+        st.shards.iter().filter(|s| s.live).map(|s| s.lease).sum()
+    }
+
+    /// Grant up to `want` new lease bytes to `id` from the unleased pool
+    /// (bounded by the shard's cap). Returns the granted amount.
+    fn grant_locked(&self, st: &mut ArbState, id: usize, want: u64) -> u64 {
+        let pool = self.total.saturating_sub(Self::leased_total(st));
+        let sh = &mut st.shards[id];
+        let grant = want.min(pool).min(sh.cap.saturating_sub(sh.lease));
+        if grant > 0 {
+            sh.lease += grant;
+            sh.meter.credit(grant);
+        }
+        grant
+    }
+
+    /// Clone the live peers' reclaim handles — O(shards) under the state
+    /// lock, so the O(pool) victim searches themselves can run unlocked.
+    /// The cloned `Arc`s stay valid across a reap/recycle of their slot:
+    /// they point at the *original* tenant's runtime (a recycled slot's
+    /// new tenant is never reclaimed by a stale round).
+    fn peer_handles(st: &ArbState, requester: usize) -> Vec<Arc<dyn RemoteEvictor>> {
+        st.shards
+            .iter()
+            .enumerate()
+            .filter(|&(j, ref sh)| j != requester && sh.live)
+            .filter_map(|(_, sh)| sh.remote.as_ref().map(Arc::clone))
+            .collect()
+    }
+
+    /// Peek every peer handle (`try_lock` only) for the lowest-score
+    /// victim candidate. Returns the best handle index and whether any
+    /// peer was busy.
+    fn best_candidate(peers: &[Arc<dyn RemoteEvictor>]) -> (Option<(usize, f64)>, bool) {
+        let mut busy = false;
+        let mut best: Option<(usize, f64)> = None;
+        for (k, r) in peers.iter().enumerate() {
+            match r.peek() {
+                RemotePeek::Candidate { score, .. } => {
+                    let better = match best {
+                        None => true,
+                        Some((_, b)) => score < b,
+                    };
+                    if better {
+                        best = Some((k, score));
+                    }
+                }
+                RemotePeek::Busy => busy = true,
+                _ => {}
+            }
+        }
+        (best, busy)
+    }
+
+    /// Revoke idle (positive) headroom from every other live shard,
+    /// returning up to `want` bytes to the unleased pool.
+    fn revoke_idle(&self, st: &mut ArbState, requester: usize, want: u64) -> u64 {
+        let mut got = 0u64;
+        for (j, sh) in st.shards.iter_mut().enumerate() {
+            if j == requester || !sh.live || got >= want {
+                continue;
+            }
+            let take = sh.meter.steal_up_to(want - got);
+            sh.lease = sh.lease.saturating_sub(take);
+            got += take;
+        }
+        got
+    }
+
+    /// Reserve `bytes` for a pinned constant: grow the lease from the pool,
+    /// from idle peer leases, and — under global reclaim — by evicting
+    /// *peer* victims. Constants never evict the requester's own tensors
+    /// (the fixed-budget runtime registers them unconditionally, which is
+    /// also what keeps N=1 serving decision-exact: with no peers this
+    /// degenerates to grant-or-overdraft). The final take happens under
+    /// the arbiter lock so a concurrent revocation cannot race the grant
+    /// away; any shortfall becomes overdraft (negative headroom).
+    fn reserve_pinned_slow(&self, id: usize, bytes: u64) {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        // Our own slot cannot be reaped or recycled while we hold its gate.
+        let meter = Arc::clone(&st.shards[id].meter);
+        let mut stalled = 0usize;
+        loop {
+            self.reap_locked(&mut st);
+            let headroom = meter.headroom();
+            let want = bytes.min(i64::MAX as u64) as i64;
+            let deficit = want.saturating_sub(headroom).max(0) as u64;
+            if deficit == 0 {
+                break;
+            }
+            let mut granted = self.grant_locked(&mut st, id, deficit);
+            if granted < deficit && self.policy == ArbiterPolicy::GlobalReclaim {
+                self.revoke_idle(&mut st, id, deficit - granted);
+                granted += self.grant_locked(&mut st, id, deficit - granted);
+            }
+            if granted > 0 {
+                stalled = 0;
+                continue;
+            }
+            if self.policy != ArbiterPolicy::GlobalReclaim || stalled >= MAX_STALLED_ROUNDS {
+                break; // shortfall overdrafts
+            }
+            // Peek and reclaim with the arbiter unlocked (handles captured
+            // above O(shards); searches are O(pool)).
+            let peers = Self::peer_handles(&st, id);
+            drop(st);
+            let (best, mut busy) = Self::best_candidate(&peers);
+            let reclaimed = match best {
+                Some((k, _)) => {
+                    let outcome = peers[k].reclaim_top();
+                    if matches!(outcome, RemoteReclaim::Busy) {
+                        busy = true;
+                    }
+                    matches!(outcome, RemoteReclaim::Freed(_))
+                }
+                None => false,
+            };
+            st = self.state.lock().expect("arbiter poisoned");
+            if reclaimed {
+                stalled = 0;
+                continue;
+            }
+            if !busy && best.is_none() {
+                break; // nothing evictable anywhere: overdraft
+            }
+            stalled += 1;
+            if busy {
+                let (guard, _) = self.cv.wait_timeout(st, STALL_WAIT).expect("arbiter poisoned");
+                st = guard;
+            }
+        }
+        // Take under the lock so a concurrent revocation cannot race the
+        // final grant away.
+        meter.take_unchecked(bytes);
+        drop(st);
+    }
+
+    /// The slow path: make `need` bytes reservable for shard `id`, whose
+    /// runtime the calling thread already holds (`local`). With a single
+    /// live shard this performs exactly the fixed-budget `free_for` loop —
+    /// one victim search, one eviction per round — which is what makes
+    /// N=1 serving decision-exact against a plain session.
+    fn request(&self, id: usize, need: u64, local: &mut dyn LocalEvictor) -> Result<()> {
+        let mut stalled = 0usize;
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        // Our own slot cannot be reaped or recycled while we hold its gate.
+        let meter = Arc::clone(&st.shards[id].meter);
+        loop {
+            self.reap_locked(&mut st);
+            // Retry the fast path under the arbiter lock: headroom may have
+            // been refunded or granted since the caller's attempt.
+            if meter.try_take(need) {
+                drop(st);
+                self.cv.notify_all();
+                return Ok(());
+            }
+            let headroom = meter.headroom();
+            let want = need.min(i64::MAX as u64) as i64;
+            let deficit = want.saturating_sub(headroom).max(0) as u64;
+
+            // 1. Unleased pool, then (global reclaim) leases idling on
+            // other shards — reclaim-without-eviction.
+            let mut granted = self.grant_locked(&mut st, id, deficit);
+            if granted < deficit && self.policy == ArbiterPolicy::GlobalReclaim {
+                self.revoke_idle(&mut st, id, deficit - granted);
+                granted += self.grant_locked(&mut st, id, deficit - granted);
+            }
+            if granted > 0 {
+                stalled = 0;
+                continue;
+            }
+
+            // 2. Eviction: compare the requester's candidate with every
+            // peer's and take the globally least-valuable one. All victim
+            // searches and the eviction itself run with the arbiter
+            // *unlocked* — only the O(shards) handle capture happens under
+            // the mutex, so shards' eviction loops never serialize on it.
+            // The local peeked victim cannot race away: this thread holds
+            // its own runtime, so remote reclaims bounce off `try_lock`.
+            let peers = if self.policy == ArbiterPolicy::GlobalReclaim {
+                Self::peer_handles(&st, id)
+            } else {
+                Vec::new()
+            };
+            drop(st);
+            let (best_remote, busy) = Self::best_candidate(&peers);
+            let local_best = local.peek_scored();
+            let evict_local = match (&local_best, &best_remote) {
+                (Some((_, ls, _)), Some((_, rs))) => ls <= rs,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => {
+                    if busy && stalled < MAX_STALLED_ROUNDS {
+                        stalled += 1;
+                        let guard = self.state.lock().expect("arbiter poisoned");
+                        let (guard, _) = self
+                            .cv
+                            .wait_timeout(guard, STALL_WAIT)
+                            .expect("arbiter poisoned");
+                        st = guard;
+                        continue;
+                    }
+                    return Err(DtrError::Oom {
+                        need,
+                        free: meter.headroom().max(0) as u64,
+                        budget: self.total,
+                        resident: local.resident_bytes(),
+                    }
+                    .into());
+                }
+            };
+            if evict_local {
+                let (sid, _, _) = local_best.expect("checked above");
+                // Refunds the shard's headroom through the gate's on_free.
+                local.evict_storage(sid);
+                self.cv.notify_all();
+                stalled = 0;
+                st = self.state.lock().expect("arbiter poisoned");
+                continue;
+            }
+            let (k, _) = best_remote.expect("checked above");
+            let outcome = peers[k].reclaim_top();
+            st = self.state.lock().expect("arbiter poisoned");
+            match outcome {
+                // The victim's bytes landed in j's headroom; the next round
+                // revokes them into the pool and grants them to us.
+                RemoteReclaim::Freed(_) => stalled = 0,
+                RemoteReclaim::Busy => {
+                    stalled += 1;
+                    if stalled >= MAX_STALLED_ROUNDS {
+                        return Err(DtrError::Oom {
+                            need,
+                            free: meter.headroom().max(0) as u64,
+                            budget: self.total,
+                            resident: local.resident_bytes(),
+                        }
+                        .into());
+                    }
+                    let (guard, _) =
+                        self.cv.wait_timeout(st, STALL_WAIT).expect("arbiter poisoned");
+                    st = guard;
+                }
+                // The candidate raced away (peer evicted or committed it);
+                // re-run the round.
+                RemoteReclaim::Gone | RemoteReclaim::Empty => {}
+            }
+        }
+    }
+
+    /// Ledger identity at quiescence (no reservation in flight on any
+    /// shard): every live shard's `lease == used + headroom`, and live
+    /// leases never exceed the global budget.
+    pub fn check_ledger(&self) -> Result<()> {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        let mut leased = 0u64;
+        for (i, sh) in st.shards.iter().enumerate() {
+            if !sh.live {
+                continue;
+            }
+            leased += sh.lease;
+            let used = sh.meter.used();
+            let headroom = sh.meter.headroom();
+            anyhow::ensure!(
+                sh.lease as i128 == used as i128 + headroom as i128,
+                "shard {i} ledger drift: lease {} != used {} + headroom {}",
+                sh.lease,
+                used,
+                headroom
+            );
+        }
+        anyhow::ensure!(
+            leased <= self.total,
+            "live leases {leased} exceed the global budget {}",
+            self.total
+        );
+        Ok(())
+    }
+
+    /// Snapshot every shard's ledger row (diagnostics, benches, tests).
+    pub fn snapshot(&self) -> Vec<ShardSnapshot> {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        st.shards
+            .iter()
+            .enumerate()
+            .map(|(id, sh)| ShardSnapshot {
+                id,
+                live: sh.live,
+                lease: sh.lease,
+                used: sh.meter.used(),
+                headroom: sh.meter.headroom(),
+            })
+            .collect()
+    }
+
+    /// Bytes currently resident across all live shards (live-sampled by the
+    /// stress tests to assert the global budget is respected).
+    pub fn used_bytes(&self) -> u64 {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        st.shards.iter().filter(|s| s.live).map(|s| s.meter.used()).sum()
+    }
+}
+
+/// A shard's lease on the shared budget: the [`BudgetGate`] installed into
+/// `Config::gate`. Cloned freely with the config (one session per step);
+/// when the last clone drops, the shard unregisters and its lease returns
+/// to the pool.
+pub struct LeaseGate {
+    arb: Arc<BudgetArbiter>,
+    id: usize,
+    meter: Arc<ShardMeter>,
+}
+
+impl LeaseGate {
+    pub fn meter(&self) -> Arc<ShardMeter> {
+        Arc::clone(&self.meter)
+    }
+
+    pub fn shard_id(&self) -> usize {
+        self.id
+    }
+}
+
+impl BudgetGate for LeaseGate {
+    fn name(&self) -> &'static str {
+        "lease"
+    }
+
+    fn try_reserve(&self, bytes: u64) -> bool {
+        self.meter.try_take(bytes)
+    }
+
+    fn reserve(&self, bytes: u64, local: &mut dyn LocalEvictor) -> Result<()> {
+        self.arb.request(self.id, bytes, local)
+    }
+
+    fn reserve_pinned(&self, bytes: u64) {
+        if !self.meter.try_take(bytes) {
+            self.arb.reserve_pinned_slow(self.id, bytes);
+        }
+    }
+
+    fn on_alloc(&self, bytes: u64) {
+        self.meter.used.fetch_add(bytes, Ordering::AcqRel);
+    }
+
+    fn on_free(&self, bytes: u64) {
+        self.meter.used.fetch_sub(bytes, Ordering::AcqRel);
+        self.meter.credit(bytes);
+    }
+
+    fn bind(&self, remote: Arc<dyn RemoteEvictor>) {
+        self.arb.bind(self.id, remote);
+    }
+}
+
+impl Drop for LeaseGate {
+    /// Lock-free unregistration (see `BudgetArbiter::reap_locked`): flag
+    /// the shard dead and wake any waiter; the arbiter reclaims the lease
+    /// on its next pass.
+    fn drop(&mut self) {
+        self.meter.dead.store(true, Ordering::Release);
+        self.arb.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in ArbiterPolicy::all() {
+            assert_eq!(ArbiterPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArbiterPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn meter_cas_paths() {
+        let m = ShardMeter::default();
+        m.credit(100);
+        assert!(m.try_take(60));
+        assert!(!m.try_take(60));
+        assert_eq!(m.headroom(), 40);
+        assert_eq!(m.steal_up_to(100), 40);
+        assert_eq!(m.headroom(), 0);
+        m.take_unchecked(8);
+        assert_eq!(m.headroom(), -8, "pinned overdraft goes negative");
+        assert_eq!(m.steal_up_to(10), 0, "overdraft is not stealable");
+        m.credit(8);
+        assert_eq!(m.headroom(), 0);
+    }
+
+    #[test]
+    fn static_split_caps_leases() {
+        let arb = BudgetArbiter::new(100, ArbiterPolicy::StaticSplit, 4);
+        let a = arb.register();
+        let b = arb.register();
+        assert!(!a.try_reserve(10), "no lease granted yet");
+        a.reserve_pinned(10);
+        a.on_alloc(10);
+        // Cap is 25: pinned growth stops at the cap, the rest overdrafts.
+        a.reserve_pinned(30);
+        a.on_alloc(30);
+        let snap = arb.snapshot();
+        assert_eq!(snap[a.shard_id()].lease, 25);
+        assert_eq!(snap[a.shard_id()].used, 40);
+        assert_eq!(snap[a.shard_id()].headroom, -15);
+        arb.check_ledger().unwrap();
+        drop(b);
+        arb.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn unregister_returns_lease_to_pool() {
+        let arb = BudgetArbiter::new(100, ArbiterPolicy::GlobalReclaim, 1);
+        let a = arb.register();
+        a.reserve_pinned(80);
+        a.on_alloc(80);
+        assert_eq!(arb.used_bytes(), 80);
+        a.on_free(80);
+        drop(a);
+        let b = arb.register();
+        b.reserve_pinned(100);
+        b.on_alloc(100);
+        arb.check_ledger().unwrap();
+        assert_eq!(arb.snapshot()[b.shard_id()].lease, 100);
+    }
+}

@@ -1,0 +1,231 @@
+//! # `dtr::serve` — multi-tenant serving over one arbitrated budget
+//!
+//! PAPER §5 implements DTR by interposing on "tensor allocations and
+//! operator calls" at a *central allocator*: every allocation funnels
+//! through one chokepoint that may evict before it returns. This module
+//! generalizes that chokepoint from one training process to **N concurrent
+//! tenants**: each tenant is a shard — its own `Session` stream, its own
+//! `Runtime` and `PolicyIndex` (the per-shard index seam left by PR 3) —
+//! running on a worker thread, while a single [`BudgetArbiter`] owns the
+//! global byte budget. Shards hold **revocable leases**: allocations inside
+//! a lease are a lock-free fast path; exhausting the lease escalates to
+//! the arbiter, which grants unleased budget, revokes idle leases, or —
+//! under [`ArbiterPolicy::GlobalReclaim`] — evicts the *globally*
+//! least-valuable evictable tensor, comparing heuristic scores across
+//! shards so an idle tenant's stale activations go before a hot tenant's
+//! fresh ones. [`ArbiterPolicy::StaticSplit`] is the offline baseline:
+//! budget divided `total/N` up front, every shard on its own.
+//!
+//! Treating memory as one shared pool rather than per-tenant silos is the
+//! central lesson of Coop (see PAPERS.md): eviction and allocation must
+//! cooperate over the *whole* pool or they strand memory in fragments —
+//! here the "fragments" are whole tenant partitions, and pooled reclaim is
+//! what lets a burst tenant borrow a quiet tenant's bytes. DTR's own
+//! online premise (no ahead-of-time plan, PAPER §1) is what makes this
+//! possible at all: tenants come and go and draw data-dependent shapes
+//! (LSTM/TreeLSTM tenants, [`TenantKind`]), so no offline partitioning of
+//! the budget can be computed.
+//!
+//! Correctness is pinned the same way PR 3 pinned its policy indexes:
+//! serving with **N=1 tenant is decision-exact** against a plain
+//! single-`Session` run under the same bytes — identical victim sequences
+//! and `Stats::same_decisions` (`tests/serve_exact.rs`) — because the
+//! arbiter's reclaim loop degenerates to exactly the fixed-budget
+//! `free_for` loop when there is nobody to reclaim from.
+//!
+//! ```no_run
+//! use dtr::serve::{ArbiterPolicy, ServePool, TenantSpec, run_tenants, fleet_budget};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let specs = TenantSpec::fleet(4); // transformer + LSTM + TreeLSTM mix
+//! let budget = fleet_budget(&specs, 60)?; // 60% of summed headroom
+//! let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, specs.len());
+//! let reports = run_tenants(&pool, &specs, &dtr::dtr::Config::default(), 10)?;
+//! for r in &reports {
+//!     println!("{}: {:.1} steps/s, slowdown {:.2}", r.kind, r.steps_per_sec(),
+//!              r.stats.slowdown());
+//! }
+//! pool.check_invariants()?;
+//! # Ok(())
+//! # }
+//! ```
+
+mod arbiter;
+mod tenants;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use arbiter::{ArbiterPolicy, BudgetArbiter, LeaseGate, ShardMeter, ShardSnapshot};
+pub use tenants::{
+    fleet_budget, run_tenants, tenant_envelope, TenantDriver, TenantKind, TenantReport, TenantSpec,
+};
+
+use crate::dtr::GateRef;
+
+/// A multi-tenant serving pool: one global byte budget, N shard leases.
+///
+/// Construction fixes the budget and arbitration policy; [`ServePool::lease`]
+/// registers a shard and returns the [`GateRef`] to install into that
+/// tenant's `Config::gate`. All shards' resident bytes sum to at most the
+/// budget (up to pinned-constant overdraft, which mirrors the fixed-budget
+/// runtime's unconditional constant registration).
+pub struct ServePool {
+    arb: Arc<BudgetArbiter>,
+}
+
+impl ServePool {
+    /// `planned_tenants` sizes the static-split share (`total / planned`);
+    /// global reclaim ignores it beyond diagnostics.
+    pub fn new(total: u64, policy: ArbiterPolicy, planned_tenants: usize) -> ServePool {
+        ServePool { arb: BudgetArbiter::new(total, policy, planned_tenants) }
+    }
+
+    /// Register a new shard and lease it a gate. Install the result as
+    /// `Config::gate` on the tenant's DTR config; every session built from
+    /// that config reserves through this shard's lease.
+    pub fn lease(&self) -> GateRef {
+        GateRef::new(Arc::new(self.arb.register()))
+    }
+
+    pub fn total(&self) -> u64 {
+        self.arb.total()
+    }
+
+    pub fn policy(&self) -> ArbiterPolicy {
+        self.arb.policy()
+    }
+
+    /// The underlying arbiter (snapshots, ledger checks).
+    pub fn arbiter(&self) -> &Arc<BudgetArbiter> {
+        &self.arb
+    }
+
+    /// Bytes currently resident across all live shards.
+    pub fn used_bytes(&self) -> u64 {
+        self.arb.used_bytes()
+    }
+
+    /// Per-shard ledger rows.
+    pub fn snapshot(&self) -> Vec<ShardSnapshot> {
+        self.arb.snapshot()
+    }
+
+    /// Cross-shard accounting invariant (quiescent): every live shard's
+    /// `lease == used + headroom` and live leases sum within the budget —
+    /// the serve-level extension of `Runtime::check_invariants`, whose
+    /// per-shard half ties `used` to the runtime's own `Stats::memory` and
+    /// pool-byte counters.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.arb.check_ledger()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Session;
+    use crate::dtr::{Config, Heuristic};
+
+    /// Two accounting shards on one pool: the second tenant's pressure
+    /// reclaims the idle first tenant's bytes (global reclaim), and the
+    /// ledger stays exact throughout.
+    #[test]
+    fn cross_shard_reclaim_takes_idle_tenants_bytes() {
+        let pool = ServePool::new(64, ArbiterPolicy::GlobalReclaim, 2);
+        let mk = |pool: &ServePool| {
+            Session::accounting(Config {
+                heuristic: Heuristic::lru(),
+                gate: Some(pool.lease()),
+                ..Config::default()
+            })
+        };
+        let a = mk(&pool);
+        let b = mk(&pool);
+
+        // Tenant A fills most of the pool with evictable activations. The
+        // large op costs advance A's clock far ahead, so A's tensors are
+        // decisively staler than anything B produces (h_lru compares raw
+        // per-shard scores).
+        let a0 = a.constant_sized(4);
+        let mut prev = a0.clone();
+        let mut held = Vec::new();
+        for _ in 0..10 {
+            let t = a.call_sized("f", 50, &[&prev], &[4]).unwrap().remove(0);
+            held.push(prev);
+            prev = t;
+        }
+        held.push(prev);
+        assert_eq!(a.memory(), 44);
+        pool.check_invariants().unwrap();
+
+        // Tenant B's demand must evict A's stale tensors cross-shard.
+        let b0 = b.constant_sized(4);
+        let mut bprev = b0.clone();
+        let mut bheld = Vec::new();
+        for _ in 0..8 {
+            let t = b.call_sized("g", 1, &[&bprev], &[4]).unwrap().remove(0);
+            bheld.push(bprev);
+            bprev = t;
+        }
+        bheld.push(bprev);
+        assert!(b.memory() >= 36, "tenant B got {} bytes", b.memory());
+        assert!(
+            a.stats().evict_count > 0,
+            "tenant A was never evicted cross-shard"
+        );
+        assert!(a.memory() + b.memory() <= 64, "global budget violated");
+        pool.check_invariants().unwrap();
+        a.check_invariants().unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    /// Static split never reclaims across shards: each tenant is boxed
+    /// into its share.
+    #[test]
+    fn static_split_isolates_shards() {
+        let pool = ServePool::new(64, ArbiterPolicy::StaticSplit, 2);
+        let cfg = |pool: &ServePool| Config {
+            heuristic: Heuristic::lru(),
+            gate: Some(pool.lease()),
+            ..Config::default()
+        };
+        let a = Session::accounting(cfg(&pool));
+        let b = Session::accounting(cfg(&pool));
+        let a0 = a.constant_sized(4);
+        let mut prev = a0.clone();
+        let mut held = Vec::new();
+        for _ in 0..12 {
+            let t = a.call_sized("f", 1, &[&prev], &[4]).unwrap().remove(0);
+            held.push(prev);
+            prev = t;
+        }
+        held.push(prev);
+        // A's share is 32: it must have evicted itself under its own cap
+        // even though B holds nothing.
+        assert!(a.memory() <= 32, "A exceeded its static share: {}", a.memory());
+        assert!(a.stats().evict_count > 0);
+        let _b0 = b.constant_sized(4);
+        pool.check_invariants().unwrap();
+    }
+
+    /// Dropping a tenant's sessions and gate returns every byte.
+    #[test]
+    fn teardown_refunds_the_ledger() {
+        let pool = ServePool::new(128, ArbiterPolicy::GlobalReclaim, 1);
+        {
+            let s = Session::accounting(Config {
+                gate: Some(pool.lease()),
+                ..Config::default()
+            });
+            let c = s.constant_sized(16);
+            let _o = s.call_sized("f", 1, &[&c], &[16]).unwrap();
+            assert_eq!(pool.used_bytes(), 32);
+        }
+        // Sessions and handles dropped: runtime Drop refunded, gate Drop
+        // unregistered.
+        assert_eq!(pool.used_bytes(), 0);
+        pool.check_invariants().unwrap();
+    }
+}

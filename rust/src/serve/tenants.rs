@@ -1,0 +1,282 @@
+//! Tenant drivers: the serving workloads that shard over worker threads.
+//!
+//! A tenant is one model being trained/served under its own `Session`
+//! stream — the static transformer engine or one of the dynamic
+//! (data-dependent shape) trainers, all speaking the hermetic interpreter.
+//! Each tenant thread owns its driver; the only cross-thread coupling is
+//! the shared [`ServePool`] budget, which is exactly the point: the mix of
+//! a static model with LSTM/TreeLSTM tenants whose per-step shapes are
+//! random reproduces the serving scenario no offline partitioner can plan.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::ServePool;
+use crate::dtr;
+use crate::exec::{Engine, LstmTrainer, Optimizer, TreeLstmTrainer};
+use crate::runtime::{InterpExecutor, ModelConfig, RnnConfig};
+
+/// Deterministic probe batch for dynamic tenants (loss-descent evidence;
+/// same probe seed the dynamic-trainer unit tests pin descent with).
+const PROBE_SEED: u64 = 99;
+
+/// Which model a tenant serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantKind {
+    /// Static transformer LM (`exec::Engine`, tiny config, SGD).
+    Transformer,
+    /// LSTM over per-batch random sequence lengths.
+    Lstm,
+    /// TreeLSTM over per-sample random tree shapes.
+    TreeLstm,
+}
+
+impl TenantKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantKind::Transformer => "transformer",
+            TenantKind::Lstm => "lstm",
+            TenantKind::TreeLstm => "treelstm",
+        }
+    }
+
+    /// The canonical mixed-fleet cycle: transformer, LSTM, TreeLSTM, ...
+    pub fn mixed(i: usize) -> TenantKind {
+        match i % 3 {
+            0 => TenantKind::Transformer,
+            1 => TenantKind::Lstm,
+            _ => TenantKind::TreeLstm,
+        }
+    }
+}
+
+/// One tenant of a serve run.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    pub kind: TenantKind,
+    /// Weight/data seed (dynamic tenants); distinct seeds decorrelate the
+    /// tenants' step shapes.
+    pub seed: u64,
+}
+
+impl TenantSpec {
+    /// The default mixed fleet of `n` tenants.
+    pub fn fleet(n: usize) -> Vec<TenantSpec> {
+        (0..n)
+            .map(|i| TenantSpec { kind: TenantKind::mixed(i), seed: 0x5EED + 37 * i as u64 })
+            .collect()
+    }
+}
+
+/// Outcome of one tenant's serving run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub kind: &'static str,
+    /// Steps requested / completed (they differ only on error).
+    pub steps: usize,
+    pub completed: usize,
+    pub wall_ns: u64,
+    /// DTR counters summed over the tenant's per-step sessions
+    /// (`peak_memory` is the max across steps).
+    pub stats: dtr::Stats,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    /// Unbudgeted fixed-batch probe loss before/after (dynamic tenants).
+    pub probe_before: Option<f32>,
+    pub probe_after: Option<f32>,
+    pub error: Option<String>,
+}
+
+impl TenantReport {
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.wall_ns as f64 / 1e9)
+        }
+    }
+}
+
+/// Sum decision counters across steps (peak is a max; `memory` is last).
+fn accumulate_stats(acc: &mut dtr::Stats, s: &dtr::Stats) {
+    acc.clock += s.clock;
+    acc.base_compute += s.base_compute;
+    acc.remat_compute += s.remat_compute;
+    acc.remat_count += s.remat_count;
+    acc.evict_count += s.evict_count;
+    acc.banish_count += s.banish_count;
+    acc.metadata_accesses += s.metadata_accesses;
+    acc.memory = s.memory;
+    acc.peak_memory = acc.peak_memory.max(s.peak_memory);
+    acc.eviction_loop_ns += s.eviction_loop_ns;
+    acc.cost_compute_ns += s.cost_compute_ns;
+    acc.eviction_searches += s.eviction_searches;
+}
+
+/// One tenant's driver: the concrete trainer behind a uniform step/probe
+/// interface.
+pub enum TenantDriver {
+    Transformer(Box<Engine>),
+    Lstm(Box<LstmTrainer>),
+    TreeLstm(Box<TreeLstmTrainer>),
+}
+
+impl TenantDriver {
+    /// Build the tenant's trainer over the hermetic interpreter. The
+    /// `dtr_cfg` carries the shard's budget gate (or a fixed budget for
+    /// standalone runs).
+    pub fn build(kind: TenantKind, dtr_cfg: dtr::Config, seed: u64) -> Result<TenantDriver> {
+        Ok(match kind {
+            TenantKind::Transformer => TenantDriver::Transformer(Box::new(Engine::interp(
+                ModelConfig::tiny(),
+                dtr_cfg,
+                Optimizer::Sgd,
+            )?)),
+            TenantKind::Lstm => {
+                let rnn = RnnConfig::tiny();
+                TenantDriver::Lstm(Box::new(LstmTrainer::new(
+                    Box::new(InterpExecutor::rnn(rnn)?),
+                    rnn,
+                    dtr_cfg,
+                    seed,
+                )?))
+            }
+            TenantKind::TreeLstm => {
+                let rnn = RnnConfig::tiny();
+                TenantDriver::TreeLstm(Box::new(TreeLstmTrainer::new(
+                    Box::new(InterpExecutor::rnn(rnn)?),
+                    rnn,
+                    dtr_cfg,
+                    seed,
+                )?))
+            }
+        })
+    }
+
+    /// One training step; returns (loss, this step's DTR stats).
+    pub fn step(&mut self) -> Result<(f32, dtr::Stats)> {
+        match self {
+            TenantDriver::Transformer(e) => {
+                let r = e.train_step()?;
+                Ok((r.loss, r.stats))
+            }
+            TenantDriver::Lstm(t) => {
+                let r = t.train_step()?;
+                Ok((r.loss, r.stats))
+            }
+            TenantDriver::TreeLstm(t) => {
+                let r = t.train_step()?;
+                Ok((r.loss, r.stats))
+            }
+        }
+    }
+
+    /// Unbudgeted fixed-batch probe loss (dynamic tenants only).
+    pub fn probe(&self) -> Option<f32> {
+        match self {
+            TenantDriver::Transformer(_) => None,
+            TenantDriver::Lstm(t) => t.probe_loss(PROBE_SEED).ok(),
+            TenantDriver::TreeLstm(t) => t.probe_loss(PROBE_SEED).ok(),
+        }
+    }
+
+    /// Unbudgeted (peak, pinned-floor) envelope of this tenant.
+    pub fn envelope(&mut self) -> Result<(u64, u64)> {
+        match self {
+            TenantDriver::Transformer(e) => {
+                let peak = e.measure_peak()?;
+                Ok((peak, e.pinned_bytes()))
+            }
+            TenantDriver::Lstm(t) => t.measure_envelope(3),
+            TenantDriver::TreeLstm(t) => t.measure_envelope(3),
+        }
+    }
+}
+
+/// Measure a tenant's standalone unbudgeted envelope: (peak, pinned floor).
+pub fn tenant_envelope(kind: TenantKind, seed: u64) -> Result<(u64, u64)> {
+    let mut d = TenantDriver::build(kind, dtr::Config::default(), seed)?;
+    d.envelope()
+}
+
+/// One global budget sized at `pct`% of each tenant's non-pinned headroom,
+/// summed: `sum_i(floor_i + (peak_i - floor_i) * pct / 100)`. At 100 every
+/// tenant fits its own peak; below that, tenants genuinely compete.
+pub fn fleet_budget(specs: &[TenantSpec], pct: u64) -> Result<u64> {
+    let mut total = 0u64;
+    for spec in specs {
+        let (peak, floor) = tenant_envelope(spec.kind, spec.seed)?;
+        total += floor + peak.saturating_sub(floor) * pct / 100;
+    }
+    Ok(total)
+}
+
+fn run_one(spec: TenantSpec, cfg: dtr::Config, steps: usize) -> TenantReport {
+    let mut report = TenantReport {
+        kind: spec.kind.name(),
+        steps,
+        completed: 0,
+        wall_ns: 0,
+        stats: dtr::Stats::default(),
+        first_loss: f32::NAN,
+        last_loss: f32::NAN,
+        probe_before: None,
+        probe_after: None,
+        error: None,
+    };
+    let mut driver = match TenantDriver::build(spec.kind, cfg, spec.seed) {
+        Ok(d) => d,
+        Err(e) => {
+            report.error = Some(format!("build: {e:#}"));
+            return report;
+        }
+    };
+    report.probe_before = driver.probe();
+    let t0 = Instant::now();
+    for i in 0..steps {
+        match driver.step() {
+            Ok((loss, stats)) => {
+                if i == 0 {
+                    report.first_loss = loss;
+                }
+                report.last_loss = loss;
+                report.completed += 1;
+                accumulate_stats(&mut report.stats, &stats);
+            }
+            Err(e) => {
+                report.error = Some(format!("step {i}: {e:#}"));
+                break;
+            }
+        }
+    }
+    report.wall_ns = t0.elapsed().as_nanos() as u64;
+    report.probe_after = driver.probe();
+    report
+}
+
+/// Run every tenant for `steps` training steps on its own worker thread,
+/// all sharded over `pool`'s single global budget. `base` supplies the
+/// heuristic/policy/index knobs; each tenant gets `base` plus its own
+/// freshly leased gate.
+pub fn run_tenants(
+    pool: &ServePool,
+    specs: &[TenantSpec],
+    base: &dtr::Config,
+    steps: usize,
+) -> Result<Vec<TenantReport>> {
+    let gates: Vec<_> = specs.iter().map(|_| pool.lease()).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(specs.len());
+        for (spec, gate) in specs.iter().zip(gates) {
+            let mut cfg = base.clone();
+            cfg.gate = Some(gate);
+            let spec = *spec;
+            handles.push(scope.spawn(move || run_one(spec, cfg, steps)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| anyhow::anyhow!("tenant thread panicked")))
+            .collect()
+    })
+}

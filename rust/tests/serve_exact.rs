@@ -1,0 +1,155 @@
+//! N=1-tenant serving is **decision-exact** against a plain single
+//! `Session` under the same byte budget: identical victim sequences and
+//! `Stats::same_decisions`, for both arbitration policies. This is the
+//! serve-layer analogue of the policy-index equivalence property (PR 3):
+//! the arbiter's reclaim loop must degenerate to exactly the fixed-budget
+//! `free_for` loop when there is nobody to reclaim from.
+
+use dtr::api::{Session, Tensor};
+use dtr::dtr::{Config, Heuristic, NullBackend, Stats};
+use dtr::exec::dynamic::{headroom_budget, LstmTrainer};
+use dtr::runtime::RnnConfig;
+use dtr::serve::{ArbiterPolicy, ServePool};
+use dtr::util::rng::Rng;
+
+/// Drive a deterministic randomized tape (calls, releases, touches) through
+/// any accounting session; the op stream depends only on `seed`.
+fn drive(s: &Session<NullBackend>, seed: u64, ops: usize) -> Stats {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<Tensor> = vec![s.constant_sized(8)];
+    for i in 0..ops {
+        let src = rng.index(live.len());
+        let out_bytes = 1 + rng.below(16);
+        let cost = 1 + rng.below(5);
+        let t = s
+            .call_sized(&format!("op{i}"), cost, &[&live[src]], &[out_bytes])
+            .expect("tape op under budget")
+            .remove(0);
+        live.push(t);
+        if live.len() > 24 {
+            // Deterministic release (never the pinned constant).
+            let k = 1 + rng.index(live.len() - 2);
+            drop(live.remove(k));
+        }
+        if i % 17 == 0 && live.len() > 3 {
+            let k = 1 + rng.index(live.len() - 1);
+            s.touch(&live[k]).expect("touch remat under budget");
+        }
+    }
+    s.check_invariants().unwrap();
+    s.stats()
+}
+
+/// Unbudgeted peak of the tape (for sizing the budget rungs).
+fn tape_peak(seed: u64, ops: usize) -> u64 {
+    let s = Session::accounting(Config::default());
+    drive(&s, seed, ops).peak_memory
+}
+
+#[test]
+fn single_tenant_accounting_tape_is_decision_exact() {
+    const SEED: u64 = 0xACC0;
+    const OPS: usize = 400;
+    let peak = tape_peak(SEED, OPS);
+    // Loose enough that the single-op working set always fits, tight
+    // enough to force a steady eviction stream.
+    let budget = 8 + (peak - 8) * 45 / 100;
+    for h in [Heuristic::dtr_eq(), Heuristic::dtr(), Heuristic::lru(), Heuristic::size()] {
+        let plain = {
+            let s = Session::accounting(Config {
+                budget,
+                heuristic: h,
+                trace_victims: true,
+                ..Config::default()
+            });
+            drive(&s, SEED, OPS)
+        };
+        assert!(plain.evict_count > 0, "{}: budget never binds", h.name());
+        for policy in ArbiterPolicy::all() {
+            let pool = ServePool::new(budget, policy, 1);
+            let served = {
+                let s = Session::accounting(Config {
+                    heuristic: h,
+                    trace_victims: true,
+                    gate: Some(pool.lease()),
+                    ..Config::default()
+                });
+                drive(&s, SEED, OPS)
+            };
+            assert!(
+                plain.same_decisions(&served),
+                "{} under {} diverged from the plain session:\nplain  {:?}\nserved {:?}",
+                h.name(),
+                policy.name(),
+                plain,
+                served
+            );
+            pool.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn single_tenant_lstm_training_is_decision_exact() {
+    const STEPS: usize = 4;
+    let mk = |cfg: Config| LstmTrainer::interp(RnnConfig::tiny(), cfg).unwrap();
+    let (peak, floor) = mk(Config::default()).measure_envelope(STEPS).unwrap();
+
+    // Walk the rungs from loose to tight; the first rung the plain trainer
+    // completes is the comparison point (tighter rungs may legitimately
+    // OOM on the dynamic envelope).
+    for pct in [70u64, 55] {
+        let budget = headroom_budget(peak, floor, pct);
+        let plain_cfg = Config {
+            budget,
+            heuristic: Heuristic::dtr_eq(),
+            trace_victims: true,
+            ..Config::default()
+        };
+        let mut plain = mk(plain_cfg);
+        let mut expect: Vec<(f32, Stats)> = Vec::new();
+        let mut ok = true;
+        for _ in 0..STEPS {
+            match plain.train_step() {
+                Ok(r) => expect.push((r.loss, r.stats)),
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        assert!(
+            expect.iter().any(|(_, s)| s.evict_count > 0),
+            "rung {pct}% never evicted; comparison is vacuous"
+        );
+        for policy in ArbiterPolicy::all() {
+            let pool = ServePool::new(budget, policy, 1);
+            let served_cfg = Config {
+                heuristic: Heuristic::dtr_eq(),
+                trace_victims: true,
+                gate: Some(pool.lease()),
+                ..Config::default()
+            };
+            let mut served = mk(served_cfg);
+            for (i, (loss, stats)) in expect.iter().enumerate() {
+                let r = served.train_step().unwrap_or_else(|e| {
+                    panic!("served step {i} failed under {}: {e:#}", policy.name())
+                });
+                assert_eq!(*loss, r.loss, "loss diverged at step {i} ({})", policy.name());
+                assert!(
+                    stats.same_decisions(&r.stats),
+                    "decisions diverged at step {i} under {}:\nplain  {:?}\nserved {:?}",
+                    policy.name(),
+                    stats,
+                    r.stats
+                );
+            }
+            pool.check_invariants().unwrap();
+        }
+        return;
+    }
+    panic!("no budget rung completed on the plain trainer");
+}

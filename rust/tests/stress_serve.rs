@@ -1,0 +1,183 @@
+//! Multi-tenant serving stress + arbiter-ledger properties.
+//!
+//! * `tight_budget_mixed_tenants`: several worker threads (static
+//!   transformer + dynamic LSTM/TreeLSTM tenants) under one tight global
+//!   budget with cross-shard reclaim. Asserts the run terminates (no
+//!   deadlock in the arbiter), a live sampler never sees resident bytes
+//!   above the budget, every tenant makes progress, and the dynamic
+//!   tenants' probe losses descend.
+//! * `ledger_equals_shard_accounting_under_random_tapes`: the satellite
+//!   property — after every operation of a randomized multi-shard tape,
+//!   the arbiter's lease ledger equals each shard's own accounting
+//!   (`used == Stats::memory`, `lease == used + headroom`), composed with
+//!   each runtime's `check_invariants` (which ties `Stats::memory` to the
+//!   graph's resident bytes and the pool-byte counter).
+//!
+//! CI runs this file in release mode as well (debug is too slow to stress
+//! thread interleavings hard).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use dtr::api::{Session, Tensor};
+use dtr::dtr::{Config, Heuristic, NullBackend};
+use dtr::exec::dynamic::{LSTM_SEED, TREE_SEED};
+use dtr::serve::{fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantKind, TenantSpec};
+use dtr::util::rng::Rng;
+
+#[test]
+fn tight_budget_mixed_tenants() {
+    const STEPS: usize = 30;
+    // Static + dynamic mix; the dynamic tenants use the seeds whose probe
+    // descent the dynamic-trainer unit tests already pin.
+    let specs = [
+        TenantSpec { kind: TenantKind::Transformer, seed: 1 },
+        TenantSpec { kind: TenantKind::Lstm, seed: LSTM_SEED },
+        TenantSpec { kind: TenantKind::TreeLstm, seed: TREE_SEED },
+        TenantSpec { kind: TenantKind::Transformer, seed: 2 },
+    ];
+    let budget = fleet_budget(&specs, 75).expect("envelope");
+    let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, specs.len());
+
+    // Live budget monitor: the *sum of resident bytes across shards* must
+    // never exceed the global budget, at any sampled instant.
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let stop = Arc::clone(&stop);
+        let arb = Arc::clone(pool.arbiter());
+        thread::spawn(move || {
+            let mut max_used = 0u64;
+            while !stop.load(Ordering::Acquire) {
+                max_used = max_used.max(arb.used_bytes());
+                thread::sleep(Duration::from_micros(200));
+            }
+            max_used
+        })
+    };
+
+    let base = Config { heuristic: Heuristic::dtr_eq(), ..Config::default() };
+    let reports = run_tenants(&pool, &specs, &base, STEPS).expect("tenant threads");
+
+    stop.store(true, Ordering::Release);
+    let max_used = sampler.join().expect("sampler thread");
+    // Pinned-constant overdraft is the one sanctioned way past the budget,
+    // and this configuration cannot reach it: the fleet budget covers every
+    // tenant's pinned floor (sum of floors < budget), the pinned slow path
+    // grants/revokes/reclaims before overdrafting, and its busy-timeout
+    // (~4 s of *consecutive* failed try_locks) cannot fire when peers
+    // release their runtime locks between every operator.
+    assert!(
+        max_used <= budget,
+        "global budget violated: sampled {max_used} B resident > budget {budget} B"
+    );
+
+    let mut evictions = 0u64;
+    for r in &reports {
+        assert!(
+            r.error.is_none(),
+            "{} tenant failed under global reclaim: {:?}",
+            r.kind,
+            r.error
+        );
+        assert_eq!(r.completed, STEPS, "{} tenant did not finish", r.kind);
+        evictions += r.stats.evict_count;
+        if let (Some(before), Some(after)) = (r.probe_before, r.probe_after) {
+            assert!(
+                after < before,
+                "{} probe loss did not descend under serving: {before} -> {after}",
+                r.kind
+            );
+        }
+    }
+    assert!(evictions > 0, "budget never bound: the stress is vacuous");
+    pool.check_invariants().unwrap();
+    assert_eq!(pool.used_bytes(), 0, "tenants tore down but bytes remain leased");
+}
+
+/// Drive one random op (call/release/touch) on a shard's tape.
+struct ShardTape {
+    session: Session<NullBackend>,
+    live: Vec<Tensor>,
+    rng: Rng,
+    step: usize,
+}
+
+impl ShardTape {
+    fn new(pool: &ServePool, seed: u64, h: Heuristic) -> ShardTape {
+        let session = Session::accounting(Config {
+            heuristic: h,
+            gate: Some(pool.lease()),
+            ..Config::default()
+        });
+        let c = session.constant_sized(8);
+        ShardTape { session, live: vec![c], rng: Rng::new(seed), step: 0 }
+    }
+
+    fn tick(&mut self) {
+        self.step += 1;
+        let src = self.rng.index(self.live.len());
+        let bytes = 1 + self.rng.below(16);
+        let cost = 1 + self.rng.below(4);
+        let t = self
+            .session
+            .call_sized(&format!("s{}", self.step), cost, &[&self.live[src]], &[bytes])
+            .expect("tape op within global budget")
+            .remove(0);
+        self.live.push(t);
+        if self.live.len() > 16 {
+            let k = 1 + self.rng.index(self.live.len() - 2);
+            drop(self.live.remove(k));
+        }
+        if self.step % 13 == 0 && self.live.len() > 2 {
+            let k = 1 + self.rng.index(self.live.len() - 1);
+            self.session.touch(&self.live[k]).expect("remat within global budget");
+        }
+    }
+}
+
+#[test]
+fn ledger_equals_shard_accounting_under_random_tapes() {
+    let h = Heuristic::dtr_eq();
+    // Unbudgeted total of three tapes is ~3 * (16 live * <=16 B + 8 pinned);
+    // half of that forces steady cross-shard reclaim.
+    let pool = ServePool::new(400, ArbiterPolicy::GlobalReclaim, 3);
+    let mut shards: Vec<ShardTape> =
+        (0..3).map(|i| ShardTape::new(&pool, 0xA11 + i as u64, h)).collect();
+    for round in 0..240 {
+        for (i, shard) in shards.iter_mut().enumerate() {
+            shard.tick();
+            // Per-shard runtime accounting (memory == graph resident bytes,
+            // pool-byte counter exact)...
+            shard.session.check_invariants().unwrap_or_else(|e| {
+                panic!("shard {i} invariants broken at round {round}: {e:#}")
+            });
+        }
+        // ...composed with the cross-shard ledger: lease == used + headroom
+        // per live shard, leases within the budget, and the arbiter's
+        // `used` gauge identical to each runtime's own `Stats::memory`.
+        pool.check_invariants()
+            .unwrap_or_else(|e| panic!("ledger broken at round {round}: {e:#}"));
+        let snap = pool.snapshot();
+        let mut total_used = 0u64;
+        for (i, shard) in shards.iter().enumerate() {
+            assert_eq!(
+                snap[i].used,
+                shard.session.memory(),
+                "shard {i} meter drifted from its runtime at round {round}"
+            );
+            total_used += snap[i].used;
+        }
+        assert!(
+            total_used <= pool.total(),
+            "round {round}: resident {total_used} B exceed the budget {} B",
+            pool.total()
+        );
+    }
+    let evictions: u64 = shards.iter().map(|s| s.session.stats().evict_count).sum();
+    assert!(evictions > 0, "tapes never forced an eviction; property is vacuous");
+    drop(shards);
+    pool.check_invariants().unwrap();
+    assert_eq!(pool.used_bytes(), 0);
+}
