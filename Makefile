@@ -3,7 +3,7 @@
 # `make verify` is the tier-1 gate (hermetic: no network, no Python, no
 # artifacts needed — the engine runs on the pure-Rust interpreter backend).
 
-.PHONY: verify build test bench bench-json bench-json-dtr bench-json-serve fmt clippy e2e artifacts clean
+.PHONY: verify build test bench bench-json bench-json-dtr bench-json-serve bench-json-quick fmt clippy e2e artifacts clean
 
 # Tier-1 first (build + test), then the same gates CI runs: the pjrt
 # feature-gate type-check (so the gated path cannot rot locally) and lints.
@@ -23,11 +23,14 @@ bench:
 
 # Machine-readable perf trajectory, committed as BENCH_*.json baselines in
 # the repo root (CI also uploads fresh copies as workflow artifacts):
-#  * BENCH_dtr.json   — bench_dtr eviction-scaling (ns/eviction at
-#    1k/10k/100k pools, reference scan vs policy index);
+#  * BENCH_dtr.json   — bench_dtr kernel section (scalar vs row-kernel
+#    GEMMs at the transformer shapes) + eviction-scaling (ns/eviction at
+#    growing pools, reference scan vs policy index);
 #  * BENCH_serve.json — bench_serve multi-tenant scaling (aggregate
-#    steps/sec + remat overhead at 1/2/4/8 tenants, static-split vs
+#    steps/sec + remat overhead vs tenant count, static-split vs
 #    global-reclaim arbitration).
+# Both benches exit non-zero if their results array would be empty (pass
+# `--allow-empty` to override), so an empty trajectory file fails the make.
 bench-json: bench-json-dtr bench-json-serve
 
 bench-json-dtr:
@@ -35,6 +38,12 @@ bench-json-dtr:
 
 bench-json-serve:
 	cargo bench --bench bench_serve -- --json BENCH_serve.json
+
+# CI-sized regeneration of the full trajectory (small pools, few iters,
+# fewer tenants) — cheap enough to run on every push.
+bench-json-quick:
+	cargo bench --bench bench_dtr -- --json BENCH_dtr.json --quick
+	cargo bench --bench bench_serve -- --json BENCH_serve.json --quick
 
 fmt:
 	cargo fmt --check

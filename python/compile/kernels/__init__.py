@@ -1,1 +1,19 @@
 # L1: Pallas kernel(s) for the paper's compute hot-spot.
+#
+# These files double as the tiling specs for the Rust interpreter's kernel
+# layer (rust/src/runtime/kernels/), which ports their discipline to the
+# CPU hot path:
+#
+#   attention.py  (_attn_kernel)    -> kernels/fused.rs::causal_attention
+#       online-softmax flash attention with running (m, l, acc) per query
+#       row; the Rust port is the block_q = block_k = 1 degenerate form.
+#   layernorm.py  (_ln_kernel,      -> kernels/fused.rs::layernorm,
+#                  _ln_bwd_kernel)     kernels/fused.rs::layernorm_bwd
+#       one pass per row, mean/var/rstd recomputed in-kernel.
+#   ref.py        (scalar nests)    -> kernels/reference.rs
+#       the unblocked loop nests, retained verbatim on the Rust side as
+#       the bitwise equivalence oracle (rust/tests/prop_kernels.rs).
+#
+# The MXU-aligned accumulator blocking these specs assume maps to the
+# rank-1 row kernel in kernels/gemm.rs (KU=8 unrolled updates per pass,
+# k kept whole so every f32 accumulation chain matches the reference).

@@ -4,16 +4,27 @@
 //! the offline crate cache): median of repeated runs with warmup, printed as
 //! `name  median  p95  iters`.
 //!
-//! `--json PATH` additionally writes the eviction-scaling section as a JSON
-//! report (`make bench-json` -> `BENCH_dtr.json`): ns/eviction at pool
-//! sizes 1k/10k/100k for scan vs indexed `h_lru`/`h_size`/`h_dtr` — the
-//! perf trajectory of the §3.2/Appendix E runtime optimizations. The
-//! indexed runs are decision-identical to the scan runs (the equivalence
-//! property), so ns/eviction compares equal work.
+//! `--json PATH` additionally writes the kernel and eviction-scaling
+//! sections as a JSON report (`make bench-json` -> `BENCH_dtr.json`):
+//!
+//! * `section: "kernels"` — ns/call of the interpreter GEMMs, scalar
+//!   reference vs the rank-1 row kernels (`runtime/kernels/gemm.rs`)
+//!   at the transformer training shapes, single-thread and all-core.
+//! * `section: "eviction_scaling"` — ns/eviction at growing pool sizes
+//!   for scan vs indexed `h_lru`/`h_size`/`h_dtr` — the perf trajectory of
+//!   the §3.2/Appendix E runtime optimizations. The indexed runs are
+//!   decision-identical to the scan runs (the equivalence property), so
+//!   ns/eviction compares equal work.
+//!
+//! `--quick` shrinks every section to CI size (small pools, few iters) so
+//! the JSON trajectory can be regenerated on every push; `--json` exits
+//! non-zero if the results array would be empty unless `--allow-empty` is
+//! passed (an empty trajectory artifact is a bug, not a report).
 
 use std::time::Instant;
 
 use dtr::dtr::{Config, Heuristic, NullBackend, OutSpec, PolicyKind, Runtime};
+use dtr::runtime::kernels::{gemm, reference};
 use dtr::util::rng::Rng;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> u64 {
@@ -81,6 +92,81 @@ struct ScalingRow {
     ns_per_eviction: u64,
 }
 
+struct KernelRow {
+    op: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    variant: &'static str,
+    threads: usize,
+    ns_per_call: u64,
+}
+
+/// ns/call of the interpreter GEMMs at the exact shapes the transformer
+/// training step issues at `ModelConfig::small()` (qkv/mlp/loss
+/// projections and their backward contractions): the retained scalar
+/// reference vs the rank-1 row kernel, single-thread and all-core.
+/// All variants are bitwise-equal (the kernel-equivalence property), so
+/// ns/call compares identical work.
+fn bench_gemm_kernels(quick: bool) -> Vec<KernelRow> {
+    println!("\n# interpreter GEMMs — scalar reference vs row kernels\n");
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let iters = if quick { 7 } else { 21 };
+    // (op, m, k, n) with the kernel-layout convention: `matmul_at` takes
+    // a:[k,m], `matmul_bt` takes b:[n,k]. dwqkv/dh1/dx are the backward
+    // contractions of the qkv, mlp, and loss projections.
+    let shapes: &[(&'static str, usize, usize, usize)] = &[
+        ("matmul", 256, 64, 192),    // qkv projection
+        ("matmul", 256, 128, 64),    // mlp contraction
+        ("matmul", 256, 64, 256),    // loss logits
+        ("matmul_at", 64, 256, 192), // dwqkv
+        ("matmul_bt", 256, 192, 64), // dh1
+        ("matmul_bt", 256, 256, 64), // dx
+    ];
+    let mut rng = Rng::new(11);
+    let mut randv = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
+    };
+    let mut rows = Vec::new();
+    for &(op, m, k, n) in shapes {
+        let (asz, bsz) = match op {
+            "matmul" => (m * k, k * n),
+            "matmul_at" => (k * m, k * n),
+            _ => (m * k, n * k),
+        };
+        let a = randv(asz);
+        let b = randv(bsz);
+        let run = |variant: &str, threads: usize| -> Vec<f32> {
+            match (op, variant) {
+                ("matmul", "scalar") => reference::matmul(&a, &b, m, k, n),
+                ("matmul", _) => gemm::matmul(&a, &b, m, k, n, threads),
+                ("matmul_at", "scalar") => reference::matmul_at(&a, &b, k, m, n),
+                ("matmul_at", _) => gemm::matmul_at(&a, &b, k, m, n, threads),
+                ("matmul_bt", "scalar") => reference::matmul_bt(&a, &b, m, k, n),
+                (_, _) => gemm::matmul_bt(&a, &b, m, k, n, threads),
+            }
+        };
+        let mut variants: Vec<(&'static str, usize)> = vec![("scalar", 1), ("tiled", 1)];
+        if cores > 1 {
+            variants.push(("tiled", cores));
+        }
+        let mut scalar_ns = 0u64;
+        for (variant, threads) in variants {
+            let ns = bench(&format!("{op} {m}x{k}x{n} [{variant} t={threads}]"), iters, || {
+                std::hint::black_box(run(variant, threads));
+            });
+            if variant == "scalar" {
+                scalar_ns = ns;
+            } else {
+                let speedup = scalar_ns as f64 / ns.max(1) as f64;
+                println!("    -> {speedup:.2}x over scalar");
+            }
+            rows.push(KernelRow { op, m, k, n, variant, threads, ns_per_call: ns });
+        }
+    }
+    rows
+}
+
 /// ns/eviction of `evictions` back-to-back victim selections at a given
 /// pool size — the per-eviction cost the paper's Appendix E optimizations
 /// target. The pool build is excluded from the timed region; the median
@@ -123,26 +209,31 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let quick = args.iter().any(|a| a == "--quick");
+    let allow_empty = args.iter().any(|a| a == "--allow-empty");
 
-    println!("# bench_dtr — DTR core hot paths\n");
+    println!("# bench_dtr — DTR core hot paths{}\n", if quick { " (quick)" } else { "" });
 
+    let chain_iters = if quick { 5 } else { 20 };
     for h in [
         Heuristic::dtr(),
         Heuristic::dtr_eq(),
         Heuristic::dtr_local(),
         Heuristic::lru(),
     ] {
-        bench(&format!("chain n=1024 b=48 touches=64  [{}]", h.name()), 20, || {
+        bench(&format!("chain n=1024 b=48 touches=64  [{}]", h.name()), chain_iters, || {
             chain_workload(1024, 48, h, 64);
         });
     }
 
     // Eviction-search scaling with pool size (the prototype's O(pool) scan).
     for n in [256usize, 1024, 4096] {
-        bench(&format!("chain n={n} b=n/16 touches=16 [h_dtr_eq]"), 10, || {
+        bench(&format!("chain n={n} b=n/16 touches=16 [h_dtr_eq]"), chain_iters.min(10), || {
             chain_workload(n, (n / 16) as u64, Heuristic::dtr_eq(), 16);
         });
     }
+
+    let kernel_rows = bench_gemm_kernels(quick);
 
     // Appendix E.2 optimizations on a large pool.
     for (label, sqrt_sample, small_filter) in
@@ -176,10 +267,11 @@ fn main() {
     // h_lru / h_size / h_dtr at the 10k pool.
     println!("\n# eviction scaling — scan vs policy index (ns/eviction)\n");
     let mut rows: Vec<ScalingRow> = Vec::new();
-    for &pool in &[1_000usize, 10_000, 100_000] {
+    let pools: &[usize] = if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    for &pool in pools {
         // Keep the scan's O(pool * evictions) cost bounded at 100k.
-        let evictions = (pool / 2).min(512);
-        let iters = if pool >= 100_000 { 2 } else { 3 };
+        let evictions = (pool / 2).min(if quick { 128 } else { 512 });
+        let iters = if pool >= 100_000 || quick { 2 } else { 3 };
         for h in [Heuristic::lru(), Heuristic::size(), Heuristic::dtr()] {
             for kind in [PolicyKind::Scan, PolicyKind::Auto] {
                 rows.push(eviction_scaling(pool, h, kind, evictions, iters));
@@ -199,19 +291,33 @@ fn main() {
     }
 
     if let Some(path) = json_out {
-        let mut s = String::from("{\n  \"bench\": \"dtr_eviction_scaling\",\n  \"unit\": \"ns_per_eviction\",\n  \"results\": [\n");
-        for (i, r) in rows.iter().enumerate() {
-            s.push_str(&format!(
-                "    {{\"pool\": {}, \"heuristic\": \"{}\", \"index\": \"{}\", \"resolved_index\": \"{}\", \"ns_per_eviction\": {}}}{}\n",
-                r.pool,
-                r.heuristic,
-                r.index,
-                r.index_name,
-                r.ns_per_eviction,
-                if i + 1 == rows.len() { "" } else { "," }
+        let mut entries: Vec<String> = Vec::new();
+        for r in &kernel_rows {
+            entries.push(format!(
+                "    {{\"section\": \"kernels\", \"op\": \"{}\", \"m\": {}, \"k\": {}, \
+                 \"n\": {}, \"variant\": \"{}\", \"threads\": {}, \"ns_per_call\": {}}}",
+                r.op, r.m, r.k, r.n, r.variant, r.threads, r.ns_per_call
             ));
         }
-        s.push_str("  ]\n}\n");
+        for r in &rows {
+            entries.push(format!(
+                "    {{\"section\": \"eviction_scaling\", \"pool\": {}, \"heuristic\": \"{}\", \
+                 \"index\": \"{}\", \"resolved_index\": \"{}\", \"ns_per_eviction\": {}}}",
+                r.pool, r.heuristic, r.index, r.index_name, r.ns_per_eviction
+            ));
+        }
+        if entries.is_empty() && !allow_empty {
+            eprintln!("bench_dtr: refusing to write an empty results array to {path} \
+                       (pass --allow-empty to override)");
+            std::process::exit(1);
+        }
+        let mut s = String::from(
+            "{\n  \"bench\": \"dtr_perf\",\n  \"unit\": \"ns\",\n  \"quick\": ",
+        );
+        s.push_str(if quick { "true" } else { "false" });
+        s.push_str(",\n  \"results\": [\n");
+        s.push_str(&entries.join(",\n"));
+        s.push_str("\n  ]\n}\n");
         std::fs::write(&path, s).expect("writing bench JSON");
         println!("\nwrote {path}");
     }

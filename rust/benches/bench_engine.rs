@@ -11,7 +11,13 @@ use dtr::exec::{Engine, Optimizer};
 use dtr::runtime::{ModelConfig, RnnConfig};
 
 fn main() {
-    println!("# bench_engine — real training step under DTR budgets (interp backend)\n");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    println!(
+        "# bench_engine — real training step under DTR budgets (interp backend){}\n",
+        if quick { " (quick)" } else { "" }
+    );
+    let measured = if quick { 2usize } else { 5 };
 
     let model = ModelConfig::small();
     let mut engine = Engine::interp(
@@ -31,8 +37,8 @@ fn main() {
 
     // Sweep fractions of the non-pinned headroom (100% = never evicts under
     // pressure; lower = more rematerialization).
-    let pcts = [100u64, 90, 80, 70, 60];
-    let budgets = engine.budgets_from_peak(peak, &pcts);
+    let pcts: &[u64] = if quick { &[100, 80] } else { &[100, 90, 80, 70, 60] };
+    let budgets = engine.budgets_from_peak(peak, pcts);
     for (&pct, &budget) in pcts.iter().zip(&budgets) {
         engine.dtr_cfg = Config {
             budget,
@@ -40,13 +46,13 @@ fn main() {
             profile: true,
             ..Config::default()
         };
-        // Warmup + 5 measured steps.
+        // Warmup + measured steps.
         let _ = engine.train_step();
         let mut walls = Vec::new();
         let mut overhead = Vec::new();
         let mut remats = 0u64;
         let mut failed = false;
-        for _ in 0..5 {
+        for _ in 0..measured {
             let t0 = Instant::now();
             match engine.train_step() {
                 Ok(r) => {
@@ -76,13 +82,46 @@ fn main() {
         );
     }
 
+    // --- intra-op threading: the TrainConfig::threads knob at full
+    // headroom. Decision traces and results are bit-identical at any
+    // thread count; only the wall clock moves. ---
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    if cores > 1 {
+        println!("\n# intra-op threading — step wall time vs TrainConfig::threads\n");
+        let mut t1_median = 0u64;
+        for threads in [1usize, cores] {
+            let mut e = Engine::interp_threaded(model, threads, Config::default(), Optimizer::Sgd)
+                .expect("threaded engine");
+            let _ = e.train_step(); // warmup
+            let mut walls = Vec::new();
+            for _ in 0..measured {
+                let t0 = Instant::now();
+                e.train_step().expect("unbudgeted step");
+                walls.push(t0.elapsed().as_nanos() as u64);
+            }
+            walls.sort();
+            let median = walls[walls.len() / 2];
+            if threads == 1 {
+                t1_median = median;
+                println!("threads {threads:>2}  step {:>8.2} ms", median as f64 / 1e6);
+            } else {
+                println!(
+                    "threads {threads:>2}  step {:>8.2} ms  ({:.2}x over threads=1)",
+                    median as f64 / 1e6,
+                    t1_median as f64 / median.max(1) as f64
+                );
+            }
+        }
+    }
+
     // --- dynamic-LSTM variant: per-batch random sequence lengths through
     // the `dtr::api` session path (the workload class static planners
     // cannot schedule) ---
     println!("\n# dynamic LSTM — data-dependent unroll lengths under DTR budgets\n");
     let rnn = RnnConfig::small();
     let mk = |budget: u64| -> LstmTrainer {
-        let cfg = Config { budget, heuristic: Heuristic::dtr_eq(), profile: true, ..Config::default() };
+        let cfg =
+            Config { budget, heuristic: Heuristic::dtr_eq(), profile: true, ..Config::default() };
         let mut t = LstmTrainer::interp(rnn, cfg).expect("lstm trainer");
         t.min_len = 8;
         t.max_len = 24;
@@ -94,7 +133,8 @@ fn main() {
         floor as f64 / (1 << 20) as f64,
         peak as f64 / (1 << 20) as f64,
     );
-    for pct in [100u64, 80, 60, 40] {
+    let lstm_pcts: &[u64] = if quick { &[100, 60] } else { &[100, 80, 60, 40] };
+    for &pct in lstm_pcts {
         let mut t = mk(headroom_budget(peak, floor, pct));
         let _ = t.train_step(); // warmup
         let mut walls = Vec::new();
@@ -102,7 +142,7 @@ fn main() {
         let mut remats = 0u64;
         let mut units = 0u64;
         let mut failed = false;
-        for _ in 0..5 {
+        for _ in 0..measured {
             match t.train_step() {
                 Ok(r) => {
                     walls.push(r.wall_ns);

@@ -55,16 +55,22 @@ fn main() {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    let quick = args.iter().any(|a| a == "--quick");
+    let allow_empty = args.iter().any(|a| a == "--allow-empty");
     let steps = args
         .iter()
         .position(|a| a == "--steps")
         .and_then(|i| args.get(i + 1))
         .and_then(|s| s.parse().ok())
-        .unwrap_or(6usize);
+        .unwrap_or(if quick { 3usize } else { 6 });
 
-    println!("# bench_serve — multi-tenant throughput vs tenant count\n");
+    println!(
+        "# bench_serve — multi-tenant throughput vs tenant count{}\n",
+        if quick { " (quick)" } else { "" }
+    );
+    let tenant_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
     let mut rows = Vec::new();
-    for &n in &[1usize, 2, 4, 8] {
+    for &n in tenant_counts {
         // The budget depends only on the fleet, not the policy: measure
         // the tenant envelopes once per point.
         let budget = fleet_budget(&TenantSpec::fleet(n), 70).expect("envelope measurement");
@@ -87,9 +93,18 @@ fn main() {
     }
 
     if let Some(path) = json_out {
+        if rows.is_empty() && !allow_empty {
+            eprintln!(
+                "bench_serve: refusing to write an empty results array to {path} \
+                 (pass --allow-empty to override)"
+            );
+            std::process::exit(1);
+        }
         let mut s = String::from(
-            "{\n  \"bench\": \"serve_scaling\",\n  \"unit\": \"aggregate_steps_per_sec\",\n  \"results\": [\n",
+            "{\n  \"bench\": \"serve_scaling\",\n  \"unit\": \"aggregate_steps_per_sec\",\n  \"quick\": ",
         );
+        s.push_str(if quick { "true" } else { "false" });
+        s.push_str(",\n  \"results\": [\n");
         for (i, r) in rows.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"tenants\": {}, \"arbiter\": \"{}\", \"steps_per_sec\": {:.3}, \

@@ -41,6 +41,11 @@ pub struct TrainConfig {
     pub tenants: usize,
     /// ...and how the arbiter divides it (static-split vs global-reclaim).
     pub arbiter: ArbiterPolicy,
+    /// Intra-op worker threads for the interpreter's kernel layer. Any
+    /// value is bit-identical to 1 (threads partition disjoint output
+    /// rows; see `runtime/kernels`), so DTR decision traces are
+    /// unaffected; 1 (the default) never spawns.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -68,6 +73,7 @@ impl Default for TrainConfig {
             curve_out: None,
             tenants: 1,
             arbiter: ArbiterPolicy::GlobalReclaim,
+            threads: 1,
         }
     }
 }
@@ -89,7 +95,9 @@ impl TrainConfig {
     /// Construct the executor this config selects.
     pub fn build_executor(&self) -> Result<Box<dyn Executor>> {
         match self.backend {
-            BackendKind::Interp => Ok(Box::new(InterpExecutor::new(self.model)?)),
+            BackendKind::Interp => {
+                Ok(Box::new(InterpExecutor::new(self.model)?.with_threads(self.threads)))
+            }
             BackendKind::Pjrt => build_pjrt(&self.artifacts_dir),
         }
     }
@@ -156,6 +164,7 @@ impl TrainConfig {
                     }
                 }
                 "tenants" => cfg.tenants = val.as_usize().context("tenants")?,
+                "threads" => cfg.threads = val.as_usize().context("threads")?,
                 "arbiter" => {
                     let name = val.as_str().context("arbiter")?;
                     cfg.arbiter = ArbiterPolicy::parse(name)
@@ -214,6 +223,7 @@ impl TrainConfig {
             };
         }
         self.tenants = args.usize_or("tenants", self.tenants);
+        self.threads = args.usize_or("threads", self.threads);
         if let Some(a) = args.get("arbiter") {
             self.arbiter =
                 ArbiterPolicy::parse(a).with_context(|| format!("arbiter policy {a}"))?;
@@ -359,6 +369,25 @@ mod tests {
         assert_eq!(c.arbiter, ArbiterPolicy::GlobalReclaim);
         let bad = write_tmp(r#"{"arbiter": "roundrobin"}"#);
         assert!(TrainConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn threads_knob_parses_and_overrides() {
+        assert_eq!(TrainConfig::default().threads, 1);
+        let p = write_tmp(r#"{"threads": 4}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.threads, 4);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--threads".to_string(),
+                "2".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.threads, 2);
     }
 
     #[test]

@@ -130,6 +130,17 @@ impl LstmTrainer {
         LstmTrainer::new(Box::new(InterpExecutor::rnn(rnn)?), rnn, dtr_cfg, LSTM_SEED)
     }
 
+    /// Like [`LstmTrainer::interp`] with `threads` intra-op kernel workers
+    /// (bit-identical at any thread count).
+    pub fn interp_threaded(
+        rnn: RnnConfig,
+        threads: usize,
+        dtr_cfg: dtr::Config,
+    ) -> Result<LstmTrainer> {
+        let exec = InterpExecutor::rnn(rnn)?.with_threads(threads);
+        LstmTrainer::new(Box::new(exec), rnn, dtr_cfg, LSTM_SEED)
+    }
+
     /// Accounting-only trainer (zero buffers): DTR stats must match the
     /// interpreter's exactly.
     pub fn null(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<LstmTrainer> {
@@ -413,6 +424,17 @@ impl TreeLstmTrainer {
 
     pub fn interp(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<TreeLstmTrainer> {
         TreeLstmTrainer::new(Box::new(InterpExecutor::rnn(rnn)?), rnn, dtr_cfg, TREE_SEED)
+    }
+
+    /// Like [`TreeLstmTrainer::interp`] with `threads` intra-op kernel
+    /// workers (bit-identical at any thread count).
+    pub fn interp_threaded(
+        rnn: RnnConfig,
+        threads: usize,
+        dtr_cfg: dtr::Config,
+    ) -> Result<TreeLstmTrainer> {
+        let exec = InterpExecutor::rnn(rnn)?.with_threads(threads);
+        TreeLstmTrainer::new(Box::new(exec), rnn, dtr_cfg, TREE_SEED)
     }
 
     pub fn null(rnn: RnnConfig, dtr_cfg: dtr::Config) -> Result<TreeLstmTrainer> {

@@ -102,6 +102,20 @@ impl Engine {
         Engine::new(Box::new(InterpExecutor::new(model)?), dtr_cfg, optimizer)
     }
 
+    /// Hermetic engine with `threads` intra-op workers in the interpreter's
+    /// kernel layer. Bit-identical to [`Engine::interp`] at any thread
+    /// count (threads partition disjoint output rows; see
+    /// `runtime/kernels`), so losses and DTR decision traces match exactly.
+    pub fn interp_threaded(
+        model: ModelConfig,
+        threads: usize,
+        dtr_cfg: dtr::Config,
+        optimizer: Optimizer,
+    ) -> Result<Engine> {
+        let exec = InterpExecutor::new(model)?.with_threads(threads);
+        Engine::new(Box::new(exec), dtr_cfg, optimizer)
+    }
+
     /// Engine over AOT-compiled HLO artifacts through PJRT.
     #[cfg(feature = "pjrt")]
     pub fn pjrt(

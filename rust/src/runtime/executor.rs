@@ -228,6 +228,12 @@ pub fn analytic_cost(name: &str, op: &OpSig, cfg: &ModelConfig) -> u64 {
         (2 * b * s * d * v + 3 * b * s * v) as u64
     } else if name == "loss_bwd" {
         (4 * b * s * d * v + 3 * b * s * v) as u64
+    } else if name == "fused_ln_fwd" {
+        // Two reduction passes + one normalize pass per row.
+        (8 * b * s * d) as u64
+    } else if name == "fused_attn_fwd" {
+        // qk^T and pv contractions over the causal half, online softmax.
+        (4 * b * s * s * d) as u64
     } else if name.starts_with("adam_") {
         12 * op.inputs[0].elements() as u64
     } else if name.starts_with("sgd_") {

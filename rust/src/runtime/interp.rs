@@ -14,6 +14,8 @@
 use anyhow::{bail, ensure, Result};
 
 use super::executor::{Executor, HostTensor};
+use super::kernels::fused;
+use super::kernels::gemm::{matmul, matmul_at, matmul_bt};
 use super::manifest::{Manifest, ModelConfig, RnnConfig};
 
 const LN_EPS: f32 = 1e-5;
@@ -28,11 +30,15 @@ const ADAM_EPS: f32 = 1e-8;
 pub struct InterpExecutor {
     manifest: Manifest,
     cfg: ModelConfig,
+    /// Intra-op worker threads for the kernel layer. 1 (the default) runs
+    /// everything inline; any value is bit-identical (threads partition
+    /// disjoint output rows, see `runtime/kernels`).
+    threads: usize,
 }
 
 impl InterpExecutor {
     pub fn new(cfg: ModelConfig) -> Result<InterpExecutor> {
-        Ok(InterpExecutor { manifest: Manifest::synthesize(cfg)?, cfg })
+        Ok(InterpExecutor { manifest: Manifest::synthesize(cfg)?, cfg, threads: 1 })
     }
 
     /// Interpreter over the dynamic-model (LSTM/TreeLSTM) op family. The
@@ -42,7 +48,17 @@ impl InterpExecutor {
     pub fn rnn(cfg: RnnConfig) -> Result<InterpExecutor> {
         let manifest = Manifest::synthesize_rnn(cfg)?;
         let mc = manifest.config;
-        Ok(InterpExecutor { manifest, cfg: mc })
+        Ok(InterpExecutor { manifest, cfg: mc, threads: 1 })
+    }
+
+    /// Set the intra-op thread count (0 is treated as 1).
+    pub fn with_threads(mut self, threads: usize) -> InterpExecutor {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -72,21 +88,24 @@ impl Executor for InterpExecutor {
             );
         }
         let cfg = self.cfg;
+        let t = self.threads;
         match op {
             "embed_fwd" => embed_fwd(&cfg, inputs[0], inputs[1]),
             "embed_bwd" => embed_bwd(&cfg, inputs[0], inputs[1]),
-            "block_fwd" => block_fwd(&cfg, inputs),
-            "block_bwd" => block_bwd(&cfg, inputs),
-            "loss_fwd" => loss_fwd(&cfg, inputs[0], inputs[1], inputs[2]),
-            "loss_bwd" => loss_bwd(&cfg, inputs[0], inputs[1], inputs[2]),
-            "lstm_cell_fwd" => lstm_cell_fwd(inputs),
-            "lstm_cell_bwd" => lstm_cell_bwd(inputs),
-            "tree_leaf_fwd" => tree_leaf_fwd(inputs),
-            "tree_leaf_bwd" => tree_leaf_bwd(inputs),
-            "tree_comb_fwd" => tree_comb_fwd(inputs),
-            "tree_comb_bwd" => tree_comb_bwd(inputs),
-            "rnn_loss_fwd" => rnn_loss_fwd(inputs),
-            "rnn_loss_bwd" => rnn_loss_bwd(inputs),
+            "block_fwd" => block_fwd(&cfg, inputs, t),
+            "block_bwd" => block_bwd(&cfg, inputs, t),
+            "loss_fwd" => loss_fwd(&cfg, inputs[0], inputs[1], inputs[2], t),
+            "loss_bwd" => loss_bwd(&cfg, inputs[0], inputs[1], inputs[2], t),
+            "fused_ln_fwd" => fused_ln_fwd(&cfg, inputs, t),
+            "fused_attn_fwd" => fused_attn_fwd(&cfg, inputs, t),
+            "lstm_cell_fwd" => lstm_cell_fwd(inputs, t),
+            "lstm_cell_bwd" => lstm_cell_bwd(inputs, t),
+            "tree_leaf_fwd" => tree_leaf_fwd(inputs, t),
+            "tree_leaf_bwd" => tree_leaf_bwd(inputs, t),
+            "tree_comb_fwd" => tree_comb_fwd(inputs, t),
+            "tree_comb_bwd" => tree_comb_bwd(inputs, t),
+            "rnn_loss_fwd" => rnn_loss_fwd(inputs, t),
+            "rnn_loss_bwd" => rnn_loss_bwd(inputs, t),
             name if name.starts_with("acc_") => acc_step(inputs),
             name if name.starts_with("adam_") => adam_step(inputs),
             name if name.starts_with("sgd_") => sgd_step(inputs),
@@ -96,55 +115,12 @@ impl Executor for InterpExecutor {
 }
 
 // ------------------------------------------------------------ linear algebra
-
-/// out[m,n] = a[m,k] @ b[k,n]
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for p in 0..k {
-            let av = a[i * k + p];
-            let brow = &b[p * n..p * n + n];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// out[m,n] = a[k,m]^T @ b[k,n]
-fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for p in 0..k {
-        let brow = &b[p * n..p * n + n];
-        for i in 0..m {
-            let av = a[p * m + i];
-            let orow = &mut out[i * n..i * n + n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// out[m,n] = a[m,k] @ b[n,k]^T
-fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..i * k + k];
-        for j in 0..n {
-            let brow = &b[j * k..j * k + k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            out[i * n + j] = acc;
-        }
-    }
-    out
-}
+//
+// The matmuls come from `super::kernels::gemm` — unrolled rank-1 row
+// kernels, optionally row-threaded, but bit-identical to the scalar
+// reference in `super::kernels::reference` (the pre-PR loop nests) at any
+// thread count, so replay determinism and the engine's
+// budgeted-equals-unbudgeted bitwise tests hold unchanged.
 
 // ---------------------------------------------------------------- layernorm
 
@@ -283,7 +259,7 @@ struct BlockInter {
     y: Vec<f32>,
 }
 
-fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor]) -> BlockInter {
+fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor], t: usize) -> BlockInter {
     let (b, s, d, f, nh) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.n_heads);
     let dh = cfg.d_head();
     let bs = b * s;
@@ -298,7 +274,7 @@ fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor]) -> BlockI
 
     // Attention sublayer (pre-norm).
     let (h1, xhat1, rstd1) = ln_fwd(x, &ln1[..d], &ln1[d..], bs, d);
-    let qkv = matmul(&h1, wqkv, bs, d, 3 * d); // [bs, 3d]: q | k | v columns
+    let qkv = matmul(&h1, wqkv, bs, d, 3 * d, t); // [bs, 3d]: q | k | v columns
     let inv_sqrt = 1.0 / (dh as f32).sqrt();
     let mut att = vec![0.0f32; b * nh * s * s];
     let mut ctx = vec![0.0f32; bs * d];
@@ -346,7 +322,7 @@ fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor]) -> BlockI
             }
         }
     }
-    let proj = matmul(&ctx, wo, bs, d, d);
+    let proj = matmul(&ctx, wo, bs, d, d, t);
     let mut x1 = vec![0.0f32; bs * d];
     for i in 0..bs * d {
         x1[i] = x[i] + proj[i];
@@ -354,9 +330,9 @@ fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor]) -> BlockI
 
     // MLP sublayer (pre-norm, tanh-GELU).
     let (h2, xhat2, rstd2) = ln_fwd(&x1, &ln2[..d], &ln2[d..], bs, d);
-    let ff1 = matmul(&h2, w1, bs, d, f);
+    let ff1 = matmul(&h2, w1, bs, d, f, t);
     let g: Vec<f32> = ff1.iter().map(|&v| gelu(v)).collect();
-    let ff2 = matmul(&g, w2, bs, f, d);
+    let ff2 = matmul(&g, w2, bs, f, d, t);
     let mut y = vec![0.0f32; bs * d];
     for i in 0..bs * d {
         y[i] = x1[i] + ff2[i];
@@ -365,12 +341,31 @@ fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor]) -> BlockI
     BlockInter { h1, xhat1, rstd1, qkv, att, ctx, xhat2, rstd2, h2, ff1, g, y }
 }
 
-fn block_fwd(cfg: &ModelConfig, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    let inter = block_forward(cfg, &inputs[0].data, &inputs[1..7]);
+fn block_fwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
+    let inter = block_forward(cfg, &inputs[0].data, &inputs[1..7], t);
     Ok(vec![HostTensor::new(vec![cfg.batch, cfg.seq, cfg.d_model], inter.y)])
 }
 
-fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+/// Fused layernorm (`kernels::fused::layernorm`) as a standalone manifest
+/// op: inputs `(x, gamma_beta)`, output `y` — no xhat/rstd materialized.
+fn fused_ln_fwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let gb = &inputs[1].data;
+    let y = fused::layernorm(&inputs[0].data, &gb[..d], &gb[d..], b * s, d, LN_EPS, t);
+    Ok(vec![HostTensor::new(vec![b, s, d], y)])
+}
+
+/// Fused causal attention (`kernels::fused::causal_attention`) as a
+/// standalone manifest op over the `[b, nh, s, dh]` per-head layout.
+fn fused_attn_fwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
+    let (b, s, nh) = (cfg.batch, cfg.seq, cfg.n_heads);
+    let dh = cfg.d_head();
+    let (q, k, v) = (&inputs[0].data, &inputs[1].data, &inputs[2].data);
+    let y = fused::causal_attention(q, k, v, b * nh, s, dh, t);
+    Ok(vec![HostTensor::new(vec![b, nh, s, dh], y)])
+}
+
+fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (b, s, d, f, nh) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.n_heads);
     let dh = cfg.d_head();
     let bs = b * s;
@@ -385,18 +380,18 @@ fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor]) -> Result<Vec<HostTensor
         &params[4].data,
         &params[5].data,
     );
-    let it = block_forward(cfg, x, params);
+    let it = block_forward(cfg, x, params, t);
 
     // y = x1 + gelu(h2 @ w1) @ w2
     let mut dx1 = dy.to_vec();
-    let dg = matmul_bt(dy, w2, bs, d, f);
-    let dw2 = matmul_at(&it.g, dy, bs, f, d);
+    let dg = matmul_bt(dy, w2, bs, d, f, t);
+    let dw2 = matmul_at(&it.g, dy, bs, f, d, t);
     let mut dff1 = dg;
     for i in 0..bs * f {
         dff1[i] *= gelu_grad(it.ff1[i]);
     }
-    let dh2 = matmul_bt(&dff1, w1, bs, f, d);
-    let dw1 = matmul_at(&it.h2, &dff1, bs, d, f);
+    let dh2 = matmul_bt(&dff1, w1, bs, f, d, t);
+    let dw1 = matmul_at(&it.h2, &dff1, bs, d, f, t);
     let (dx1_ln, dgamma2, dbeta2) = ln_bwd(&dh2, &it.xhat2, &it.rstd2, &ln2[..d], bs, d);
     for i in 0..bs * d {
         dx1[i] += dx1_ln[i];
@@ -404,8 +399,8 @@ fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor]) -> Result<Vec<HostTensor
 
     // x1 = x + ctx @ wo
     let mut dx = dx1.clone();
-    let dctx = matmul_bt(&dx1, wo, bs, d, d);
-    let dwo = matmul_at(&it.ctx, &dx1, bs, d, d);
+    let dctx = matmul_bt(&dx1, wo, bs, d, d, t);
+    let dwo = matmul_at(&it.ctx, &dx1, bs, d, d, t);
 
     // Attention backward, per (batch, head).
     let inv_sqrt = 1.0 / (dh as f32).sqrt();
@@ -468,8 +463,8 @@ fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor]) -> Result<Vec<HostTensor
     }
 
     // qkv = h1 @ wqkv
-    let dh1 = matmul_bt(&dqkv, wqkv, bs, 3 * d, d);
-    let dwqkv = matmul_at(&it.h1, &dqkv, bs, d, 3 * d);
+    let dh1 = matmul_bt(&dqkv, wqkv, bs, 3 * d, d, t);
+    let dwqkv = matmul_at(&it.h1, &dqkv, bs, d, 3 * d, t);
     let (dx_ln, dgamma1, dbeta1) = ln_bwd(&dh1, &it.xhat1, &it.rstd1, &ln1[..d], bs, d);
     for i in 0..bs * d {
         dx[i] += dx_ln[i];
@@ -498,10 +493,11 @@ fn loss_fwd(
     x: &HostTensor,
     w_out: &HostTensor,
     tgt: &HostTensor,
+    t: usize,
 ) -> Result<Vec<HostTensor>> {
     let (d, v) = (cfg.d_model, cfg.vocab);
     let n = cfg.batch * cfg.seq;
-    let logits = matmul(&x.data, &w_out.data, n, d, v);
+    let logits = matmul(&x.data, &w_out.data, n, d, v, t);
     let mut total = 0.0f32;
     for i in 0..n {
         let row = &logits[i * v..i * v + v];
@@ -526,10 +522,11 @@ fn loss_bwd(
     x: &HostTensor,
     w_out: &HostTensor,
     tgt: &HostTensor,
+    t: usize,
 ) -> Result<Vec<HostTensor>> {
     let (b, s, d, v) = (cfg.batch, cfg.seq, cfg.d_model, cfg.vocab);
     let n = b * s;
-    let mut dlogits = matmul(&x.data, &w_out.data, n, d, v);
+    let mut dlogits = matmul(&x.data, &w_out.data, n, d, v, t);
     let inv_n = 1.0 / n as f32;
     for i in 0..n {
         let row = &mut dlogits[i * v..i * v + v];
@@ -553,8 +550,8 @@ fn loss_bwd(
             *l *= inv_n;
         }
     }
-    let dx = matmul_bt(&dlogits, &w_out.data, n, v, d);
-    let dw_out = matmul_at(&x.data, &dlogits, n, d, v);
+    let dx = matmul_bt(&dlogits, &w_out.data, n, v, d, t);
+    let dw_out = matmul_at(&x.data, &dlogits, n, d, v, t);
     Ok(vec![
         HostTensor::new(vec![b, s, d], dx),
         HostTensor::new(vec![d, v], dw_out),
@@ -583,12 +580,13 @@ fn lstm_gates(
     wx: &HostTensor,
     wh: &HostTensor,
     b: &HostTensor,
+    t: usize,
 ) -> (Vec<f32>, usize, usize, usize) {
     let bsz = x.shape[0];
     let id = x.shape[1];
     let hd = h.shape[1];
-    let mut gates = matmul(&x.data, &wx.data, bsz, id, 4 * hd);
-    let gh = matmul(&h.data, &wh.data, bsz, hd, 4 * hd);
+    let mut gates = matmul(&x.data, &wx.data, bsz, id, 4 * hd, t);
+    let gh = matmul(&h.data, &wh.data, bsz, hd, 4 * hd, t);
     for r in 0..bsz {
         for k in 0..4 * hd {
             gates[r * 4 * hd + k] += gh[r * 4 * hd + k] + b.data[k];
@@ -599,9 +597,10 @@ fn lstm_gates(
 
 /// `(h2, c2)` from `(x, h, c, wx, wh, b)`:
 /// `c2 = sigma(f)*c + sigma(i)*tanh(g)`, `h2 = sigma(o)*tanh(c2)`.
-fn lstm_cell_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn lstm_cell_fwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let c = inputs[2];
-    let (gates, bsz, _id, hd) = lstm_gates(inputs[0], inputs[1], inputs[3], inputs[4], inputs[5]);
+    let (gates, bsz, _id, hd) =
+        lstm_gates(inputs[0], inputs[1], inputs[3], inputs[4], inputs[5], t);
     let mut h2 = vec![0.0f32; bsz * hd];
     let mut c2 = vec![0.0f32; bsz * hd];
     for r in 0..bsz {
@@ -619,10 +618,10 @@ fn lstm_cell_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// `(dx, dh, dc, dwx, dwh, db)` from `(x, h, c, wx, wh, b, dh2, dc2)`.
-fn lstm_cell_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn lstm_cell_bwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (x, h, c, wx, wh) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
     let (dh2, dc2_in) = (inputs[6], inputs[7]);
-    let (gates, bsz, id, hd) = lstm_gates(x, h, wx, wh, inputs[5]);
+    let (gates, bsz, id, hd) = lstm_gates(x, h, wx, wh, inputs[5], t);
     let mut dgates = vec![0.0f32; bsz * 4 * hd];
     let mut dc = vec![0.0f32; bsz * hd];
     for r in 0..bsz {
@@ -645,10 +644,10 @@ fn lstm_cell_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
             dgates[r * 4 * hd + 3 * hd + k] = d_o * go * (1.0 - go);
         }
     }
-    let dx = matmul_bt(&dgates, &wx.data, bsz, 4 * hd, id);
-    let dh = matmul_bt(&dgates, &wh.data, bsz, 4 * hd, hd);
-    let dwx = matmul_at(&x.data, &dgates, bsz, id, 4 * hd);
-    let dwh = matmul_at(&h.data, &dgates, bsz, hd, 4 * hd);
+    let dx = matmul_bt(&dgates, &wx.data, bsz, 4 * hd, id, t);
+    let dh = matmul_bt(&dgates, &wh.data, bsz, 4 * hd, hd, t);
+    let dwx = matmul_at(&x.data, &dgates, bsz, id, 4 * hd, t);
+    let dwh = matmul_at(&h.data, &dgates, bsz, hd, 4 * hd, t);
     let mut db = vec![0.0f32; 4 * hd];
     for r in 0..bsz {
         for k in 0..4 * hd {
@@ -666,11 +665,11 @@ fn lstm_cell_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// Leaf cell: `h = tanh(x @ wc)`.
-fn tree_leaf_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn tree_leaf_fwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (x, wc) = (inputs[0], inputs[1]);
     let (bsz, id) = (x.shape[0], x.shape[1]);
     let hd = wc.shape[1];
-    let mut hh = matmul(&x.data, &wc.data, bsz, id, hd);
+    let mut hh = matmul(&x.data, &wc.data, bsz, id, hd, t);
     for v in hh.iter_mut() {
         *v = v.tanh();
     }
@@ -678,26 +677,26 @@ fn tree_leaf_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// `(dx, dwc)` from `(x, wc, dh)`.
-fn tree_leaf_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn tree_leaf_bwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (x, wc, dh) = (inputs[0], inputs[1], inputs[2]);
     let (bsz, id) = (x.shape[0], x.shape[1]);
     let hd = wc.shape[1];
-    let mut dpre = matmul(&x.data, &wc.data, bsz, id, hd);
+    let mut dpre = matmul(&x.data, &wc.data, bsz, id, hd, t);
     for (p, &g) in dpre.iter_mut().zip(&dh.data) {
-        let t = p.tanh();
-        *p = g * (1.0 - t * t);
+        let th = p.tanh();
+        *p = g * (1.0 - th * th);
     }
-    let dx = matmul_bt(&dpre, &wc.data, bsz, hd, id);
-    let dwc = matmul_at(&x.data, &dpre, bsz, id, hd);
+    let dx = matmul_bt(&dpre, &wc.data, bsz, hd, id, t);
+    let dwc = matmul_at(&x.data, &dpre, bsz, id, hd, t);
     Ok(vec![HostTensor::new(vec![bsz, id], dx), HostTensor::new(vec![id, hd], dwc)])
 }
 
 /// Combine cell: `h = tanh(hl @ wl + hr @ wr)`.
-fn tree_comb_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn tree_comb_fwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (hl, hr, wl, wr) = (inputs[0], inputs[1], inputs[2], inputs[3]);
     let (bsz, hd) = (hl.shape[0], hl.shape[1]);
-    let mut hh = matmul(&hl.data, &wl.data, bsz, hd, hd);
-    let right = matmul(&hr.data, &wr.data, bsz, hd, hd);
+    let mut hh = matmul(&hl.data, &wl.data, bsz, hd, hd, t);
+    let right = matmul(&hr.data, &wr.data, bsz, hd, hd, t);
     for (v, r) in hh.iter_mut().zip(right) {
         *v = (*v + r).tanh();
     }
@@ -705,19 +704,19 @@ fn tree_comb_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// `(dhl, dhr, dwl, dwr)` from `(hl, hr, wl, wr, dh)`.
-fn tree_comb_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn tree_comb_bwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (hl, hr, wl, wr, dh) = (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
     let (bsz, hd) = (hl.shape[0], hl.shape[1]);
-    let mut dpre = matmul(&hl.data, &wl.data, bsz, hd, hd);
-    let right = matmul(&hr.data, &wr.data, bsz, hd, hd);
+    let mut dpre = matmul(&hl.data, &wl.data, bsz, hd, hd, t);
+    let right = matmul(&hr.data, &wr.data, bsz, hd, hd, t);
     for ((p, r), &g) in dpre.iter_mut().zip(right).zip(&dh.data) {
-        let t = (*p + r).tanh();
-        *p = g * (1.0 - t * t);
+        let th = (*p + r).tanh();
+        *p = g * (1.0 - th * th);
     }
-    let dhl = matmul_bt(&dpre, &wl.data, bsz, hd, hd);
-    let dhr = matmul_bt(&dpre, &wr.data, bsz, hd, hd);
-    let dwl = matmul_at(&hl.data, &dpre, bsz, hd, hd);
-    let dwr = matmul_at(&hr.data, &dpre, bsz, hd, hd);
+    let dhl = matmul_bt(&dpre, &wl.data, bsz, hd, hd, t);
+    let dhr = matmul_bt(&dpre, &wr.data, bsz, hd, hd, t);
+    let dwl = matmul_at(&hl.data, &dpre, bsz, hd, hd, t);
+    let dwr = matmul_at(&hr.data, &dpre, bsz, hd, hd, t);
     Ok(vec![
         HostTensor::new(vec![bsz, hd], dhl),
         HostTensor::new(vec![bsz, hd], dhr),
@@ -727,11 +726,11 @@ fn tree_comb_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// Mean cross-entropy of `h @ w_out` against integer targets.
-fn rnn_loss_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn rnn_loss_fwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (h, w, tgt) = (inputs[0], inputs[1], inputs[2]);
     let (n, d) = (h.shape[0], h.shape[1]);
     let c = w.shape[1];
-    let logits = matmul(&h.data, &w.data, n, d, c);
+    let logits = matmul(&h.data, &w.data, n, d, c, t);
     let mut total = 0.0f32;
     for r in 0..n {
         let row = &logits[r * c..r * c + c];
@@ -752,11 +751,11 @@ fn rnn_loss_fwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// `(dh, dw_out)` of the mean cross-entropy.
-fn rnn_loss_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn rnn_loss_bwd(inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let (h, w, tgt) = (inputs[0], inputs[1], inputs[2]);
     let (n, d) = (h.shape[0], h.shape[1]);
     let c = w.shape[1];
-    let mut dlogits = matmul(&h.data, &w.data, n, d, c);
+    let mut dlogits = matmul(&h.data, &w.data, n, d, c, t);
     let inv_n = 1.0 / n as f32;
     for r in 0..n {
         let row = &mut dlogits[r * c..r * c + c];
@@ -780,8 +779,8 @@ fn rnn_loss_bwd(inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
             *l *= inv_n;
         }
     }
-    let dh = matmul_bt(&dlogits, &w.data, n, c, d);
-    let dw = matmul_at(&h.data, &dlogits, n, d, c);
+    let dh = matmul_bt(&dlogits, &w.data, n, c, d, t);
+    let dw = matmul_at(&h.data, &dlogits, n, d, c, t);
     Ok(vec![HostTensor::new(vec![n, d], dh), HostTensor::new(vec![d, c], dw)])
 }
 

@@ -1,0 +1,67 @@
+//! Hand-vectorized AVX2 rank-1 block behind the `simd` feature.
+//!
+//! The vector path rounds exactly like the scalar one: each update is a
+//! separate `vmulps` + `vaddps` pair (never contracted to an FMA),
+//! applied lanewise in the same ascending-`p` order, so every output
+//! element's f32 accumulation chain is bit-for-bit the scalar reference
+//! chain. AVX2 is detected at runtime — [`usable`] gates dispatch in
+//! `gemm::rank1_block` — so `--features simd` binaries still run (on the
+//! portable block) on pre-AVX2 x86-64.
+
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+};
+
+use super::gemm::KU;
+
+/// True when the running CPU can execute [`rank1_block_avx2`].
+pub(crate) fn usable() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+/// `orow[j] += sum_u av[u] * b[u][j]` with one rounded mul+add per `u` in
+/// ascending order — the scalar chain, eight f32 lanes per instruction.
+///
+/// # Safety
+///
+/// The caller must ensure AVX2 is available (see [`usable`]) and that
+/// every `b[u]` holds at least `orow.len()` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn rank1_block_avx2(orow: &mut [f32], av: &[f32; KU], b: &[&[f32]; KU]) {
+    let n = orow.len();
+    debug_assert!(b.iter().all(|row| row.len() >= n));
+    let va = [
+        _mm256_set1_ps(av[0]),
+        _mm256_set1_ps(av[1]),
+        _mm256_set1_ps(av[2]),
+        _mm256_set1_ps(av[3]),
+        _mm256_set1_ps(av[4]),
+        _mm256_set1_ps(av[5]),
+        _mm256_set1_ps(av[6]),
+        _mm256_set1_ps(av[7]),
+    ];
+    let op = orow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let mut s = _mm256_loadu_ps(op.add(j));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[0], _mm256_loadu_ps(b[0].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[1], _mm256_loadu_ps(b[1].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[2], _mm256_loadu_ps(b[2].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[3], _mm256_loadu_ps(b[3].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[4], _mm256_loadu_ps(b[4].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[5], _mm256_loadu_ps(b[5].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[6], _mm256_loadu_ps(b[6].as_ptr().add(j))));
+        s = _mm256_add_ps(s, _mm256_mul_ps(va[7], _mm256_loadu_ps(b[7].as_ptr().add(j))));
+        _mm256_storeu_ps(op.add(j), s);
+        j += 8;
+    }
+    // `n % 8` tail: scalar, same per-element order.
+    while j < n {
+        let mut s = *op.add(j);
+        for u in 0..KU {
+            s += av[u] * b[u][j];
+        }
+        *op.add(j) = s;
+        j += 1;
+    }
+}

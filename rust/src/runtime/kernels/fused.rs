@@ -1,0 +1,160 @@
+//! Fused ops ported from the in-repo Pallas tiling specs.
+//!
+//! * [`layernorm`] / [`layernorm_bwd`] port
+//!   `python/compile/kernels/layernorm.py`: one pass per row with
+//!   mean/var/rstd recomputed in-kernel (nothing materialized between
+//!   passes), backward via
+//!   `dx = rstd * (dy*g - mean(dy*g) - xhat * mean(dy*g * xhat))`.
+//! * [`causal_attention`] ports `python/compile/kernels/attention.py`:
+//!   flash attention's online softmax with a running `(m, l, acc)` triple
+//!   per query row — here the `block_q = block_k = 1` degenerate of the
+//!   spec's blocked grid, which keeps the recurrence
+//!   (`alpha = exp(m - m_new)`, `l = l*alpha + p`, `acc = acc*alpha + p*v`)
+//!   but visits one key per step. Causal mask `q_pos >= k_pos`, scale
+//!   `1/sqrt(dh)`, masked lanes start from the spec's `NEG_INF`.
+//!
+//! These reassociate the softmax/variance reductions relative to the
+//! composite two-pass forms in [`super::reference`], so equivalence is
+//! tolerance-based (see `rust/tests/prop_kernels.rs`), unlike the GEMMs
+//! which are bitwise.
+
+use super::par_rows;
+
+/// The Pallas spec's mask value for not-yet-seen lanes (attention.py).
+pub const NEG_INF: f32 = -1.0e30;
+
+/// Fused layernorm forward: `y = (x - mean) * rstd * gamma + beta`, one
+/// pass per row, nothing materialized but `y`.
+pub fn layernorm(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+    threads: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; rows * d];
+    par_rows(&mut y, rows, d, threads, rows * d * 8, |span, chunk| {
+        for r in span.clone() {
+            let row = &x[r * d..r * d + d];
+            let mut mu = 0.0f32;
+            for &v in row {
+                mu += v;
+            }
+            mu /= d as f32;
+            let mut var = 0.0f32;
+            for &v in row {
+                let c = v - mu;
+                var += c * c;
+            }
+            var /= d as f32;
+            let rs = 1.0 / (var + eps).sqrt();
+            let orow = &mut chunk[(r - span.start) * d..][..d];
+            for c in 0..d {
+                orow[c] = (row[c] - mu) * rs * gamma[c] + beta[c];
+            }
+        }
+    });
+    y
+}
+
+/// Fused layernorm backward (`_ln_bwd_kernel`): recomputes mean/var/xhat
+/// from `x` per row, returns `(dx, dgamma, dbeta)`.
+pub fn layernorm_bwd(
+    x: &[f32],
+    gamma: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dgamma = vec![0.0f32; d];
+    let mut dbeta = vec![0.0f32; d];
+    for r in 0..rows {
+        let row = &x[r * d..r * d + d];
+        let dyr = &dy[r * d..r * d + d];
+        let mut mu = 0.0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for c in 0..d {
+            let xh = (row[c] - mu) * rs;
+            let dyg = dyr[c] * gamma[c];
+            m1 += dyg;
+            m2 += dyg * xh;
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for c in 0..d {
+            let xh = (row[c] - mu) * rs;
+            dx[r * d + c] = rs * (dyr[c] * gamma[c] - m1 - xh * m2);
+            dgamma[c] += dyr[c] * xh;
+            dbeta[c] += dyr[c];
+        }
+    }
+    (dx, dgamma, dbeta)
+}
+
+/// Online-softmax causal attention over the `[bh, s, dh]` per-head
+/// layout: `out[b, i] = softmax(q_i . k_{j<=i} / sqrt(dh)) @ v`, computed
+/// with the flash recurrence and never materializing the `[s, s]`
+/// probability matrix. Threads partition the independent `bh` slabs.
+pub fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bh: usize,
+    s: usize,
+    dh: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; bh * s * dh];
+    let flops = bh * s * s * dh;
+    par_rows(&mut out, bh, s * dh, threads, flops, |span, chunk| {
+        let mut acc = vec![0.0f32; dh];
+        for b in span.clone() {
+            let base = b * s * dh;
+            for i in 0..s {
+                let qrow = &q[base + i * dh..][..dh];
+                let mut m = NEG_INF;
+                let mut l = 0.0f32;
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for j in 0..=i {
+                    let krow = &k[base + j * dh..][..dh];
+                    let mut sc = 0.0f32;
+                    for c in 0..dh {
+                        sc += qrow[c] * krow[c];
+                    }
+                    sc *= inv_sqrt;
+                    let m_new = m.max(sc);
+                    let p = (sc - m_new).exp();
+                    let alpha = (m - m_new).exp();
+                    l = l * alpha + p;
+                    let vrow = &v[base + j * dh..][..dh];
+                    for c in 0..dh {
+                        acc[c] = acc[c] * alpha + p * vrow[c];
+                    }
+                    m = m_new;
+                }
+                let orow = &mut chunk[(b - span.start) * s * dh + i * dh..][..dh];
+                for c in 0..dh {
+                    orow[c] = acc[c] / l;
+                }
+            }
+        }
+    });
+    out
+}

@@ -1,0 +1,183 @@
+//! Rank-1-update row-kernel GEMMs, bit-identical to [`super::reference`].
+//!
+//! Layout matches the scalar reference: `matmul` is `a[m,k] @ b[k,n]`,
+//! `matmul_at` is `a[k,m]^T @ b[k,n]`, `matmul_bt` is `a[m,k] @ b[n,k]^T`.
+//! The transposed variants copy the transposed operand into the plain
+//! `[m,k] @ [k,n]` layout first (an O(m·k) / O(n·k) copy against an
+//! O(m·k·n) contraction) and then run the one row kernel; the products
+//! and their summation order are exactly the reference's, so all three
+//! are bitwise equal to their scalar counterparts — see the exactness
+//! contract in the module docs of [`super`].
+//!
+//! The hot loop builds one output row at a time from [`KU`] unrolled
+//! rank-1 updates per pass (`orow += a[i,p] * b[p,:]` for `KU`
+//! consecutive `p`), so the inner loop is one long contiguous
+//! multiply-add over the row — the shape every vectorizer handles
+//! without SLP or accumulator-array register promotion, which is why it
+//! beats both the naive nest and an `MR x NR` register tile on compilers
+//! that scalarize small accumulator arrays. The `KU` partial products
+//! per element are applied in ascending-`p` order with one rounded
+//! mul+add each, so every element keeps the single accumulator chain of
+//! the scalar reference (there is deliberately no `k`-blocking: splitting
+//! `k` would split the chain and change rounding). The `simd` feature
+//! swaps the portable block for the hand-vectorized AVX2 one in
+//! [`super::avx`], which rounds identically lane by lane.
+
+use super::par_rows;
+
+/// Rank-1 updates applied per row pass (the `p`-loop unroll depth).
+/// Eight keeps the stream count inside every compiler's runtime-alias
+/// check budget; deeper unrolls measured slower (the 16-stream variant
+/// defeats vectorization entirely on GCC).
+pub(crate) const KU: usize = 8;
+
+/// `dst[j, i] = src[i, j]` for `src: [rows, cols]`.
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut dst = vec![0.0f32; src.len()];
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = src[i * cols + j];
+        }
+    }
+    dst
+}
+
+/// One unrolled pass: `orow[j] += sum_u av[u] * b[u][j]` with one rounded
+/// mul+add per `u` in ascending order — the scalar reference chain.
+#[inline]
+fn rank1_block(orow: &mut [f32], av: &[f32; KU], b: &[&[f32]; KU]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::avx::usable() {
+        // SAFETY: AVX2 presence is runtime-checked by `usable`, and
+        // `gemm_rows` builds every `b[u]` with exactly `orow.len()`
+        // elements.
+        unsafe { super::avx::rank1_block_avx2(orow, av, b) };
+        return;
+    }
+    let [b0, b1, b2, b3, b4, b5, b6, b7] = *b;
+    let n = orow.len();
+    let (b0, b1, b2, b3) = (&b0[..n], &b1[..n], &b2[..n], &b3[..n]);
+    let (b4, b5, b6, b7) = (&b4[..n], &b5[..n], &b6[..n], &b7[..n]);
+    for j in 0..n {
+        let mut s = orow[j];
+        s += av[0] * b0[j];
+        s += av[1] * b1[j];
+        s += av[2] * b2[j];
+        s += av[3] * b3[j];
+        s += av[4] * b4[j];
+        s += av[5] * b5[j];
+        s += av[6] * b6[j];
+        s += av[7] * b7[j];
+        orow[j] = s;
+    }
+}
+
+/// Row kernel: `chunk[r - rows.start, :] = a[r, :] @ b` for `r` in `rows`,
+/// where `a: [m, k]`, `b: [k, n]` and `chunk` holds exactly `rows`. Every
+/// output element is one f32 accumulator over `p` ascending from `0.0` —
+/// the reference chain.
+fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    chunk: &mut [f32],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    for i in rows.clone() {
+        let orow = &mut chunk[(i - rows.start) * n..][..n];
+        orow.fill(0.0);
+        let arow = &a[i * k..][..k];
+        let mut p = 0;
+        while p + KU <= k {
+            let av: [f32; KU] = std::array::from_fn(|u| arow[p + u]);
+            let brows: [&[f32]; KU] = std::array::from_fn(|u| &b[(p + u) * n..][..n]);
+            rank1_block(orow, &av, &brows);
+            p += KU;
+        }
+        // `k % KU` tail: plain rank-1 updates continue the same chains.
+        while p < k {
+            let av = arow[p];
+            let brow = &b[p * n..][..n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+            p += 1;
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ b[k,n]
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, m, n, threads, m * k * n, |rows, chunk| {
+        gemm_rows(a, b, chunk, rows, k, n)
+    });
+    out
+}
+
+/// out[m,n] = a[k,m]^T @ b[k,n]
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, threads: usize) -> Vec<f32> {
+    let at = transpose(a, k, m); // [m, k]
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, m, n, threads, m * k * n, |rows, chunk| {
+        gemm_rows(&at, b, chunk, rows, k, n)
+    });
+    out
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]^T
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, threads: usize) -> Vec<f32> {
+    let bt = transpose(b, n, k); // [k, n]
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, m, n, threads, m * k * n, |rows, chunk| {
+        gemm_rows(a, &bt, chunk, rows, k, n)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn tiled_matmul_is_bitwise_reference() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (8, 16, 32), (17, 33, 19)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            assert_eq!(matmul(&a, &b, m, k, n, 1), reference::matmul(&a, &b, m, k, n));
+        }
+    }
+
+    #[test]
+    fn transposed_variants_are_bitwise_reference() {
+        let mut rng = Rng::new(43);
+        let (m, k, n) = (9, 21, 13);
+        let a_t = randv(&mut rng, k * m);
+        let b = randv(&mut rng, k * n);
+        assert_eq!(matmul_at(&a_t, &b, k, m, n, 1), reference::matmul_at(&a_t, &b, k, m, n));
+        let a = randv(&mut rng, m * k);
+        let b_t = randv(&mut rng, n * k);
+        assert_eq!(matmul_bt(&a, &b_t, m, k, n, 1), reference::matmul_bt(&a, &b_t, m, k, n));
+    }
+
+    #[test]
+    fn threading_is_bitwise_identical() {
+        let mut rng = Rng::new(44);
+        // Big enough to clear PAR_MIN_FLOPS so threads really spawn.
+        let (m, k, n) = (65, 64, 64);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let one = matmul(&a, &b, m, k, n, 1);
+        for threads in [2, 3, 8, 200] {
+            assert_eq!(matmul(&a, &b, m, k, n, threads), one, "threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! The interpreter's kernel layer: unrolled rank-1 row-kernel GEMMs
+//! with optional intra-op row threading, the retained scalar reference
+//! oracle, and fused ops ported from the in-repo Pallas tiling specs.
+//!
+//! # Kernel ↔ Pallas-spec map
+//!
+//! | kernel                        | spec                                  |
+//! |-------------------------------|---------------------------------------|
+//! | [`gemm::matmul`] (+`_at`/`_bt`) | the `jnp.dot` contractions in `python/compile/model.py`, blocked like the MXU-aligned accumulator rows `python/compile/kernels/*.py` assume (here: one output row built from `KU = 8` unrolled rank-1 updates, `k` kept whole) |
+//! | [`fused::layernorm`] / [`fused::layernorm_bwd`] | `python/compile/kernels/layernorm.py` (`_ln_kernel` / `_ln_bwd_kernel`): one pass per row, mean/var/rstd recomputed in-kernel, `dx = rstd * (dy*g - m1 - xhat*m2)` |
+//! | [`fused::causal_attention`]   | `python/compile/kernels/attention.py` (`_attn_kernel`): online-softmax flash attention with running `(m, l, acc)` per query row, causal mask `q_pos >= k_pos`, scale `1/sqrt(dh)` — here in the `block_q = block_k = 1` degenerate form |
+//! | [`reference`]                 | `python/compile/kernels/ref.py` — the pre-tiling scalar loop nests, kept verbatim as the equivalence oracle |
+//!
+//! # Exactness contract
+//!
+//! The row-kernel GEMMs are **bitwise identical** to the scalar reference
+//! at any thread count: every output element keeps a single f32
+//! accumulator chain over `p` ascending from `0.0` (the unroll widens how
+//! many chains advance per pass, never how any one chain is ordered;
+//! threads partition disjoint output rows). The fused ops are *not*
+//! bitwise equal to the composite forms they replace — online softmax
+//! reassociates the reduction — so they are separate manifest ops with
+//! tolerance-based equivalence tests (`rust/tests/prop_kernels.rs`).
+//!
+//! The `simd` cargo feature swaps the portable rank-1 block for the
+//! hand-vectorized AVX2 one in `avx` (runtime-detected, scalar
+//! fallback); each vector lane performs the same rounded mul+add
+//! sequence, so results stay bit-identical with or without it.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) mod avx;
+pub mod fused;
+pub mod gemm;
+pub mod reference;
+
+/// Work threshold (multiply-adds) below which intra-op threading is not
+/// worth the `thread::scope` spawn/join overhead.
+pub(crate) const PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// Split `out`'s `m` logical rows of width `n` into contiguous per-thread
+/// chunks and run `f(rows, chunk)` on each. Row partitions write disjoint
+/// output rows and leave every per-element accumulation chain unchanged,
+/// so any thread count is bit-identical to `threads = 1`.
+pub(crate) fn par_rows<F>(out: &mut [f32], m: usize, n: usize, threads: usize, flops: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || flops < PAR_MIN_FLOPS {
+        f(0..m, out);
+        return;
+    }
+    let per = m.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.chunks_mut(per * n).enumerate() {
+            let lo = t * per;
+            let hi = (lo + per).min(m);
+            scope.spawn(move || f(lo..hi, chunk));
+        }
+    });
+}

@@ -1,0 +1,137 @@
+//! The retained scalar oracle: the interpreter's pre-tiling loop nests,
+//! kept verbatim so the kernel-equivalence property test (and anyone
+//! debugging a rounding question) can compare against the exact pre-PR
+//! semantics. Mirrors `python/compile/kernels/ref.py`.
+//!
+//! Also provides the *composite* (two-pass softmax / materialized-xhat)
+//! forms of the fused ops in [`super::fused`], which those ops are tested
+//! against with per-op tolerances.
+
+/// out[m,n] = a[m,k] @ b[k,n]
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            let brow = &b[p * n..p * n + n];
+            let orow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// out[m,n] = a[k,m]^T @ b[k,n]
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for p in 0..k {
+        let brow = &b[p * n..p * n + n];
+        for i in 0..m {
+            let av = a[p * m + i];
+            let orow = &mut out[i * n..i * n + n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]^T
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..i * k + k];
+        for j in 0..n {
+            let brow = &b[j * k..j * k + k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Composite per-row layernorm (materialized mean/var, separate scale
+/// application) — the `ln_fwd` math in `runtime/interp.rs`, y only.
+pub fn layernorm(
+    x: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..r * d + d];
+        let mut mu = 0.0f32;
+        for &v in row {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in row {
+            let c = v - mu;
+            var += c * c;
+        }
+        var /= d as f32;
+        let rs = 1.0 / (var + eps).sqrt();
+        for c in 0..d {
+            y[r * d + c] = (row[c] - mu) * rs * gamma[c] + beta[c];
+        }
+    }
+    y
+}
+
+/// Two-pass (max, then exp/normalize) causal softmax attention over the
+/// `[bh, s, dh]` per-head layout — the materialized-probabilities form
+/// that `fused::causal_attention`'s online softmax is tested against.
+pub fn causal_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bh: usize,
+    s: usize,
+    dh: usize,
+) -> Vec<f32> {
+    let inv_sqrt = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; bh * s * dh];
+    let mut scores = vec![0.0f32; s];
+    for b in 0..bh {
+        let base = b * s * dh;
+        for i in 0..s {
+            let qrow = &q[base + i * dh..][..dh];
+            let mut maxv = f32::NEG_INFINITY;
+            for (j, score) in scores.iter_mut().enumerate().take(i + 1) {
+                let krow = &k[base + j * dh..][..dh];
+                let mut acc = 0.0f32;
+                for c in 0..dh {
+                    acc += qrow[c] * krow[c];
+                }
+                *score = acc * inv_sqrt;
+                if *score > maxv {
+                    maxv = *score;
+                }
+            }
+            let mut denom = 0.0f32;
+            for score in scores.iter_mut().take(i + 1) {
+                *score = (*score - maxv).exp();
+                denom += *score;
+            }
+            let orow = &mut out[base + i * dh..][..dh];
+            for (j, score) in scores.iter().enumerate().take(i + 1) {
+                let a = score / denom;
+                let vrow = &v[base + j * dh..][..dh];
+                for c in 0..dh {
+                    orow[c] += a * vrow[c];
+                }
+            }
+        }
+    }
+    out
+}

@@ -256,6 +256,18 @@ impl Manifest {
                 vec![x.clone(), f32s(&[d, v])],
             ),
         );
+        // Fused kernels ported from the Pallas specs (runtime/kernels),
+        // exposed as standalone ops: the engine's train_step stream does
+        // not call them, so existing decision traces are unchanged.
+        ops.insert(
+            "fused_ln_fwd".to_string(),
+            op(vec![x.clone(), f32s(&[2, d])], vec![x.clone()]),
+        );
+        let heads = f32s(&[b, cfg.n_heads, s, cfg.d_head()]);
+        ops.insert(
+            "fused_attn_fwd".to_string(),
+            op(vec![heads.clone(), heads.clone(), heads.clone()], vec![heads]),
+        );
 
         let param_shapes = cfg.param_shapes();
         for (group, shape) in &param_shapes {

@@ -5,6 +5,7 @@
 
 pub mod executor;
 pub mod interp;
+pub mod kernels;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;

@@ -36,7 +36,9 @@ use crate::dtr::DtrError;
 /// How the arbiter divides the global budget among shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArbiterPolicy {
-    /// Each shard's lease is capped at `total / planned_tenants`; shards
+    /// Each shard's lease is capped at its static share of the budget
+    /// (`total / planned_tenants`, with the division remainder spread one
+    /// byte per low slot so the shares sum exactly to the total); shards
     /// reclaim only from themselves. The offline-partitioning baseline.
     StaticSplit,
     /// Any shard may lease up to the whole budget; the arbiter revokes idle
@@ -81,6 +83,15 @@ pub struct ShardMeter {
     dead: AtomicBool,
 }
 
+/// The single checked `u64 -> i64` conversion for ledger deltas. Every
+/// mutation of a [`ShardMeter`]'s signed headroom routes through this, so an
+/// oversize reserve/refund pair can never clamp asymmetrically and drift the
+/// ledger: a request that does not fit is rejected (or rejected up front by
+/// the caller), never silently truncated.
+fn ledger_delta(bytes: u64) -> Option<i64> {
+    i64::try_from(bytes).ok()
+}
+
 impl ShardMeter {
     /// Resident bytes of the shard's runtime (mirror of `Stats::memory`).
     pub fn used(&self) -> u64 {
@@ -96,10 +107,10 @@ impl ShardMeter {
     /// them entirely. Absurd requests that do not fit the signed ledger can
     /// never be covered by a real lease.
     fn try_take(&self, bytes: u64) -> bool {
-        if bytes > i64::MAX as u64 {
-            return false;
-        }
-        let want = bytes as i64;
+        let want = match ledger_delta(bytes) {
+            Some(w) => w,
+            None => return false,
+        };
         let mut cur = self.headroom.load(Ordering::Acquire);
         loop {
             if cur < want {
@@ -117,13 +128,18 @@ impl ShardMeter {
         }
     }
 
-    /// Unconditional reservation (pinned constants): may overdraw.
+    /// Unconditional reservation (pinned constants): may overdraw. Callers
+    /// validate the size up front; an unrepresentable delta is a logic
+    /// error, not something to clamp — a clamped take paired with a
+    /// clamped credit of a different oversize value would drift the ledger.
     fn take_unchecked(&self, bytes: u64) {
-        self.headroom.fetch_sub(bytes.min(i64::MAX as u64) as i64, Ordering::AcqRel);
+        let delta = ledger_delta(bytes).expect("pinned take exceeds the signed ledger");
+        self.headroom.fetch_sub(delta, Ordering::AcqRel);
     }
 
     fn credit(&self, bytes: u64) {
-        self.headroom.fetch_add(bytes.min(i64::MAX as u64) as i64, Ordering::AcqRel);
+        let delta = ledger_delta(bytes).expect("refund exceeds the signed ledger");
+        self.headroom.fetch_add(delta, Ordering::AcqRel);
     }
 
     /// Revoke up to `want` bytes of *positive* headroom; returns the bytes
@@ -155,6 +171,7 @@ pub struct ShardSnapshot {
     pub id: usize,
     pub live: bool,
     pub lease: u64,
+    pub cap: u64,
     pub used: u64,
     pub headroom: i64,
 }
@@ -176,10 +193,13 @@ struct ArbState {
 pub struct BudgetArbiter {
     total: u64,
     policy: ArbiterPolicy,
-    /// Per-shard lease cap, fixed at construction (`StaticSplit` divides
-    /// the total across the planned tenant count; `GlobalReclaim` lets any
-    /// shard lease everything).
-    cap: u64,
+    /// Per-shard lease cap parameters, fixed at construction. `StaticSplit`
+    /// divides the total across the planned tenant count and spreads the
+    /// division remainder one byte at a time over the first `cap_remainder`
+    /// slots, so the per-shard caps sum *exactly* to `total` — no bytes are
+    /// stranded. `GlobalReclaim` lets any shard lease everything.
+    cap_base: u64,
+    cap_remainder: u64,
     state: Mutex<ArbState>,
     cv: Condvar,
 }
@@ -194,17 +214,33 @@ impl BudgetArbiter {
         // Ledger arithmetic runs in i64 (signed headroom); clamp the total
         // accordingly — practically unlimited.
         let total = total.min(i64::MAX as u64);
-        let cap = match policy {
-            ArbiterPolicy::StaticSplit => total / planned_tenants.max(1) as u64,
-            ArbiterPolicy::GlobalReclaim => total,
+        let (cap_base, cap_remainder) = match policy {
+            ArbiterPolicy::StaticSplit => {
+                let planned = planned_tenants.max(1) as u64;
+                (total / planned, total % planned)
+            }
+            ArbiterPolicy::GlobalReclaim => (total, 0),
         };
         Arc::new(BudgetArbiter {
             total,
             policy,
-            cap,
+            cap_base,
+            cap_remainder,
             state: Mutex::new(ArbState { shards: Vec::new() }),
             cv: Condvar::new(),
         })
+    }
+
+    /// Lease cap for the shard occupying `slot`. Static split hands the
+    /// division remainder out one byte per low slot, so the caps of the
+    /// first `planned_tenants` slots sum exactly to the total budget.
+    fn cap_for(&self, slot: usize) -> u64 {
+        match self.policy {
+            ArbiterPolicy::StaticSplit => {
+                self.cap_base + u64::from((slot as u64) < self.cap_remainder)
+            }
+            ArbiterPolicy::GlobalReclaim => self.total,
+        }
     }
 
     pub fn total(&self) -> u64 {
@@ -222,26 +258,23 @@ impl BudgetArbiter {
         let meter = Arc::new(ShardMeter::default());
         let mut st = self.state.lock().expect("arbiter poisoned");
         self.reap_locked(&mut st);
+        // Recycle a dead slot (a departed tenant cannot bind or reserve
+        // through it anymore — its gate is gone), so tenant churn does not
+        // grow the shard table without bound. The slot index is fixed
+        // *before* the shard is built: its cap depends on the slot.
+        let id = st.shards.iter().position(|sh| !sh.live).unwrap_or(st.shards.len());
         let shard = Shard {
             live: true,
             lease: 0,
-            cap: self.cap,
+            cap: self.cap_for(id),
             meter: Arc::clone(&meter),
             remote: None,
         };
-        // Recycle a dead slot (a departed tenant cannot bind or reserve
-        // through it anymore — its gate is gone), so tenant churn does not
-        // grow the shard table without bound.
-        let id = match st.shards.iter().position(|sh| !sh.live) {
-            Some(free) => {
-                st.shards[free] = shard;
-                free
-            }
-            None => {
-                st.shards.push(shard);
-                st.shards.len() - 1
-            }
-        };
+        if id == st.shards.len() {
+            st.shards.push(shard);
+        } else {
+            st.shards[id] = shard;
+        }
         drop(st);
         LeaseGate { arb: Arc::clone(self), id, meter }
     }
@@ -346,6 +379,9 @@ impl BudgetArbiter {
     /// the arbiter lock so a concurrent revocation cannot race the grant
     /// away; any shortfall becomes overdraft (negative headroom).
     fn reserve_pinned_slow(&self, id: usize, bytes: u64) {
+        // Pinned constants are real allocations: a size that does not fit
+        // the signed ledger is unrepresentable and a logic error upstream.
+        let want = ledger_delta(bytes).expect("pinned reservation exceeds the signed ledger");
         let mut st = self.state.lock().expect("arbiter poisoned");
         // Our own slot cannot be reaped or recycled while we hold its gate.
         let meter = Arc::clone(&st.shards[id].meter);
@@ -353,7 +389,6 @@ impl BudgetArbiter {
         loop {
             self.reap_locked(&mut st);
             let headroom = meter.headroom();
-            let want = bytes.min(i64::MAX as u64) as i64;
             let deficit = want.saturating_sub(headroom).max(0) as u64;
             if deficit == 0 {
                 break;
@@ -411,6 +446,20 @@ impl BudgetArbiter {
     /// one victim search, one eviction per round — which is what makes
     /// N=1 serving decision-exact against a plain session.
     fn request(&self, id: usize, need: u64, local: &mut dyn LocalEvictor) -> Result<()> {
+        // A need that does not fit the signed ledger can never be granted;
+        // reject it up front, before any shard state is touched.
+        let want = match ledger_delta(need) {
+            Some(w) => w,
+            None => {
+                return Err(DtrError::Oom {
+                    need,
+                    free: 0,
+                    budget: self.total,
+                    resident: local.resident_bytes(),
+                }
+                .into());
+            }
+        };
         let mut stalled = 0usize;
         let mut st = self.state.lock().expect("arbiter poisoned");
         // Our own slot cannot be reaped or recycled while we hold its gate.
@@ -425,7 +474,6 @@ impl BudgetArbiter {
                 return Ok(());
             }
             let headroom = meter.headroom();
-            let want = need.min(i64::MAX as u64) as i64;
             let deficit = want.saturating_sub(headroom).max(0) as u64;
 
             // 1. Unleased pool, then (global reclaim) leases idling on
@@ -538,6 +586,12 @@ impl BudgetArbiter {
                 used,
                 headroom
             );
+            anyhow::ensure!(
+                sh.lease <= sh.cap,
+                "shard {i} lease {} exceeds its cap {}",
+                sh.lease,
+                sh.cap
+            );
         }
         anyhow::ensure!(
             leased <= self.total,
@@ -558,6 +612,7 @@ impl BudgetArbiter {
                 id,
                 live: sh.live,
                 lease: sh.lease,
+                cap: sh.cap,
                 used: sh.meter.used(),
                 headroom: sh.meter.headroom(),
             })
@@ -682,6 +737,48 @@ mod tests {
         arb.check_ledger().unwrap();
         drop(b);
         arb.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn static_split_distributes_remainder() {
+        // 103 over 4 planned tenants: caps [26, 26, 26, 25] — the division
+        // remainder is spread over the low slots, not stranded.
+        let arb = BudgetArbiter::new(103, ArbiterPolicy::StaticSplit, 4);
+        let gates: Vec<_> = (0..4).map(|_| arb.register()).collect();
+        let snap = arb.snapshot();
+        let caps: Vec<u64> = snap.iter().map(|s| s.cap).collect();
+        assert_eq!(caps, vec![26, 26, 26, 25]);
+        assert_eq!(caps.iter().sum::<u64>(), arb.total(), "caps must cover the whole budget");
+        // A low slot can actually lease its full (uneven) cap.
+        gates[0].reserve_pinned(26);
+        gates[0].on_alloc(26);
+        let snap = arb.snapshot();
+        assert_eq!(snap[gates[0].shard_id()].lease, 26);
+        assert_eq!(snap[gates[0].shard_id()].headroom, 0);
+        arb.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn ledger_exact_at_i64_max_boundary() {
+        let m = ShardMeter::default();
+        m.credit(i64::MAX as u64);
+        assert_eq!(m.headroom(), i64::MAX);
+        // One byte past the boundary is rejected without moving the ledger.
+        assert!(!m.try_take(i64::MAX as u64 + 1));
+        assert_eq!(m.headroom(), i64::MAX);
+        // Exactly the boundary drains it to zero.
+        assert!(m.try_take(i64::MAX as u64));
+        assert_eq!(m.headroom(), 0);
+        // An unchecked take/credit pair nets exactly zero — no clamp drift.
+        m.take_unchecked(7);
+        m.credit(7);
+        assert_eq!(m.headroom(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "signed ledger")]
+    fn unchecked_take_rejects_oversize() {
+        ShardMeter::default().take_unchecked(u64::MAX);
     }
 
     #[test]

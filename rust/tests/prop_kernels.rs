@@ -1,0 +1,220 @@
+//! Kernel-equivalence properties: the blocked/threaded kernels in
+//! `runtime/kernels` against the retained scalar oracle
+//! (`runtime/kernels/reference.rs`, the interpreter's verbatim pre-PR
+//! loop nests).
+//!
+//! Exactness contract, per op:
+//!
+//! * **GEMMs (`matmul`/`matmul_at`/`matmul_bt`)** — *bitwise* equal at any
+//!   thread count. The unrolled rank-1 row kernel keeps every output
+//!   element a single f32 accumulator over `p` ascending from `0.0` (no
+//!   k-blocking, no FMA contraction), the transpose variants feed the same
+//!   chains, and the row partition assigns whole disjoint output rows to
+//!   threads.
+//! * **Fused layernorm** — bitwise: the fused one-pass kernel runs the
+//!   same mean/var/normalize chains as the composite reference, it merely
+//!   skips materializing the intermediates.
+//! * **Fused attention** — tolerance-based: flash's online softmax
+//!   reassociates the exp-sum and rescales the accumulator by `alpha`
+//!   products, so it is a different (equally valid) rounding of the same
+//!   value. With `s <= 32` summands in f32 (eps ~ 1.2e-7) and softmax
+//!   weights in [0, 1], per-element relative error is bounded well under
+//!   1e-5; we assert 1e-4 against `1 + |reference|`.
+//! * **Fused layernorm backward** — checked against central finite
+//!   differences (the same oracle the interpreter's gradient tests use):
+//!   eps 1e-2 keeps the f32 cancellation noise (~|L|·1.2e-7/eps) two
+//!   orders below the directional derivatives, tolerance 2%.
+
+use dtr::runtime::kernels::{fused, gemm, reference};
+use dtr::runtime::{Executor, HostTensor, InterpExecutor, ModelConfig};
+use dtr::util::rng::Rng;
+
+const LN_EPS: f32 = 1e-5;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
+}
+
+/// Odd shapes (non-multiples of the KU=8 unroll and the 8-lane vector
+/// width, unit dims) plus one shape past the parallel-spawn threshold, at
+/// several thread counts: all three GEMM variants are bitwise the scalar
+/// reference.
+#[test]
+fn tiled_gemms_bitwise_match_scalar_reference_on_odd_shapes() {
+    let mut rng = Rng::new(0xBEEF);
+    let shapes = [
+        (1, 1, 1),
+        (1, 5, 1),
+        (3, 7, 5),
+        (5, 17, 33),
+        (13, 31, 6),
+        (8, 64, 192),
+        (33, 64, 64), // > PAR_MIN_FLOPS: threads really spawn
+    ];
+    for &(m, k, n) in &shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let at = randv(&mut rng, k * m);
+        let bt = randv(&mut rng, n * k);
+        let want = reference::matmul(&a, &b, m, k, n);
+        let want_at = reference::matmul_at(&at, &b, k, m, n);
+        let want_bt = reference::matmul_bt(&a, &bt, m, k, n);
+        for threads in [1, 4] {
+            assert_eq!(
+                gemm::matmul(&a, &b, m, k, n, threads),
+                want,
+                "matmul {m}x{k}x{n} t={threads}"
+            );
+            assert_eq!(
+                gemm::matmul_at(&at, &b, k, m, n, threads),
+                want_at,
+                "matmul_at {m}x{k}x{n} t={threads}"
+            );
+            assert_eq!(
+                gemm::matmul_bt(&a, &bt, m, k, n, threads),
+                want_bt,
+                "matmul_bt {m}x{k}x{n} t={threads}"
+            );
+        }
+    }
+}
+
+/// Pinned: `threads = 1` is the pre-PR scalar path, bit for bit, at the
+/// exact GEMM shapes the transformer training step issues at
+/// `ModelConfig::small()` (qkv/mlp/loss projections and their backwards).
+#[test]
+fn threads_one_is_the_pre_pr_scalar_path_at_model_shapes() {
+    let mut rng = Rng::new(0xCAFE);
+    for &(m, k, n) in &[(256, 64, 192), (256, 128, 64), (256, 64, 256)] {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        assert_eq!(gemm::matmul(&a, &b, m, k, n, 1), reference::matmul(&a, &b, m, k, n));
+        let at = randv(&mut rng, k * m);
+        assert_eq!(gemm::matmul_at(&at, &b, k, m, n, 1), reference::matmul_at(&at, &b, k, m, n));
+        let bt = randv(&mut rng, n * k);
+        assert_eq!(gemm::matmul_bt(&a, &bt, m, k, n, 1), reference::matmul_bt(&a, &bt, m, k, n));
+    }
+}
+
+/// Fused layernorm is the same reduction chains as the composite
+/// reference (bitwise), including odd row counts and with threads.
+#[test]
+fn fused_layernorm_bitwise_matches_composite_reference() {
+    let mut rng = Rng::new(0xF00D);
+    for &(rows, d) in &[(1, 1), (3, 5), (8, 64), (257, 64)] {
+        let x = randv(&mut rng, rows * d);
+        let gamma = randv(&mut rng, d);
+        let beta = randv(&mut rng, d);
+        let want = reference::layernorm(&x, &gamma, &beta, rows, d, LN_EPS);
+        for threads in [1, 4] {
+            assert_eq!(
+                fused::layernorm(&x, &gamma, &beta, rows, d, LN_EPS, threads),
+                want,
+                "layernorm rows={rows} d={d} t={threads}"
+            );
+        }
+    }
+}
+
+/// Fused (online-softmax) attention vs the two-pass materialized
+/// reference: 1e-4 relative tolerance (see module docs), batch/seq edge
+/// cases included, and threading bitwise-identical to its own t=1 result
+/// (slabs are computed independently per head).
+#[test]
+fn fused_attention_matches_two_pass_reference_within_tolerance() {
+    let mut rng = Rng::new(0xA77);
+    for &(bh, s, dh) in &[(1, 1, 4), (1, 16, 8), (3, 13, 8), (5, 32, 32)] {
+        let q = randv(&mut rng, bh * s * dh);
+        let k = randv(&mut rng, bh * s * dh);
+        let v = randv(&mut rng, bh * s * dh);
+        let want = reference::causal_attention(&q, &k, &v, bh, s, dh);
+        let got = fused::causal_attention(&q, &k, &v, bh, s, dh, 1);
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            let err = (g - w).abs() / (1.0 + w.abs());
+            assert!(
+                err <= 1e-4,
+                "attention bh={bh} s={s} dh={dh} elem {i}: fused {g} vs ref {w} (rel {err})"
+            );
+        }
+        let threaded = fused::causal_attention(&q, &k, &v, bh, s, dh, 4);
+        assert_eq!(threaded, got, "attention threading must be bitwise (bh={bh})");
+    }
+}
+
+/// Fused layernorm backward against central finite differences of the
+/// fused forward, through a random linear probe `L = sum(y * w)`, for
+/// each of x, gamma, and beta.
+#[test]
+fn fused_layernorm_bwd_matches_finite_differences() {
+    let (rows, d) = (4, 16);
+    let mut rng = Rng::new(0xD1FF);
+    let x = randv(&mut rng, rows * d);
+    let gamma: Vec<f32> = randv(&mut rng, d).iter().map(|v| v + 1.5).collect();
+    let beta = randv(&mut rng, d);
+    let w = randv(&mut rng, rows * d); // dL/dy
+
+    let (dx, dgamma, dbeta) = fused::layernorm_bwd(&x, &gamma, &w, rows, d, LN_EPS);
+
+    let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f64 {
+        let y = fused::layernorm(x, g, b, rows, d, LN_EPS, 1);
+        y.iter().zip(w.iter()).map(|(a, b)| *a as f64 * *b as f64).sum()
+    };
+    let eps = 1e-2f32;
+    let check = |name: &str, analytic: f64, fd: f64| {
+        let denom = analytic.abs().max(fd.abs()).max(1e-3);
+        assert!(
+            (analytic - fd).abs() / denom < 0.02,
+            "{name}: analytic {analytic} vs finite-diff {fd}"
+        );
+    };
+
+    // Directional derivative along a random u, for each argument.
+    let ux = randv(&mut rng, rows * d);
+    let xp: Vec<f32> = x.iter().zip(&ux).map(|(a, u)| a + eps * u).collect();
+    let xm: Vec<f32> = x.iter().zip(&ux).map(|(a, u)| a - eps * u).collect();
+    let fd_x = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps as f64);
+    let an_x: f64 = dx.iter().zip(&ux).map(|(g, u)| *g as f64 * *u as f64).sum();
+    check("dx", an_x, fd_x);
+
+    let ug = randv(&mut rng, d);
+    let gp: Vec<f32> = gamma.iter().zip(&ug).map(|(a, u)| a + eps * u).collect();
+    let gm: Vec<f32> = gamma.iter().zip(&ug).map(|(a, u)| a - eps * u).collect();
+    let fd_g = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps as f64);
+    let an_g: f64 = dgamma.iter().zip(&ug).map(|(g, u)| *g as f64 * *u as f64).sum();
+    check("dgamma", an_g, fd_g);
+
+    let ub = randv(&mut rng, d);
+    let bp: Vec<f32> = beta.iter().zip(&ub).map(|(a, u)| a + eps * u).collect();
+    let bm: Vec<f32> = beta.iter().zip(&ub).map(|(a, u)| a - eps * u).collect();
+    let fd_b = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps as f64);
+    let an_b: f64 = dbeta.iter().zip(&ub).map(|(g, u)| *g as f64 * *u as f64).sum();
+    check("dbeta", an_b, fd_b);
+}
+
+/// Executor-level: whole interpreter ops (forward + backward transformer
+/// block, both fused ops) produce bitwise-identical outputs at threads=1
+/// and threads=4, on random inputs drawn from the manifest shapes.
+/// `ModelConfig::small()` makes the block GEMMs exceed the parallel-spawn
+/// threshold, so threads genuinely run.
+#[test]
+fn interp_executor_is_bitwise_equal_across_thread_counts() {
+    let model = ModelConfig::small();
+    let mut one = InterpExecutor::new(model).expect("executor");
+    let mut four = InterpExecutor::new(model).expect("executor").with_threads(4);
+    let mut rng = Rng::new(0x7EAD);
+    for op in ["block_fwd", "block_bwd", "fused_ln_fwd", "fused_attn_fwd"] {
+        let sig = one.manifest().op(op).expect("op in manifest").clone();
+        let inputs: Vec<HostTensor> = sig
+            .inputs
+            .iter()
+            .map(|t| {
+                let n: usize = t.shape.iter().product();
+                HostTensor::new(t.shape.clone(), randv(&mut rng, n))
+            })
+            .collect();
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        let a = one.execute(op, &refs).expect("t=1 execute");
+        let b = four.execute(op, &refs).expect("t=4 execute");
+        assert_eq!(a, b, "{op}: threads must not change a single bit");
+    }
+}

@@ -167,6 +167,11 @@ fn ledger_equals_shard_accounting_under_random_tapes() {
                 shard.session.memory(),
                 "shard {i} meter drifted from its runtime at round {round}"
             );
+            assert_eq!(
+                snap[i].cap,
+                pool.total(),
+                "global reclaim caps every shard at the whole budget"
+            );
             total_used += snap[i].used;
         }
         assert!(
@@ -177,6 +182,40 @@ fn ledger_equals_shard_accounting_under_random_tapes() {
     }
     let evictions: u64 = shards.iter().map(|s| s.session.stats().evict_count).sum();
     assert!(evictions > 0, "tapes never forced an eviction; property is vacuous");
+    drop(shards);
+    pool.check_invariants().unwrap();
+    assert_eq!(pool.used_bytes(), 0);
+}
+
+/// Static split over an uneven budget: the division remainder is spread
+/// across shards, so the per-shard caps always sum to exactly the global
+/// budget (no stranded bytes), and no shard's lease ever exceeds its cap.
+#[test]
+fn static_split_caps_cover_the_whole_budget() {
+    let h = Heuristic::dtr_eq();
+    // 403 over 3 planned tenants: base share 134, remainder 1.
+    let pool = ServePool::new(403, ArbiterPolicy::StaticSplit, 3);
+    let mut shards: Vec<ShardTape> =
+        (0..3).map(|i| ShardTape::new(&pool, 0xB22 + i as u64, h)).collect();
+    for round in 0..120 {
+        for shard in shards.iter_mut() {
+            shard.tick();
+        }
+        pool.check_invariants()
+            .unwrap_or_else(|e| panic!("ledger broken at round {round}: {e:#}"));
+        let snap = pool.snapshot();
+        let cap_sum: u64 = snap.iter().filter(|s| s.live).map(|s| s.cap).sum();
+        assert_eq!(cap_sum, pool.total(), "round {round}: caps must sum to the budget");
+        for s in &snap {
+            assert!(
+                s.lease <= s.cap,
+                "round {round}: shard {} lease {} exceeds its cap {}",
+                s.id,
+                s.lease,
+                s.cap
+            );
+        }
+    }
     drop(shards);
     pool.check_invariants().unwrap();
     assert_eq!(pool.used_bytes(), 0);
