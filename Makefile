@@ -28,8 +28,10 @@ bench:
 #    growing pools, reference scan vs policy index);
 #  * BENCH_serve.json — bench_serve multi-tenant scaling (aggregate
 #    steps/sec + remat overhead vs tenant count, static-split vs
-#    global-reclaim arbitration).
-# Both benches exit non-zero if their results array would be empty (pass
+#    global-reclaim arbitration) + front-end requests/sec and p50/p99
+#    latency vs tenant-class count (the `frontend` key).
+# Both benches exit non-zero if a results array would be empty — for
+# bench_serve that includes empty/zeroed front-end percentiles — (pass
 # `--allow-empty` to override), so an empty trajectory file fails the make.
 bench-json: bench-json-dtr bench-json-serve
 

@@ -9,8 +9,15 @@
 //! requested` mark tenants that OOMed under their policy (static-split
 //! boxes tenants into `total/N` shares; global-reclaim lets hot tenants
 //! borrow idle bytes), so the comparison is throughput *and* admission.
+//!
+//! A second section drives the request front-end (`dtr::frontend`):
+//! bursty open-loop clients over 1/2/4 tenant-class mixes, reporting
+//! requests/sec and p50/p99 latency per arbiter policy (JSON key
+//! `frontend`). Empty or zeroed percentiles fail the run unless
+//! `--allow-empty` is passed — same contract as the scaling section.
 
 use dtr::dtr::Config;
+use dtr::frontend::{frontend_budget, serve_bursty, FrontendConfig};
 use dtr::serve::{fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantSpec};
 
 struct Row {
@@ -45,6 +52,40 @@ fn run_point(n: usize, policy: ArbiterPolicy, steps: usize, budget: u64) -> Row 
         slowdown: if base_c == 0 { 1.0 } else { (base_c + remat_c) as f64 / base_c as f64 },
         evictions,
         budget,
+    }
+}
+
+struct FrontRow {
+    classes: usize,
+    arbiter: &'static str,
+    submitted: usize,
+    completed: usize,
+    rejected: usize,
+    requests_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// One front-end point: bursty open-loop clients over `n` tenant classes,
+/// requests/sec and latency percentiles from the event bus.
+fn run_frontend_point(n: usize, policy: ArbiterPolicy, per_class: usize) -> FrontRow {
+    let cfg = FrontendConfig::mixed(n);
+    let budget = frontend_budget(&cfg.classes, 70).expect("envelope measurement");
+    let shards: usize = cfg.classes.iter().map(|c| c.shards).sum();
+    let pool = ServePool::new(budget, policy, shards);
+    let report =
+        serve_bursty(&pool, &cfg, &Config::default(), per_class, 0xBE7C).expect("frontend run");
+    pool.check_invariants().expect("ledger");
+    let t = &report.total;
+    FrontRow {
+        classes: n,
+        arbiter: policy.name(),
+        submitted: t.submitted,
+        completed: t.completed,
+        rejected: t.rejected,
+        requests_per_sec: t.requests_per_sec,
+        p50_ms: t.p50_ns as f64 / 1e6,
+        p99_ms: t.p99_ns as f64 / 1e6,
     }
 }
 
@@ -92,10 +133,46 @@ fn main() {
         }
     }
 
+    // Front-end section: requests/sec + latency percentiles vs class count,
+    // per arbiter policy (the serving-path numbers behind ROADMAP item 1).
+    println!("\n# bench_serve — front-end requests/sec vs tenant-class count\n");
+    let per_class = if quick { 8 } else { 16 };
+    let mut front_rows = Vec::new();
+    for &n in &[1usize, 2, 4] {
+        for policy in ArbiterPolicy::all() {
+            let r = run_frontend_point(n, policy, per_class);
+            println!(
+                "classes={:<2} [{:<14}] {:>8.2} req/s  p50 {:>7.2} ms  p99 {:>7.2} ms  \
+                 {}/{} completed  {} shed",
+                r.classes,
+                r.arbiter,
+                r.requests_per_sec,
+                r.p50_ms,
+                r.p99_ms,
+                r.completed,
+                r.submitted,
+                r.rejected
+            );
+            front_rows.push(r);
+        }
+    }
+
     if let Some(path) = json_out {
         if rows.is_empty() && !allow_empty {
             eprintln!(
                 "bench_serve: refusing to write an empty results array to {path} \
+                 (pass --allow-empty to override)"
+            );
+            std::process::exit(1);
+        }
+        // Same contract for the front-end section: empty or zeroed
+        // percentiles mean the serving numbers are vacuous — fail loudly
+        // rather than publish them.
+        let vacuous = front_rows.is_empty()
+            || front_rows.iter().any(|r| r.completed == 0 || r.p99_ms <= 0.0);
+        if vacuous && !allow_empty {
+            eprintln!(
+                "bench_serve: front-end section has empty percentile results for {path} \
                  (pass --allow-empty to override)"
             );
             std::process::exit(1);
@@ -119,6 +196,23 @@ fn main() {
                 r.evictions,
                 r.budget,
                 if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n  \"frontend\": [\n");
+        for (i, r) in front_rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"classes\": {}, \"arbiter\": \"{}\", \"requests_per_sec\": {:.3}, \
+                 \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"submitted\": {}, \
+                 \"completed\": {}, \"rejected\": {}}}{}\n",
+                r.classes,
+                r.arbiter,
+                r.requests_per_sec,
+                r.p50_ms,
+                r.p99_ms,
+                r.submitted,
+                r.completed,
+                r.rejected,
+                if i + 1 == front_rows.len() { "" } else { "," }
             ));
         }
         s.push_str("  ]\n}\n");

@@ -46,6 +46,16 @@ pub struct TrainConfig {
     /// rows; see `runtime/kernels`), so DTR decision traces are
     /// unaffected; 1 (the default) never spawns.
     pub threads: usize,
+    /// Route `block_fwd`/`block_bwd` through the fused layernorm /
+    /// flash-attention kernels (`runtime/kernels/fused`). Off by default:
+    /// the fused attention reassociates its reductions, so results are
+    /// tolerance-equivalent rather than bitwise — opting in trades the
+    /// pre-PR bit-exact traces for the fused hot path.
+    pub fused: bool,
+    /// Per-class queue cap for the request front-end (`dtr-repro
+    /// frontend`): submits beyond it are shed with an explicit Rejected
+    /// outcome (backpressure instead of unbounded queues).
+    pub queue_cap: usize,
 }
 
 impl Default for TrainConfig {
@@ -74,6 +84,8 @@ impl Default for TrainConfig {
             tenants: 1,
             arbiter: ArbiterPolicy::GlobalReclaim,
             threads: 1,
+            fused: false,
+            queue_cap: 64,
         }
     }
 }
@@ -95,9 +107,9 @@ impl TrainConfig {
     /// Construct the executor this config selects.
     pub fn build_executor(&self) -> Result<Box<dyn Executor>> {
         match self.backend {
-            BackendKind::Interp => {
-                Ok(Box::new(InterpExecutor::new(self.model)?.with_threads(self.threads)))
-            }
+            BackendKind::Interp => Ok(Box::new(
+                InterpExecutor::new(self.model)?.with_threads(self.threads).with_fused(self.fused),
+            )),
             BackendKind::Pjrt => build_pjrt(&self.artifacts_dir),
         }
     }
@@ -165,6 +177,8 @@ impl TrainConfig {
                 }
                 "tenants" => cfg.tenants = val.as_usize().context("tenants")?,
                 "threads" => cfg.threads = val.as_usize().context("threads")?,
+                "fused" => cfg.fused = val.as_bool().context("fused")?,
+                "queue_cap" => cfg.queue_cap = val.as_usize().context("queue_cap")?,
                 "arbiter" => {
                     let name = val.as_str().context("arbiter")?;
                     cfg.arbiter = ArbiterPolicy::parse(name)
@@ -224,6 +238,10 @@ impl TrainConfig {
         }
         self.tenants = args.usize_or("tenants", self.tenants);
         self.threads = args.usize_or("threads", self.threads);
+        if args.bool("fused") {
+            self.fused = true;
+        }
+        self.queue_cap = args.usize_or("queue-cap", self.queue_cap);
         if let Some(a) = args.get("arbiter") {
             self.arbiter =
                 ArbiterPolicy::parse(a).with_context(|| format!("arbiter policy {a}"))?;
@@ -388,6 +406,53 @@ mod tests {
         );
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.threads, 2);
+    }
+
+    #[test]
+    fn fused_knob_parses_and_overrides() {
+        assert!(!TrainConfig::default().fused, "fused must default off (bit-exact traces)");
+        let p = write_tmp(r#"{"fused": true}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert!(c.fused);
+        let p2 = write_tmp(r#"{"fused": false}"#);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p2.to_str().unwrap().to_string(),
+                "--fused".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert!(c.fused, "--fused flag must win over the file");
+        let bad = write_tmp(r#"{"fused": "yes"}"#);
+        assert!(TrainConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn queue_cap_knob_parses_and_overrides() {
+        assert_eq!(TrainConfig::default().queue_cap, 64);
+        let p = write_tmp(r#"{"queue_cap": 8}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.queue_cap, 8);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--queue-cap".to_string(),
+                "3".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.queue_cap, 3);
+    }
+
+    #[test]
+    fn fused_executor_builds_and_reports_flag() {
+        let c = TrainConfig { fused: true, ..TrainConfig::default() };
+        let exec = c.build_executor().unwrap();
+        assert_eq!(exec.name(), "interp");
     }
 
     #[test]

@@ -270,6 +270,35 @@ impl LstmTrainer {
         })
     }
 
+    /// One *budgeted* forward-only inference pass on the next data batch
+    /// (random sequence length, advancing the data stream), under the
+    /// trainer's own DTR config/gate — the serving counterpart of
+    /// [`LstmTrainer::probe_loss`], which runs unbudgeted.
+    pub fn infer_step(&mut self) -> Result<f32> {
+        let rnn = self.rnn;
+        let (seq_len, x, tgt) =
+            Self::sample_batch(rnn, self.min_len, self.max_len, &mut self.data_rng);
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let wx = s.constant(self.wx.clone());
+        let wh = s.constant(self.wh.clone());
+        let bias = s.constant(self.b.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let tgt_t = s.constant(tgt);
+        let x_t = s.constant(x);
+        let mut h = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        let mut c = s.constant(HostTensor::zeros(&[rnn.batch, rnn.hidden]));
+        for _ in 0..seq_len {
+            let mut outs = s.call("lstm_cell_fwd", &[&x_t, &h, &c, &wx, &wh, &bias])?.into_iter();
+            h = outs.next().unwrap(); // reassignment releases the consumed state
+            c = outs.next().unwrap();
+        }
+        let loss_t = s.call("rnn_loss_fwd", &[&h, &w_out, &tgt_t])?.remove(0);
+        let loss = s.scalar(&loss_t)?;
+        s.check_invariants()?;
+        Ok(loss)
+    }
+
     /// Forward-only loss on a fixed probe batch (deterministic in
     /// `probe_seed`), run unbudgeted: a noise-free progress measure across
     /// varying per-step shapes.
@@ -592,6 +621,28 @@ impl TreeLstmTrainer {
             wall_ns: wall0.elapsed().as_nanos() as u64,
             exec_ns: s.exec_ns(),
         })
+    }
+
+    /// One *budgeted* forward-only inference pass on the next data batch
+    /// (random tree shape, advancing the data stream), under the trainer's
+    /// own DTR config/gate.
+    pub fn infer_step(&mut self) -> Result<f32> {
+        let rnn = self.rnn;
+        let (shape, x, tgt) =
+            Self::sample_batch(rnn, self.max_depth, self.split_p, &mut self.data_rng);
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+        let wc = s.constant(self.wc.clone());
+        let wl = s.constant(self.wl.clone());
+        let wr = s.constant(self.wr.clone());
+        let w_out = s.constant(self.w_out.clone());
+        let x_t = s.constant(x);
+        let tgt_t = s.constant(tgt);
+        let root = Self::eval_tree(&s, &shape, &x_t, &wc, &wl, &wr)?;
+        let loss_t = s.call("rnn_loss_fwd", &[root.h(), &w_out, &tgt_t])?.remove(0);
+        let loss = s.scalar(&loss_t)?;
+        s.check_invariants()?;
+        Ok(loss)
     }
 
     /// Forward-only loss on a fixed probe tree/batch, run unbudgeted.

@@ -312,6 +312,42 @@ impl Engine {
         })
     }
 
+    /// One budgeted forward-only pass (serving): embed -> blocks -> loss
+    /// on the next data batch, under the engine's DTR config/gate, with no
+    /// backward or optimizer ops. Parameters stay untouched; the returned
+    /// loss is the request's response payload. Activations are evictable
+    /// like any other tensors, so tight budgets can rematerialize even a
+    /// pure inference pass (the forward chain is still a DAG of pure ops).
+    pub fn infer_step(&mut self) -> Result<f32> {
+        let (tokens, targets) = self.make_batch();
+        let cfg = self.cfg;
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+
+        let as_f32 = |xs: &[i32]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        let tok = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&tokens)));
+        let tgt = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&targets)));
+        let param_ts: Vec<Tensor> =
+            self.params.iter().map(|slot| s.constant(slot.value.clone())).collect();
+
+        let mut x = s.call("embed_fwd", &[&tok, &param_ts[0]])?.remove(0);
+        for l in 0..cfg.n_layers {
+            let y = {
+                let mut ins: Vec<&Tensor> = vec![&x];
+                for k in 0..6 {
+                    ins.push(&param_ts[1 + l * 6 + k]);
+                }
+                s.call("block_fwd", &ins)?.remove(0)
+            };
+            x = y; // reassignment releases x_{l}: forward-only keeps O(1) live activations
+        }
+        let w_out = &param_ts[self.params.len() - 1];
+        let loss_t = s.call("loss_fwd", &[&x, w_out, &tgt])?.remove(0);
+        let loss = s.scalar(&loss_t)?;
+        s.check_invariants()?;
+        Ok(loss)
+    }
+
     /// Measure the unbudgeted peak memory of one step (for ratio budgets).
     /// Runs on a throwaway clone of the parameter state.
     pub fn measure_peak(&mut self) -> Result<u64> {

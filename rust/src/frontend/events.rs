@@ -1,0 +1,219 @@
+//! Event bus: the front-end's observability spine. Every request deposits
+//! one terminal event (completed/rejected/failed) with timestamps off a
+//! single shared epoch, and the summarizer folds the event log into
+//! requests/sec and p50/p95/p99 latency per tenant class — the measured
+//! proxy for the ROADMAP's "millions of users" claim.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::request::{Outcome, RequestOp};
+
+/// Terminal record of one request's life.
+#[derive(Debug, Clone)]
+pub struct RequestEvent {
+    pub id: u64,
+    pub class: usize,
+    pub op: RequestOp,
+    pub outcome: Outcome,
+    /// Timestamps in nanoseconds since the bus epoch. Rejected requests
+    /// have `start_ns == done_ns == submit_ns` (they never ran).
+    pub submit_ns: u64,
+    pub start_ns: u64,
+    pub done_ns: u64,
+    /// Queue depth observed at the admission decision: post-enqueue depth
+    /// for admitted requests, the (== cap) depth for shed ones.
+    pub queue_depth: usize,
+    /// Size of the worker batch this request ran in (0 if it never ran).
+    pub batch: usize,
+}
+
+impl RequestEvent {
+    /// Client-visible latency: queue wait + service time.
+    pub fn latency_ns(&self) -> u64 {
+        self.done_ns.saturating_sub(self.submit_ns)
+    }
+}
+
+/// Append-only event log with one shared clock. Recording is a short
+/// mutex push (workers record once per request, after the op ran, so the
+/// lock is far off the compute path).
+pub struct EventBus {
+    epoch: Instant,
+    events: Mutex<Vec<RequestEvent>>,
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus { epoch: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    /// Nanoseconds since the bus epoch (every timestamp's common clock).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub fn record(&self, ev: RequestEvent) {
+        self.events.lock().expect("event bus poisoned").push(ev);
+    }
+
+    /// Drain the log (ordered by record time, not request id).
+    pub fn take(&self) -> Vec<RequestEvent> {
+        std::mem::take(&mut *self.events.lock().expect("event bus poisoned"))
+    }
+}
+
+/// Per-class (or aggregate) service metrics over one run.
+#[derive(Debug, Clone)]
+pub struct ClassMetrics {
+    /// Class index, or `usize::MAX` for the all-classes aggregate.
+    pub class: usize,
+    pub kind: &'static str,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    /// Completed requests per wall-clock second.
+    pub requests_per_sec: f64,
+    /// Latency percentiles over *completed* requests (nearest-rank).
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// Mean worker-batch size over completed requests (batching evidence).
+    pub mean_batch: f64,
+}
+
+impl ClassMetrics {
+    fn empty(class: usize, kind: &'static str) -> ClassMetrics {
+        ClassMetrics {
+            class,
+            kind,
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            failed: 0,
+            requests_per_sec: 0.0,
+            p50_ns: 0,
+            p95_ns: 0,
+            p99_ns: 0,
+            max_ns: 0,
+            mean_batch: 0.0,
+        }
+    }
+
+    fn fold(
+        events: &[&RequestEvent],
+        class: usize,
+        kind: &'static str,
+        wall_ns: u64,
+    ) -> ClassMetrics {
+        let mut m = ClassMetrics::empty(class, kind);
+        let mut lats: Vec<u64> = Vec::new();
+        let mut batch_sum = 0usize;
+        for ev in events {
+            m.submitted += 1;
+            match ev.outcome {
+                Outcome::Completed => {
+                    m.completed += 1;
+                    lats.push(ev.latency_ns());
+                    batch_sum += ev.batch;
+                }
+                Outcome::Rejected => m.rejected += 1,
+                Outcome::Failed => m.failed += 1,
+            }
+        }
+        lats.sort_unstable();
+        m.p50_ns = percentile(&lats, 50.0);
+        m.p95_ns = percentile(&lats, 95.0);
+        m.p99_ns = percentile(&lats, 99.0);
+        m.max_ns = lats.last().copied().unwrap_or(0);
+        if m.completed > 0 {
+            m.mean_batch = batch_sum as f64 / m.completed as f64;
+        }
+        if wall_ns > 0 {
+            m.requests_per_sec = m.completed as f64 / (wall_ns as f64 / 1e9);
+        }
+        m
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0 if empty).
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Fold the event log into one `ClassMetrics` per class (indexed by the
+/// given kind names) plus the all-classes aggregate row.
+pub fn summarize(
+    events: &[RequestEvent],
+    class_kinds: &[&'static str],
+    wall_ns: u64,
+) -> (Vec<ClassMetrics>, ClassMetrics) {
+    let per_class: Vec<ClassMetrics> = class_kinds
+        .iter()
+        .enumerate()
+        .map(|(ci, kind)| {
+            let evs: Vec<&RequestEvent> = events.iter().filter(|e| e.class == ci).collect();
+            ClassMetrics::fold(&evs, ci, kind, wall_ns)
+        })
+        .collect();
+    let all: Vec<&RequestEvent> = events.iter().collect();
+    let total = ClassMetrics::fold(&all, usize::MAX, "all", wall_ns);
+    (per_class, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50.0), 50);
+        assert_eq!(percentile(&v, 95.0), 95);
+        assert_eq!(percentile(&v, 99.0), 99);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[], 99.0), 0);
+        // Small samples round up to the next rank.
+        assert_eq!(percentile(&[10, 20], 50.0), 10);
+        assert_eq!(percentile(&[10, 20], 99.0), 20);
+    }
+
+    #[test]
+    fn summarize_splits_outcomes_by_class() {
+        let mk = |id, class, outcome, lat| RequestEvent {
+            id,
+            class,
+            op: RequestOp::Infer,
+            outcome,
+            submit_ns: 0,
+            start_ns: 0,
+            done_ns: lat,
+            queue_depth: 1,
+            batch: 2,
+        };
+        let events = vec![
+            mk(1, 0, Outcome::Completed, 100),
+            mk(2, 0, Outcome::Completed, 300),
+            mk(3, 0, Outcome::Rejected, 0),
+            mk(4, 1, Outcome::Failed, 0),
+        ];
+        let (per, total) = summarize(&events, &["a", "b"], 1_000_000_000);
+        assert_eq!(per[0].completed, 2);
+        assert_eq!(per[0].rejected, 1);
+        assert_eq!(per[0].p50_ns, 100);
+        assert_eq!(per[0].p99_ns, 300);
+        assert_eq!(per[0].mean_batch, 2.0);
+        assert_eq!(per[1].failed, 1);
+        assert_eq!(per[1].p99_ns, 0);
+        assert_eq!(total.submitted, 4);
+        assert_eq!(total.completed, 2);
+        assert!((total.requests_per_sec - 2.0).abs() < 1e-9);
+    }
+}

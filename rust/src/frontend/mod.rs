@@ -1,0 +1,325 @@
+//! # `dtr::frontend` — event-loop request front-end for the shard fleet
+//!
+//! `dtr::serve` (PR 5) runs one long-lived training tenant per worker
+//! thread; real traffic is the opposite shape: many short requests —
+//! inference steps, fine-tune steps, probes — arriving in bursts across
+//! tenant classes. This module multiplexes those request streams onto the
+//! existing shard `Session`s, following the runtime-core shape of
+//! SNIPPETS.md Snippet 1 (locus.codes) one-for-one:
+//!
+//! * **Orchestrator** ([`run`]) — owns the run: spawns one worker per
+//!   shard (each with its own [`TenantDriver`] and arbiter lease from
+//!   [`ServePool::lease`]), hands the client a submit handle, then drains
+//!   gracefully and folds the event log into a report. Snippet 1's
+//!   `Orchestrator` that "spawns subagents and coordinates them".
+//! * **Scheduler** ([`scheduler::Scheduler`]) — bounded per-class FIFO
+//!   queues behind one mutex + condvar. Submits are admit-or-shed (never
+//!   block, never grow unbounded); workers pull FIFO batches of up to
+//!   `batch_max` same-class requests and run them back-to-back on one
+//!   driver — the batching win is amortizing queue wakeups and keeping a
+//!   shard's working set (its pinned weights) hot across consecutive
+//!   requests. Snippet 1's `Scheduler` "assigning tasks to idle agents".
+//! * **Event bus** ([`events::EventBus`]) — every request deposits exactly
+//!   one terminal event (completed / rejected / failed) with timestamps
+//!   off a shared epoch; [`events::summarize`] turns the log into
+//!   requests/sec and p50/p95/p99 latency per tenant class. Snippet 1's
+//!   `EventBus` the UI subscribes to.
+//!
+//! The memory story is PAPER §5 unchanged: DTR interposes on "tensor
+//! allocations and operator calls" at a central allocator, and here that
+//! chokepoint is the `BudgetArbiter` — every request, on any shard, does
+//! its allocations through its shard's revocable lease, so bursty request
+//! streams are exactly the concurrent demand the arbiter's policies
+//! (static-split vs global-reclaim) are meant to absorb. Because DTR is
+//! online (PAPER §1), requests with data-dependent shapes (LSTM/TreeLSTM
+//! classes) need no ahead-of-time plan — admission control is the *only*
+//! planning the front-end does.
+//!
+//! **Backpressure contract**: queues are bounded by
+//! `TrainConfig::queue_cap`; a submit against a full queue is shed with an
+//! explicit [`Outcome::Rejected`] event recording the depth it observed
+//! (always `== cap` — pinned by `tests/stress_frontend.rs`). Admitted
+//! requests never starve: draining wakes every worker and workers exit
+//! only once their queue is empty, so each admitted request ends
+//! `Completed` or `Failed`, and after the drain the arbiter ledger is
+//! balanced (`ServePool::check_invariants`).
+
+mod events;
+mod queue;
+mod request;
+mod scheduler;
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+pub use events::{percentile, summarize, ClassMetrics, EventBus, RequestEvent};
+pub use queue::{Admission, ClassQueue};
+pub use request::{ClassSpec, Outcome, Request, RequestOp};
+pub use scheduler::Scheduler;
+
+use crate::dtr;
+use crate::serve::{fleet_budget, ServePool, TenantDriver};
+use crate::util::rng::Rng;
+
+/// Front-end knobs (the serving-side analogue of `TrainConfig`'s training
+/// knobs; `queue_cap` flows in from `TrainConfig::queue_cap`).
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    pub classes: Vec<ClassSpec>,
+    /// Per-class queue cap: submits beyond it are shed (backpressure).
+    pub queue_cap: usize,
+    /// Max same-class requests a worker runs back-to-back per wakeup.
+    pub batch_max: usize,
+}
+
+impl FrontendConfig {
+    pub fn new(classes: Vec<ClassSpec>) -> FrontendConfig {
+        FrontendConfig { classes, queue_cap: 64, batch_max: 4 }
+    }
+
+    /// The canonical mixed fleet: `n` classes, one shard each.
+    pub fn mixed(n: usize) -> FrontendConfig {
+        FrontendConfig::new(ClassSpec::mixed(n))
+    }
+}
+
+/// Global budget for a front-end fleet: `pct`% of each shard's non-pinned
+/// headroom, summed over every shard of every class (the per-shard
+/// [`fleet_budget`] formula; `pct` must be in `1..=100`).
+pub fn frontend_budget(classes: &[ClassSpec], pct: u64) -> Result<u64> {
+    fleet_budget(&ClassSpec::tenant_specs(classes), pct)
+}
+
+/// Client-side handle: submit requests while the run is live. `Sync`, so
+/// a client closure may fan submissions out over its own scoped threads
+/// (N concurrent streams).
+pub struct FrontendHandle<'a> {
+    sched: &'a Scheduler,
+    bus: &'a EventBus,
+}
+
+impl FrontendHandle<'_> {
+    /// Submit one request. Returns `false` if it was shed at admission
+    /// (queue at cap); the `Rejected` event is recorded on the bus either
+    /// way, so accounting stays exact: submitted = completed + rejected +
+    /// failed.
+    pub fn submit(&self, class: usize, op: RequestOp) -> bool {
+        let now = self.bus.now_ns();
+        let (req, admission) = self.sched.submit(class, op, now);
+        match admission {
+            Admission::Enqueued { .. } => true,
+            Admission::Shed { depth } => {
+                self.bus.record(RequestEvent {
+                    id: req.id,
+                    class,
+                    op,
+                    outcome: Outcome::Rejected,
+                    submit_ns: now,
+                    start_ns: now,
+                    done_ns: now,
+                    queue_depth: depth,
+                    batch: 0,
+                });
+                false
+            }
+        }
+    }
+
+    /// Current depth of a class queue (load probing).
+    pub fn depth(&self, class: usize) -> usize {
+        self.sched.depth(class)
+    }
+}
+
+/// Outcome of one front-end run.
+#[derive(Debug, Clone)]
+pub struct FrontendReport {
+    pub wall_ns: u64,
+    /// Per-class service metrics, indexed like `FrontendConfig::classes`.
+    pub classes: Vec<ClassMetrics>,
+    /// All-classes aggregate.
+    pub total: ClassMetrics,
+    /// The raw event log (one terminal event per submitted request).
+    pub events: Vec<RequestEvent>,
+    /// Worker-level errors (driver build failures, worker panics). Request
+    /// outcomes already account for these as `Failed`.
+    pub errors: Vec<String>,
+}
+
+/// Run the front-end: spawn the shard workers, hand the client a submit
+/// handle, drain when the client returns, and report. `base` supplies the
+/// DTR knobs (heuristic/policy/index); each shard worker gets `base` plus
+/// its own freshly leased gate from `pool`.
+pub fn run<F>(
+    pool: &ServePool,
+    cfg: &FrontendConfig,
+    base: &dtr::Config,
+    client: F,
+) -> Result<FrontendReport>
+where
+    F: FnOnce(&FrontendHandle<'_>),
+{
+    ensure!(!cfg.classes.is_empty(), "frontend: at least one tenant class required");
+    let sched = Scheduler::new(cfg.classes.len(), cfg.queue_cap);
+    let bus = EventBus::new();
+    let t0 = Instant::now();
+
+    let errors: Vec<String> = std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for (ci, class) in cfg.classes.iter().enumerate() {
+            for shard in 0..class.shards.max(1) {
+                let mut dcfg = base.clone();
+                dcfg.gate = Some(pool.lease());
+                let (sched, bus, class) = (&sched, &bus, *class);
+                let batch_max = cfg.batch_max;
+                workers.push(
+                    scope.spawn(move || worker_loop(sched, bus, ci, class, shard, dcfg, batch_max)),
+                );
+            }
+        }
+
+        let handle = FrontendHandle { sched: &sched, bus: &bus };
+        client(&handle);
+
+        sched.drain();
+        let mut errs = Vec::new();
+        for w in workers {
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errs.push(format!("{e:#}")),
+                Err(_) => errs.push("frontend worker panicked".to_string()),
+            }
+        }
+        errs
+    });
+
+    // A class whose every worker died may leave orphans behind; give them
+    // a terminal outcome so the ledger of requests stays balanced.
+    for req in sched.drain_leftovers() {
+        let now = bus.now_ns();
+        bus.record(RequestEvent {
+            id: req.id,
+            class: req.class,
+            op: req.op,
+            outcome: Outcome::Failed,
+            submit_ns: req.submit_ns,
+            start_ns: now,
+            done_ns: now,
+            queue_depth: req.depth,
+            batch: 0,
+        });
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+
+    // Workers (and their gates) are gone: the drained front-end must leave
+    // the arbiter ledger balanced.
+    pool.check_invariants().context("frontend drain left the arbiter ledger unbalanced")?;
+
+    let events = bus.take();
+    let kinds: Vec<&'static str> = cfg.classes.iter().map(|c| c.kind.name()).collect();
+    let (classes, total) = summarize(&events, &kinds, wall_ns);
+    Ok(FrontendReport { wall_ns, classes, total, events, errors })
+}
+
+/// One shard worker: build the class driver under this shard's leased
+/// gate, then serve batches until drained. A failed build does not stall
+/// the drain — the worker keeps consuming its queue, failing requests,
+/// and surfaces the build error to the report.
+fn worker_loop(
+    sched: &Scheduler,
+    bus: &EventBus,
+    ci: usize,
+    class: ClassSpec,
+    shard: usize,
+    dcfg: dtr::Config,
+    batch_max: usize,
+) -> Result<()> {
+    let mut driver = None;
+    let mut build_err = None;
+    match TenantDriver::build(class.kind, dcfg, class.seed + shard as u64) {
+        Ok(d) => driver = Some(d),
+        Err(e) => build_err = Some(e),
+    }
+    while let Some(batch) = sched.next_batch(ci, batch_max) {
+        let bsize = batch.len();
+        for req in batch {
+            let start_ns = bus.now_ns();
+            let outcome = match driver.as_mut() {
+                Some(d) => match run_request(d, req.op) {
+                    Ok(()) => Outcome::Completed,
+                    Err(_) => Outcome::Failed,
+                },
+                None => Outcome::Failed,
+            };
+            bus.record(RequestEvent {
+                id: req.id,
+                class: ci,
+                op: req.op,
+                outcome,
+                submit_ns: req.submit_ns,
+                start_ns,
+                done_ns: bus.now_ns(),
+                queue_depth: req.depth,
+                batch: bsize,
+            });
+        }
+    }
+    match build_err {
+        Some(e) => {
+            Err(e.context(format!("building {} driver for class {ci}", class.kind.name())))
+        }
+        None => Ok(()),
+    }
+}
+
+fn run_request(driver: &mut TenantDriver, op: RequestOp) -> Result<()> {
+    match op {
+        RequestOp::Infer => driver.infer().map(|_| ()),
+        RequestOp::FineTune => driver.step().map(|_| ()),
+        RequestOp::Probe => {
+            let _ = driver.probe();
+            Ok(())
+        }
+    }
+}
+
+/// Bursty open-loop load: one client thread per class submits
+/// `per_class` requests in random bursts (1–4 requests, then a short
+/// random pause) with a serving-shaped op mix (~50% infer, ~40%
+/// fine-tune, ~10% probe). Deterministic in `seed` up to scheduling.
+pub fn drive_bursty(handle: &FrontendHandle<'_>, classes: usize, per_class: usize, seed: u64) {
+    std::thread::scope(|scope| {
+        for ci in 0..classes {
+            let mut rng = Rng::new(seed ^ (0x9E37_79B9 + 131 * ci as u64));
+            scope.spawn(move || {
+                let mut sent = 0usize;
+                while sent < per_class {
+                    let burst = (1 + rng.index(4)).min(per_class - sent);
+                    for _ in 0..burst {
+                        let op = match rng.below(10) {
+                            0..=4 => RequestOp::Infer,
+                            5..=8 => RequestOp::FineTune,
+                            _ => RequestOp::Probe,
+                        };
+                        handle.submit(ci, op);
+                        sent += 1;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(50 + rng.below(400)));
+                }
+            });
+        }
+    });
+}
+
+/// [`run`] under the canonical bursty open-loop client — the scenario and
+/// bench entry point.
+pub fn serve_bursty(
+    pool: &ServePool,
+    cfg: &FrontendConfig,
+    base: &dtr::Config,
+    per_class: usize,
+    seed: u64,
+) -> Result<FrontendReport> {
+    run(pool, cfg, base, |h| drive_bursty(h, cfg.classes.len(), per_class, seed))
+}

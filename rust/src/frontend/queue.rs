@@ -1,0 +1,105 @@
+//! Bounded per-class admission queues — the backpressure half of the
+//! front-end. A queue either admits a request (recording the depth the
+//! client observed) or sheds it because it is exactly at cap; there is no
+//! unbounded growth and no blocking submit, so overload turns into
+//! explicit `Rejected` outcomes instead of latency collapse.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// Admission decision for one submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued; `depth` is the queue length *including* this request.
+    Enqueued { depth: usize },
+    /// Shed: the queue held `depth` requests, which is the cap. The shed
+    /// invariant (`depth == cap` on every rejection) is pinned by
+    /// `tests/stress_frontend.rs`.
+    Shed { depth: usize },
+}
+
+/// FIFO queue with a hard cap. Plain data — the scheduler's mutex guards
+/// it, so admission check + enqueue are one atomic decision.
+pub struct ClassQueue {
+    cap: usize,
+    items: VecDeque<Request>,
+}
+
+impl ClassQueue {
+    pub fn new(cap: usize) -> ClassQueue {
+        ClassQueue { cap: cap.max(1), items: VecDeque::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Admit or shed `req`. The request's `depth` field is stamped with
+    /// the post-enqueue depth on admission.
+    pub fn push(&mut self, mut req: Request) -> Admission {
+        if self.items.len() >= self.cap {
+            return Admission::Shed { depth: self.items.len() };
+        }
+        let depth = self.items.len() + 1;
+        req.depth = depth;
+        self.items.push_back(req);
+        Admission::Enqueued { depth }
+    }
+
+    /// Dequeue up to `max` requests in FIFO order (one worker batch).
+    pub fn pop_up_to(&mut self, max: usize) -> Vec<Request> {
+        let n = self.items.len().min(max.max(1));
+        self.items.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::request::RequestOp;
+
+    fn req(id: u64) -> Request {
+        Request { id, class: 0, op: RequestOp::Infer, submit_ns: 0, depth: 0 }
+    }
+
+    #[test]
+    fn sheds_exactly_at_cap() {
+        let mut q = ClassQueue::new(2);
+        assert_eq!(q.push(req(1)), Admission::Enqueued { depth: 1 });
+        assert_eq!(q.push(req(2)), Admission::Enqueued { depth: 2 });
+        // At cap: every further push sheds, always reporting depth == cap.
+        assert_eq!(q.push(req(3)), Admission::Shed { depth: 2 });
+        assert_eq!(q.push(req(4)), Admission::Shed { depth: 2 });
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pops_fifo_batches() {
+        let mut q = ClassQueue::new(8);
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        let batch = q.pop_up_to(3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.pop_up_to(10).len(), 2);
+        assert!(q.is_empty());
+        // Freed capacity readmits.
+        assert_eq!(q.push(req(9)), Admission::Enqueued { depth: 1 });
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut q = ClassQueue::new(0);
+        assert_eq!(q.push(req(1)), Admission::Enqueued { depth: 1 });
+        assert_eq!(q.push(req(2)), Admission::Shed { depth: 1 });
+    }
+}

@@ -1,0 +1,104 @@
+//! Request vocabulary: what clients submit and what the front-end reports
+//! back per request.
+
+use crate::serve::{TenantKind, TenantSpec};
+
+/// What a request asks its tenant class to do. All three reuse the
+/// [`crate::serve::TenantDriver`] ops, so a request stream exercises the
+/// same sessions (and the same arbiter leases) as a training tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOp {
+    /// Budgeted forward-only pass (serving): tokens in, loss/logit scalar
+    /// out, activations evictable under the shard's lease.
+    Infer,
+    /// One full fine-tuning step (forward + backward + optimizer).
+    FineTune,
+    /// Unbudgeted fixed-batch probe loss (health check; dynamic tenants).
+    Probe,
+}
+
+impl RequestOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestOp::Infer => "infer",
+            RequestOp::FineTune => "finetune",
+            RequestOp::Probe => "probe",
+        }
+    }
+}
+
+/// One queued request. Built by the scheduler at admission; `submit_ns`
+/// and `depth` (queue depth *after* enqueue) are recorded at that moment
+/// so latency and backpressure are measured from the client's perspective.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Index into the run's class list.
+    pub class: usize,
+    pub op: RequestOp,
+    /// Event-bus timestamp at admission.
+    pub submit_ns: u64,
+    /// Queue depth observed when this request was admitted.
+    pub depth: usize,
+}
+
+/// Terminal state of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Completed,
+    /// Shed at admission: its class queue was at cap (backpressure). The
+    /// request never touched a shard.
+    Rejected,
+    /// Admitted but its driver errored (e.g. infeasible budget) or its
+    /// class lost every worker before the drain finished.
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Rejected => "rejected",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
+/// One tenant class: a model kind served by `shards` dedicated shard
+/// workers, each with its own `TenantDriver` and arbiter lease. Requests
+/// of a class may run on any of its shards — that is the scheduler's
+/// load-balancing degree of freedom.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassSpec {
+    pub kind: TenantKind,
+    /// Weight/data seed; shard `j` of a class derives `seed + j` so its
+    /// driver streams decorrelated batches.
+    pub seed: u64,
+    pub shards: usize,
+}
+
+impl ClassSpec {
+    /// The canonical mixed class list (transformer, LSTM, TreeLSTM, ...),
+    /// one shard per class.
+    pub fn mixed(n: usize) -> Vec<ClassSpec> {
+        (0..n)
+            .map(|i| ClassSpec {
+                kind: TenantKind::mixed(i),
+                seed: 0xF0_5EED + 41 * i as u64,
+                shards: 1,
+            })
+            .collect()
+    }
+
+    /// Flatten classes into one `TenantSpec` per shard worker — the unit
+    /// [`crate::serve::fleet_budget`] sizes budgets over.
+    pub fn tenant_specs(classes: &[ClassSpec]) -> Vec<TenantSpec> {
+        let mut specs = Vec::new();
+        for c in classes {
+            for j in 0..c.shards.max(1) {
+                specs.push(TenantSpec { kind: c.kind, seed: c.seed + j as u64 });
+            }
+        }
+        specs
+    }
+}

@@ -1,0 +1,142 @@
+//! The scheduler: one mutex-guarded set of per-class queues plus a
+//! condvar that shard workers park on. Submits are non-blocking (admit or
+//! shed under the same lock), workers pull FIFO batches of same-class
+//! requests, and draining is a flag + broadcast — workers exit only once
+//! their queue is empty, so every admitted request reaches a terminal
+//! outcome.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::queue::{Admission, ClassQueue};
+use super::request::{Request, RequestOp};
+
+struct SchedState {
+    queues: Vec<ClassQueue>,
+    draining: bool,
+}
+
+pub struct Scheduler {
+    state: Mutex<SchedState>,
+    work: Condvar,
+    next_id: AtomicU64,
+}
+
+impl Scheduler {
+    pub fn new(classes: usize, queue_cap: usize) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(SchedState {
+                queues: (0..classes).map(|_| ClassQueue::new(queue_cap)).collect(),
+                draining: false,
+            }),
+            work: Condvar::new(),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Admit or shed one request. Non-blocking: the queue decides under
+    /// the scheduler lock and the caller gets the decision (plus the
+    /// request's id and admission timestamp) immediately.
+    pub fn submit(&self, class: usize, op: RequestOp, now_ns: u64) -> (Request, Admission) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, class, op, submit_ns: now_ns, depth: 0 };
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        if st.draining {
+            // The run is shutting down; treat like a full queue.
+            let depth = st.queues[class].len();
+            return (req, Admission::Shed { depth });
+        }
+        let admission = st.queues[class].push(req.clone());
+        drop(st);
+        if matches!(admission, Admission::Enqueued { .. }) {
+            // notify_all: the condvar is shared across classes, so a
+            // targeted notify_one could wake a worker of the wrong class
+            // and lose the wakeup.
+            self.work.notify_all();
+        }
+        (req, admission)
+    }
+
+    /// Block until a batch of up to `max` same-class requests is
+    /// available, or the scheduler is draining *and* the class queue is
+    /// empty (then `None`: the worker should exit).
+    pub fn next_batch(&self, class: usize, max: usize) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        loop {
+            if !st.queues[class].is_empty() {
+                return Some(st.queues[class].pop_up_to(max));
+            }
+            if st.draining {
+                return None;
+            }
+            st = self.work.wait(st).expect("scheduler poisoned");
+        }
+    }
+
+    /// Begin shutdown: stop admitting, wake every worker. Queued requests
+    /// still run (graceful drain).
+    pub fn drain(&self) {
+        self.state.lock().expect("scheduler poisoned").draining = true;
+        self.work.notify_all();
+    }
+
+    /// Pop everything still queued (used after workers have exited, to
+    /// give orphaned requests a terminal `Failed` outcome).
+    pub fn drain_leftovers(&self) -> Vec<Request> {
+        let mut st = self.state.lock().expect("scheduler poisoned");
+        let mut left = Vec::new();
+        for q in st.queues.iter_mut() {
+            left.extend(q.pop_up_to(usize::MAX));
+        }
+        left
+    }
+
+    pub fn depth(&self, class: usize) -> usize {
+        self.state.lock().expect("scheduler poisoned").queues[class].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batches_are_fifo_and_bounded() {
+        let sched = Scheduler::new(1, 8);
+        for _ in 0..5 {
+            let (_, adm) = sched.submit(0, RequestOp::Infer, 0);
+            assert!(matches!(adm, Admission::Enqueued { .. }));
+        }
+        let batch = sched.next_batch(0, 3).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(batch.windows(2).all(|w| w[0].id < w[1].id));
+        assert_eq!(sched.depth(0), 2);
+    }
+
+    #[test]
+    fn drain_wakes_blocked_workers_and_sheds_new_submits() {
+        let sched = Scheduler::new(2, 4);
+        thread::scope(|s| {
+            let h = s.spawn(|| sched.next_batch(1, 4));
+            // The worker parks on the empty queue; drain must wake it.
+            thread::sleep(std::time::Duration::from_millis(20));
+            sched.drain();
+            assert!(h.join().unwrap().is_none());
+        });
+        let (_, adm) = sched.submit(0, RequestOp::Probe, 0);
+        assert!(matches!(adm, Admission::Shed { .. }));
+    }
+
+    #[test]
+    fn drain_lets_queued_work_finish_first() {
+        let sched = Scheduler::new(1, 4);
+        sched.submit(0, RequestOp::Infer, 0);
+        sched.submit(0, RequestOp::FineTune, 0);
+        sched.drain();
+        // Queued requests still come out before the worker is told to exit.
+        assert_eq!(sched.next_batch(0, 1).unwrap().len(), 1);
+        assert_eq!(sched.next_batch(0, 4).unwrap().len(), 1);
+        assert!(sched.next_batch(0, 4).is_none());
+    }
+}

@@ -40,6 +40,11 @@
 //!   out revocable leases and reclaims by evicting the globally
 //!   least-valuable tensor across shards. N=1 serving is decision-exact
 //!   vs. a plain session.
+//! * **Request front-end** ([`frontend`]) — an event-loop layer that
+//!   multiplexes N concurrent client streams of short requests (inference
+//!   / fine-tune / probe) onto the shard fleet: bounded per-class queues
+//!   with shed-on-overload admission control, a batching scheduler, and an
+//!   event bus reporting requests/sec and p50/p95/p99 latency per class.
 //! * **Experiments** (`repro::`, `sim::`, `graphs::`, `baselines::`) — the
 //!   paper's figures/tables over the simulator and the engine.
 //!
@@ -74,6 +79,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod dtr;
 pub mod exec;
+pub mod frontend;
 pub mod graphs;
 pub mod repro;
 pub mod runtime;

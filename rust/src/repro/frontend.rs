@@ -1,0 +1,91 @@
+//! `dtr-repro frontend` — the request front-end scenario: bursty
+//! open-loop clients (one stream per tenant class) submit inference /
+//! fine-tune / probe requests through the bounded-queue scheduler onto
+//! shard workers under **one** arbitrated global budget. Emits one CSV
+//! row per tenant class plus an aggregate row per arbiter policy:
+//! submitted/completed/rejected/failed counts, requests/sec, p50/p95/p99
+//! latency, and mean batch size.
+
+use anyhow::Result;
+
+use crate::coordinator::TrainConfig;
+use crate::dtr;
+use crate::frontend::{frontend_budget, serve_bursty, ClassMetrics, FrontendConfig};
+use crate::serve::{ArbiterPolicy, ServePool};
+use crate::util::csv::{f, CsvOut};
+
+/// Requests submitted per class (per policy run).
+const PER_CLASS: usize = 24;
+const SEED: u64 = 0xF0_11;
+
+fn ns_to_ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+fn metrics_row(
+    out: &mut CsvOut,
+    policy: ArbiterPolicy,
+    label: &str,
+    m: &ClassMetrics,
+) -> Result<()> {
+    out.row(&[
+        policy.name().to_string(),
+        label.to_string(),
+        m.kind.to_string(),
+        m.submitted.to_string(),
+        m.completed.to_string(),
+        m.rejected.to_string(),
+        m.failed.to_string(),
+        f(m.requests_per_sec),
+        f(ns_to_ms(m.p50_ns)),
+        f(ns_to_ms(m.p95_ns)),
+        f(ns_to_ms(m.p99_ns)),
+        f(ns_to_ms(m.max_ns)),
+        f(m.mean_batch),
+    ])?;
+    Ok(())
+}
+
+/// Run the front-end scenario from the coordinator config: `tenants`
+/// (class count), `queue_cap`, `budget_ratio` (fraction of summed shard
+/// headroom), and the DTR knobs. One run per arbiter policy.
+pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy]) -> Result<()> {
+    let mut cfg = FrontendConfig::mixed(tc.tenants.max(1));
+    cfg.queue_cap = tc.queue_cap;
+    let pct = (tc.budget_ratio.unwrap_or(1.0).clamp(0.01, 1.0) * 100.0) as u64;
+    let budget = frontend_budget(&cfg.classes, pct)?;
+    let base = dtr::Config {
+        heuristic: tc.heuristic,
+        policy: tc.policy,
+        index: tc.index,
+        ..dtr::Config::default()
+    };
+    out.row(&[
+        "arbiter",
+        "class",
+        "kind",
+        "submitted",
+        "completed",
+        "rejected",
+        "failed",
+        "requests_per_sec",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "max_ms",
+        "mean_batch",
+    ])?;
+    for &policy in policies {
+        let shards: usize = cfg.classes.iter().map(|c| c.shards.max(1)).sum();
+        let pool = ServePool::new(budget, policy, shards);
+        let report = serve_bursty(&pool, &cfg, &base, PER_CLASS, SEED)?;
+        for (ci, m) in report.classes.iter().enumerate() {
+            metrics_row(out, policy, &ci.to_string(), m)?;
+        }
+        metrics_row(out, policy, "all", &report.total)?;
+        for e in &report.errors {
+            eprintln!("frontend worker error ({}): {e}", policy.name());
+        }
+    }
+    Ok(())
+}

@@ -6,6 +6,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod formal;
+pub mod frontend;
 pub mod serve;
 pub mod tables;
 
@@ -43,6 +44,11 @@ system commands:
              mix) on worker threads under ONE global budget
              [--tenants 4 --arbiter static|global (default: both policies)
               --steps 10 --budget-ratio 0.6 --heuristic h_dtr_eq]
+  frontend   request front-end: bursty per-class client streams (infer/
+             fine-tune/probe) through bounded queues onto shard workers
+             under ONE global budget; reports requests/sec + p50/p95/p99
+             [--tenants 4 --arbiter static|global (default: both policies)
+              --queue-cap 64 --budget-ratio 0.6 --heuristic h_dtr_eq]
   train      train the transformer LM under a DTR budget (budget-ratio is
              a fraction of the non-pinned headroom; floor is ~0.6)
              [--config cfg.json --steps 50 --budget-ratio 0.8
@@ -151,6 +157,26 @@ pub fn dispatch() -> Result<()> {
                 crate::serve::ArbiterPolicy::all().to_vec()
             };
             serve::default_run(&mut out, &tc, &policies)?;
+        }
+        "frontend" => {
+            let mut tc = TrainConfig::load(&args)?;
+            // Same defaulting contract as `serve`: a config file or an
+            // explicit --arbiter pins the policy; otherwise sweep both.
+            let pinned_policy = args.get("arbiter").is_some() || args.get("config").is_some();
+            if args.get("config").is_none() {
+                if args.get("budget-ratio").is_none() {
+                    tc.budget_ratio = Some(0.6);
+                }
+                if args.get("tenants").is_none() {
+                    tc.tenants = 4;
+                }
+            }
+            let policies: Vec<crate::serve::ArbiterPolicy> = if pinned_policy {
+                vec![tc.arbiter]
+            } else {
+                crate::serve::ArbiterPolicy::all().to_vec()
+            };
+            frontend::default_run(&mut out, &tc, &policies)?;
         }
         "train" => {
             let cfg = TrainConfig::load(&args)?;

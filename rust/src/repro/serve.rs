@@ -18,7 +18,8 @@ use crate::util::csv::{f, CsvOut};
 /// knobs (heuristic, policy, index).
 pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy]) -> Result<()> {
     let specs = TenantSpec::fleet(tc.tenants.max(1));
-    let pct = (tc.budget_ratio.unwrap_or(1.0).clamp(0.05, 4.0) * 100.0) as u64;
+    // fleet_budget validates pct ∈ 1..=100, so clamp the ratio into (0, 1].
+    let pct = (tc.budget_ratio.unwrap_or(1.0).clamp(0.01, 1.0) * 100.0) as u64;
     let budget = fleet_budget(&specs, pct)?;
     let base = dtr::Config {
         heuristic: tc.heuristic,

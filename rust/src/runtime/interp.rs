@@ -34,11 +34,17 @@ pub struct InterpExecutor {
     /// everything inline; any value is bit-identical (threads partition
     /// disjoint output rows, see `runtime/kernels`).
     threads: usize,
+    /// Route `block_fwd`/`block_bwd` through the fused layernorm /
+    /// flash-attention kernels (`kernels::fused`). Off by default: the
+    /// fused attention's online softmax reassociates its reductions, so
+    /// fused results are tolerance-equivalent to the reference, not
+    /// bitwise — `false` keeps the pre-fusion bit-exact traces.
+    fused: bool,
 }
 
 impl InterpExecutor {
     pub fn new(cfg: ModelConfig) -> Result<InterpExecutor> {
-        Ok(InterpExecutor { manifest: Manifest::synthesize(cfg)?, cfg, threads: 1 })
+        Ok(InterpExecutor { manifest: Manifest::synthesize(cfg)?, cfg, threads: 1, fused: false })
     }
 
     /// Interpreter over the dynamic-model (LSTM/TreeLSTM) op family. The
@@ -48,7 +54,7 @@ impl InterpExecutor {
     pub fn rnn(cfg: RnnConfig) -> Result<InterpExecutor> {
         let manifest = Manifest::synthesize_rnn(cfg)?;
         let mc = manifest.config;
-        Ok(InterpExecutor { manifest, cfg: mc, threads: 1 })
+        Ok(InterpExecutor { manifest, cfg: mc, threads: 1, fused: false })
     }
 
     /// Set the intra-op thread count (0 is treated as 1).
@@ -59,6 +65,16 @@ impl InterpExecutor {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Opt in to the fused block kernels (see the `fused` field).
+    pub fn with_fused(mut self, fused: bool) -> InterpExecutor {
+        self.fused = fused;
+        self
+    }
+
+    pub fn fused(&self) -> bool {
+        self.fused
     }
 }
 
@@ -92,8 +108,14 @@ impl Executor for InterpExecutor {
         match op {
             "embed_fwd" => embed_fwd(&cfg, inputs[0], inputs[1]),
             "embed_bwd" => embed_bwd(&cfg, inputs[0], inputs[1]),
-            "block_fwd" => block_fwd(&cfg, inputs, t),
-            "block_bwd" => block_bwd(&cfg, inputs, t),
+            "block_fwd" => {
+                if self.fused {
+                    block_fwd_fused(&cfg, inputs, t)
+                } else {
+                    block_fwd(&cfg, inputs, t)
+                }
+            }
+            "block_bwd" => block_bwd(&cfg, inputs, t, self.fused),
             "loss_fwd" => loss_fwd(&cfg, inputs[0], inputs[1], inputs[2], t),
             "loss_bwd" => loss_bwd(&cfg, inputs[0], inputs[1], inputs[2], t),
             "fused_ln_fwd" => fused_ln_fwd(&cfg, inputs, t),
@@ -251,6 +273,9 @@ struct BlockInter {
     att: Vec<f32>,
     /// Per-head context re-interleaved to `[b*s, d]`.
     ctx: Vec<f32>,
+    /// Attention-sublayer residual output `x + ctx @ wo` — the fused LN2
+    /// backward recomputes its row stats from this instead of xhat2/rstd2.
+    x1: Vec<f32>,
     xhat2: Vec<f32>,
     rstd2: Vec<f32>,
     h2: Vec<f32>,
@@ -338,12 +363,80 @@ fn block_forward(cfg: &ModelConfig, x: &[f32], params: &[&HostTensor], t: usize)
         y[i] = x1[i] + ff2[i];
     }
 
-    BlockInter { h1, xhat1, rstd1, qkv, att, ctx, xhat2, rstd2, h2, ff1, g, y }
+    BlockInter { h1, xhat1, rstd1, qkv, att, ctx, x1, xhat2, rstd2, h2, ff1, g, y }
 }
 
 fn block_fwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
     let inter = block_forward(cfg, &inputs[0].data, &inputs[1..7], t);
     Ok(vec![HostTensor::new(vec![cfg.batch, cfg.seq, cfg.d_model], inter.y)])
+}
+
+/// `block_fwd` routed through the fused kernels (`InterpExecutor::fused`):
+/// both layernorms via [`fused::layernorm`] (bitwise-equal accumulation
+/// order to `ln_fwd`) and the attention via [`fused::causal_attention`]
+/// (flash-style online softmax — tolerance-equivalent, not bitwise). The
+/// interleaved `[bs, 3d]` qkv columns are gathered into contiguous
+/// per-head `[b*nh, s, dh]` q/k/v slabs for the fused kernel and the
+/// context heads re-interleaved back to `[bs, d]` rows afterwards.
+fn block_fwd_fused(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
+    let (b, s, d, f, nh) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.n_heads);
+    let dh = cfg.d_head();
+    let bs = b * s;
+    let bh = b * nh;
+    let x = &inputs[0].data;
+    let (ln1, wqkv, wo, ln2, w1, w2) = (
+        &inputs[1].data,
+        &inputs[2].data,
+        &inputs[3].data,
+        &inputs[4].data,
+        &inputs[5].data,
+        &inputs[6].data,
+    );
+
+    // Attention sublayer (pre-norm).
+    let h1 = fused::layernorm(x, &ln1[..d], &ln1[d..], bs, d, LN_EPS, t);
+    let qkv = matmul(&h1, wqkv, bs, d, 3 * d, t);
+    let mut q = vec![0.0f32; bh * s * dh];
+    let mut k = vec![0.0f32; bh * s * dh];
+    let mut v = vec![0.0f32; bh * s * dh];
+    for bi in 0..b {
+        for hi in 0..nh {
+            for i in 0..s {
+                let src = (bi * s + i) * 3 * d + hi * dh;
+                let dst = ((bi * nh + hi) * s + i) * dh;
+                q[dst..dst + dh].copy_from_slice(&qkv[src..src + dh]);
+                k[dst..dst + dh].copy_from_slice(&qkv[src + d..src + d + dh]);
+                v[dst..dst + dh].copy_from_slice(&qkv[src + 2 * d..src + 2 * d + dh]);
+            }
+        }
+    }
+    let heads = fused::causal_attention(&q, &k, &v, bh, s, dh, t);
+    let mut ctx = vec![0.0f32; bs * d];
+    for bi in 0..b {
+        for hi in 0..nh {
+            for i in 0..s {
+                let src = ((bi * nh + hi) * s + i) * dh;
+                let dst = (bi * s + i) * d + hi * dh;
+                ctx[dst..dst + dh].copy_from_slice(&heads[src..src + dh]);
+            }
+        }
+    }
+    let proj = matmul(&ctx, wo, bs, d, d, t);
+    let mut x1 = vec![0.0f32; bs * d];
+    for i in 0..bs * d {
+        x1[i] = x[i] + proj[i];
+    }
+
+    // MLP sublayer (pre-norm, tanh-GELU).
+    let h2 = fused::layernorm(&x1, &ln2[..d], &ln2[d..], bs, d, LN_EPS, t);
+    let ff1 = matmul(&h2, w1, bs, d, f, t);
+    let g: Vec<f32> = ff1.iter().map(|&u| gelu(u)).collect();
+    let ff2 = matmul(&g, w2, bs, f, d, t);
+    let mut y = vec![0.0f32; bs * d];
+    for i in 0..bs * d {
+        y[i] = x1[i] + ff2[i];
+    }
+    Ok(vec![HostTensor::new(vec![b, s, d], y)])
 }
 
 /// Fused layernorm (`kernels::fused::layernorm`) as a standalone manifest
@@ -365,7 +458,18 @@ fn fused_attn_fwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result
     Ok(vec![HostTensor::new(vec![b, nh, s, dh], y)])
 }
 
-fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<HostTensor>> {
+/// Block backward. With `fused_ln` set, the two layernorm backwards run
+/// through [`fused::layernorm_bwd`], which recomputes row stats from the
+/// pre-norm activations (`x`, `x1`) instead of consuming the stored
+/// `xhat`/`rstd` — same accumulation order, so the gradients stay bitwise
+/// equal to the reference path; the fused opt-in only perturbs the
+/// *forward* attention values.
+fn block_bwd(
+    cfg: &ModelConfig,
+    inputs: &[&HostTensor],
+    t: usize,
+    fused_ln: bool,
+) -> Result<Vec<HostTensor>> {
     let (b, s, d, f, nh) = (cfg.batch, cfg.seq, cfg.d_model, cfg.d_ff, cfg.n_heads);
     let dh = cfg.d_head();
     let bs = b * s;
@@ -392,7 +496,11 @@ fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<
     }
     let dh2 = matmul_bt(&dff1, w1, bs, f, d, t);
     let dw1 = matmul_at(&it.h2, &dff1, bs, d, f, t);
-    let (dx1_ln, dgamma2, dbeta2) = ln_bwd(&dh2, &it.xhat2, &it.rstd2, &ln2[..d], bs, d);
+    let (dx1_ln, dgamma2, dbeta2) = if fused_ln {
+        fused::layernorm_bwd(&it.x1, &ln2[..d], &dh2, bs, d, LN_EPS)
+    } else {
+        ln_bwd(&dh2, &it.xhat2, &it.rstd2, &ln2[..d], bs, d)
+    };
     for i in 0..bs * d {
         dx1[i] += dx1_ln[i];
     }
@@ -465,7 +573,11 @@ fn block_bwd(cfg: &ModelConfig, inputs: &[&HostTensor], t: usize) -> Result<Vec<
     // qkv = h1 @ wqkv
     let dh1 = matmul_bt(&dqkv, wqkv, bs, 3 * d, d, t);
     let dwqkv = matmul_at(&it.h1, &dqkv, bs, d, 3 * d, t);
-    let (dx_ln, dgamma1, dbeta1) = ln_bwd(&dh1, &it.xhat1, &it.rstd1, &ln1[..d], bs, d);
+    let (dx_ln, dgamma1, dbeta1) = if fused_ln {
+        fused::layernorm_bwd(x, &ln1[..d], &dh1, bs, d, LN_EPS)
+    } else {
+        ln_bwd(&dh1, &it.xhat1, &it.rstd1, &ln1[..d], bs, d)
+    };
     for i in 0..bs * d {
         dx[i] += dx_ln[i];
     }
@@ -953,6 +1065,48 @@ mod tests {
         let a = ex.execute("block_fwd", &ins).unwrap();
         let b = ex.execute("block_fwd", &ins).unwrap();
         assert_eq!(a[0].data, b[0].data);
+    }
+
+    /// The fused opt-in: `block_fwd` under `with_fused(true)` agrees with
+    /// the reference path to online-softmax tolerance (the only
+    /// reassociated reduction), `with_fused(false)` is bitwise the
+    /// reference, and the fused `block_bwd` is bitwise the reference
+    /// backward (its layernorm backward shares the accumulation order).
+    #[test]
+    fn fused_block_matches_reference_within_tolerance() {
+        let cfg = ModelConfig::tiny();
+        let mut plain = exec(cfg);
+        let mut off = InterpExecutor::new(cfg).unwrap().with_fused(false);
+        let mut on = InterpExecutor::new(cfg).unwrap().with_fused(true);
+        let mut rng = Rng::new(21);
+        let x = randn_host(&mut rng, &[cfg.batch, cfg.seq, cfg.d_model], 0.5);
+        let shapes = cfg.param_shapes();
+        let ps: Vec<HostTensor> = ["ln", "wqkv", "wo", "ln", "w1", "w2"]
+            .iter()
+            .map(|&g| init_param(g, &shapes[g], &mut rng))
+            .collect();
+        let mut ins = vec![&x];
+        ins.extend(ps.iter());
+
+        let a = plain.execute("block_fwd", &ins).unwrap();
+        let b = off.execute("block_fwd", &ins).unwrap();
+        assert_eq!(a[0].data, b[0].data, "fused=false must stay bit-exact");
+
+        let c = on.execute("block_fwd", &ins).unwrap();
+        assert_ne!(a[0].data, c[0].data, "fused attention should reassociate");
+        for (i, (&r, &f)) in a[0].data.iter().zip(&c[0].data).enumerate() {
+            let tol = 1e-4 * r.abs().max(1.0);
+            assert!((r - f).abs() <= tol, "elem {i}: ref {r} vs fused {f}");
+        }
+
+        let dy = randn_host(&mut rng, &[cfg.batch, cfg.seq, cfg.d_model], 1.0);
+        let mut bins = ins.clone();
+        bins.push(&dy);
+        let ga = plain.execute("block_bwd", &bins).unwrap();
+        let gb = on.execute("block_bwd", &bins).unwrap();
+        for (r, f) in ga.iter().zip(&gb) {
+            assert_eq!(r.data, f.data, "fused LN backward must stay bitwise");
+        }
     }
 
     /// The full-model analytic gradient must match the finite-difference

@@ -59,7 +59,8 @@ use anyhow::Result;
 
 pub use arbiter::{ArbiterPolicy, BudgetArbiter, LeaseGate, ShardMeter, ShardSnapshot};
 pub use tenants::{
-    fleet_budget, run_tenants, tenant_envelope, TenantDriver, TenantKind, TenantReport, TenantSpec,
+    fleet_budget, run_tenants, tenant_envelope, ServeError, TenantDriver, TenantKind,
+    TenantReport, TenantSpec,
 };
 
 use crate::dtr::GateRef;

@@ -21,6 +21,17 @@ use crate::runtime::{InterpExecutor, ModelConfig, RnnConfig};
 /// same probe seed the dynamic-trainer unit tests pin descent with).
 const PROBE_SEED: u64 = 99;
 
+/// Typed serve-layer errors (callers can downcast from `anyhow::Error`).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ServeError {
+    /// `fleet_budget` percentage outside `1..=100`: 0 would price every
+    /// tenant at its bare pinned floor (nothing evictable fits — a
+    /// degenerate budget that deadlocks the first activation), and >100
+    /// over-commits beyond the measured peaks the formula is defined on.
+    #[error("fleet budget pct must be in 1..=100, got {0}")]
+    BudgetPct(u64),
+}
+
 /// Which model a tenant serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TenantKind {
@@ -172,6 +183,18 @@ impl TenantDriver {
         }
     }
 
+    /// One budgeted forward-only inference pass on the driver's next data
+    /// batch, under the same gate/budget as training steps (activations
+    /// are evictable; the arbiter sees the allocation stream). Returns
+    /// the batch loss as the response payload.
+    pub fn infer(&mut self) -> Result<f32> {
+        match self {
+            TenantDriver::Transformer(e) => e.infer_step(),
+            TenantDriver::Lstm(t) => t.infer_step(),
+            TenantDriver::TreeLstm(t) => t.infer_step(),
+        }
+    }
+
     /// Unbudgeted fixed-batch probe loss (dynamic tenants only).
     pub fn probe(&self) -> Option<f32> {
         match self {
@@ -203,7 +226,12 @@ pub fn tenant_envelope(kind: TenantKind, seed: u64) -> Result<(u64, u64)> {
 /// One global budget sized at `pct`% of each tenant's non-pinned headroom,
 /// summed: `sum_i(floor_i + (peak_i - floor_i) * pct / 100)`. At 100 every
 /// tenant fits its own peak; below that, tenants genuinely compete.
+/// `pct` outside `1..=100` is rejected with [`ServeError::BudgetPct`]
+/// before any envelope is measured.
 pub fn fleet_budget(specs: &[TenantSpec], pct: u64) -> Result<u64> {
+    if pct == 0 || pct > 100 {
+        return Err(ServeError::BudgetPct(pct).into());
+    }
     let mut total = 0u64;
     for spec in specs {
         let (peak, floor) = tenant_envelope(spec.kind, spec.seed)?;
@@ -279,4 +307,37 @@ pub fn run_tenants(
             .map(|h| h.join().map_err(|_| anyhow::anyhow!("tenant thread panicked")))
             .collect()
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Boundary behaviour of the budget formula: 0 and >100 are typed
+    /// errors (caught before any envelope is measured), 1 and 100 are the
+    /// extreme legal rungs and still satisfy floor <= budget <= peak sum.
+    #[test]
+    fn fleet_budget_rejects_out_of_range_pct() {
+        let specs = [TenantSpec { kind: TenantKind::Transformer, seed: 7 }];
+        for bad in [0u64, 101, 400] {
+            let err = fleet_budget(&specs, bad).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ServeError>(),
+                Some(&ServeError::BudgetPct(bad)),
+                "pct {bad} must fail with the typed error"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_budget_boundary_pcts_bracket_the_envelope() {
+        let specs = [TenantSpec { kind: TenantKind::Transformer, seed: 7 }];
+        let (peak, floor) = tenant_envelope(specs[0].kind, specs[0].seed).unwrap();
+        assert!(floor < peak);
+        let at1 = fleet_budget(&specs, 1).unwrap();
+        let at100 = fleet_budget(&specs, 100).unwrap();
+        assert_eq!(at100, peak, "pct 100 prices the tenant at its full peak");
+        assert_eq!(at1, floor + (peak - floor) / 100);
+        assert!(at1 >= floor && at1 <= at100);
+    }
 }

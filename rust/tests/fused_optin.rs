@@ -1,0 +1,111 @@
+//! The fused-kernel opt-in (`TrainConfig::fused` → `InterpExecutor::
+//! with_fused`) and its compatibility contract:
+//!
+//! * `fused = false` (the default) is the pre-fusion executor, **bit
+//!   exact**: identical losses and identical DTR decision traces, so
+//!   existing pinned baselines stay valid.
+//! * `fused = true` swaps `block_fwd`/`block_bwd` onto the fused
+//!   layernorm / flash-attention kernels. The online softmax reassociates
+//!   reductions, so values shift at ~1e-4 — training must still descend,
+//!   and budgeted-vs-unbudgeted must stay bitwise *within* the fused
+//!   world (rematerialization replays the same fused kernels).
+
+use dtr::dtr::{Config, Heuristic};
+use dtr::exec::{Engine, Optimizer};
+use dtr::runtime::{InterpExecutor, ModelConfig};
+
+const STEPS: usize = 3;
+
+fn engine(fused: bool) -> Engine {
+    let exec = InterpExecutor::new(ModelConfig::tiny()).unwrap().with_fused(fused);
+    Engine::new(Box::new(exec), Config::default(), Optimizer::Adam).unwrap()
+}
+
+/// First budget rung (from loose to tight) at which a `fused`-flavored
+/// engine completes `STEPS` steps with at least one rematerialization,
+/// plus the per-step losses and final stats observed there.
+fn first_feasible_rung(fused: bool) -> (u64, Vec<f32>, dtr::dtr::Stats) {
+    let rungs = engine(fused).headroom_budgets(&[85, 75, 65, 55]).unwrap();
+    for budget in rungs {
+        let mut e = engine(fused);
+        e.dtr_cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        let mut losses = Vec::new();
+        let mut remats = 0u64;
+        let mut failed = false;
+        let mut stats = None;
+        for _ in 0..STEPS {
+            match e.train_step() {
+                Ok(r) => {
+                    assert!(r.stats.peak_memory <= budget, "budget exceeded");
+                    losses.push(r.loss);
+                    remats += r.stats.remat_count;
+                    stats = Some(r.stats);
+                }
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        if !failed && remats > 0 {
+            return (budget, losses, stats.unwrap());
+        }
+    }
+    panic!("no budget rung produced a completed, rematerializing fused={fused} run");
+}
+
+/// fused=false is the pre-fusion path: same losses bitwise and the same
+/// eviction/remat decision trace as a plain `Engine::interp` under the
+/// same budget.
+#[test]
+fn fused_off_is_decision_and_bit_exact() {
+    let (budget, off_losses, off_stats) = first_feasible_rung(false);
+    let mut plain =
+        Engine::interp(ModelConfig::tiny(), Config::default(), Optimizer::Adam).unwrap();
+    plain.dtr_cfg = Config { budget, heuristic: Heuristic::dtr_eq(), ..Config::default() };
+    let mut plain_losses = Vec::new();
+    let mut plain_stats = None;
+    for _ in 0..STEPS {
+        let r = plain.train_step().unwrap();
+        plain_losses.push(r.loss);
+        plain_stats = Some(r.stats);
+    }
+    assert_eq!(off_losses, plain_losses, "fused=false changed the numerics");
+    assert!(
+        plain_stats.unwrap().same_decisions(&off_stats),
+        "fused=false changed the decision trace"
+    );
+}
+
+/// fused=true still learns under a tight budget, and its first-step loss
+/// sits within kernel tolerance of the reference (the trajectories then
+/// drift as the ~1e-4 attention difference compounds through Adam).
+#[test]
+fn fused_on_descends_and_stays_within_tolerance() {
+    let (_, fused_losses, _) = first_feasible_rung(true);
+    assert!(fused_losses.iter().all(|l| l.is_finite()));
+    assert!(
+        fused_losses[STEPS - 1] < fused_losses[0],
+        "fused loss did not descend: {fused_losses:?}"
+    );
+
+    let mut reference = engine(false);
+    let ref_first = reference.train_step().unwrap().loss;
+    let fused_first = fused_losses[0];
+    let tol = 1e-2 * ref_first.abs().max(1.0);
+    assert!(
+        (ref_first - fused_first).abs() <= tol,
+        "fused first-step loss {fused_first} vs reference {ref_first}"
+    );
+}
+
+/// Rematerialization inside the fused world replays the same fused
+/// kernels: a budgeted fused run matches the unbudgeted fused run
+/// bitwise, step for step.
+#[test]
+fn budgeted_fused_matches_unbudgeted_fused_bitwise() {
+    let (_, budgeted, _) = first_feasible_rung(true);
+    let mut free = engine(true);
+    let free_losses: Vec<f32> = (0..STEPS).map(|_| free.train_step().unwrap().loss).collect();
+    assert_eq!(budgeted, free_losses, "budget changed the fused numerics");
+}

@@ -1,0 +1,159 @@
+//! Front-end stress: bursty concurrent request streams through the
+//! bounded-queue scheduler onto shard workers under one arbitrated
+//! budget. Pins the three properties from the front-end's contract:
+//!
+//! * **Budget**: a live sampler never sees resident bytes above the
+//!   global budget, under either arbiter policy.
+//! * **No starvation**: every admitted request reaches a terminal
+//!   outcome (submitted = completed + rejected + failed, with failed = 0
+//!   under a feasible budget), and the completed-latency tail is bounded
+//!   by the run itself (p99 <= wall clock — no request is left behind).
+//! * **Backpressure**: sheds happen *only* against a full queue — every
+//!   `Rejected` event records the queue depth it observed, and that depth
+//!   is exactly the configured cap; under gentle load nothing is shed.
+//!
+//! After every run the drained pool's ledger must be balanced
+//! (`check_invariants`) with zero bytes still leased.
+//!
+//! CI runs this file in release mode as well (debug is too slow to stress
+//! thread interleavings hard).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use dtr::dtr::{Config, Heuristic};
+use dtr::frontend::{frontend_budget, run, serve_bursty, FrontendConfig, Outcome, RequestOp};
+use dtr::serve::{ArbiterPolicy, ServePool};
+
+fn base() -> Config {
+    Config { heuristic: Heuristic::dtr_eq(), ..Config::default() }
+}
+
+#[test]
+fn bursty_streams_respect_budget_and_never_starve() {
+    for policy in ArbiterPolicy::all() {
+        let cfg = FrontendConfig::mixed(3);
+        let budget = frontend_budget(&cfg.classes, 70).expect("envelope");
+        let shards: usize = cfg.classes.iter().map(|c| c.shards).sum();
+        let pool = ServePool::new(budget, policy, shards);
+
+        // Live monitor: resident bytes across shards never exceed the
+        // global budget at any sampled instant.
+        let stop = Arc::new(AtomicBool::new(false));
+        let sampler = {
+            let stop = Arc::clone(&stop);
+            let arb = Arc::clone(pool.arbiter());
+            thread::spawn(move || {
+                let mut max_used = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    max_used = max_used.max(arb.used_bytes());
+                    thread::sleep(Duration::from_micros(200));
+                }
+                max_used
+            })
+        };
+
+        let report = serve_bursty(&pool, &cfg, &base(), 10, 0xBEEF).expect("frontend run");
+
+        stop.store(true, Ordering::Release);
+        let max_used = sampler.join().expect("sampler thread");
+        assert!(
+            max_used <= budget,
+            "{}: sampled {max_used} B resident > budget {budget} B",
+            policy.name()
+        );
+
+        assert!(report.errors.is_empty(), "{}: {:?}", policy.name(), report.errors);
+        let t = &report.total;
+        assert_eq!(
+            t.submitted,
+            t.completed + t.rejected + t.failed,
+            "{}: request accounting does not balance",
+            policy.name()
+        );
+        assert_eq!(t.failed, 0, "{}: requests failed under a feasible budget", policy.name());
+        assert_eq!(t.submitted, cfg.classes.len() * 10);
+        for (ci, m) in report.classes.iter().enumerate() {
+            assert!(m.completed > 0, "{}: class {ci} starved entirely", policy.name());
+            assert_eq!(m.completed + m.rejected, m.submitted, "class {ci} lost requests");
+        }
+        // Bounded tail: the slowest completed request finished within the
+        // run (its latency cannot exceed the wall clock), and the
+        // percentile order is sane.
+        assert!(t.p50_ns <= t.p95_ns && t.p95_ns <= t.p99_ns && t.p99_ns <= t.max_ns);
+        assert!(
+            t.max_ns <= report.wall_ns,
+            "{}: a completed request outlived the run",
+            policy.name()
+        );
+
+        assert_eq!(pool.used_bytes(), 0, "{}: drained run left bytes leased", policy.name());
+        pool.check_invariants().expect("drained ledger balanced");
+    }
+}
+
+/// Flood a cap-1 queue far faster than its single shard can serve: almost
+/// everything must shed, and every shed must have happened against a full
+/// queue (recorded depth == cap). The few admitted requests all complete.
+#[test]
+fn sheds_happen_only_against_a_full_queue() {
+    let mut cfg = FrontendConfig::mixed(1); // one transformer class, one shard
+    cfg.queue_cap = 1;
+    let budget = frontend_budget(&cfg.classes, 100).expect("envelope");
+    let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, 1);
+
+    let report = run(&pool, &cfg, &base(), |h| {
+        for _ in 0..400 {
+            h.submit(0, RequestOp::FineTune);
+        }
+    })
+    .expect("frontend run");
+
+    let t = &report.total;
+    assert_eq!(t.submitted, 400);
+    assert_eq!(t.submitted, t.completed + t.rejected + t.failed);
+    assert_eq!(t.failed, 0, "driver failed under an unconstrained budget");
+    assert!(t.completed >= 1, "nothing was ever admitted");
+    assert!(t.rejected > 0, "flood never overflowed the cap-1 queue");
+    for ev in &report.events {
+        if ev.outcome == Outcome::Rejected {
+            assert_eq!(
+                ev.queue_depth, cfg.queue_cap,
+                "request {} shed against a non-full queue",
+                ev.id
+            );
+        }
+    }
+
+    assert_eq!(pool.used_bytes(), 0);
+    pool.check_invariants().expect("drained ledger balanced");
+}
+
+/// Gentle load far below the cap: nothing is shed, everything completes —
+/// backpressure only engages at the cap, never earlier.
+#[test]
+fn gentle_load_is_never_shed() {
+    let cfg = FrontendConfig::mixed(2); // default queue_cap 64
+    let budget = frontend_budget(&cfg.classes, 100).expect("envelope");
+    let shards: usize = cfg.classes.iter().map(|c| c.shards).sum();
+    let pool = ServePool::new(budget, ArbiterPolicy::StaticSplit, shards);
+
+    let report = run(&pool, &cfg, &base(), |h| {
+        for i in 0..8 {
+            for ci in 0..2 {
+                assert!(h.submit(ci, if i % 2 == 0 { RequestOp::Infer } else { RequestOp::Probe }));
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+    })
+    .expect("frontend run");
+
+    let t = &report.total;
+    assert_eq!(t.submitted, 16);
+    assert_eq!(t.rejected, 0, "gentle load was shed below the cap");
+    assert_eq!(t.completed, 16);
+    assert_eq!(pool.used_bytes(), 0);
+    pool.check_invariants().expect("drained ledger balanced");
+}

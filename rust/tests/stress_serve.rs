@@ -12,6 +12,9 @@
 //!   (`used == Stats::memory`, `lease == used + headroom`), composed with
 //!   each runtime's `check_invariants` (which ties `Stats::memory` to the
 //!   graph's resident bytes and the pool-byte counter).
+//! * `tenant_churn_refunds_the_ledger_exactly`: tenants joining and
+//!   leaving mid-run — teardown refunds the arbiter exactly and joiners
+//!   reuse the refunded budget.
 //!
 //! CI runs this file in release mode as well (debug is too slow to stress
 //! thread interleavings hard).
@@ -185,6 +188,61 @@ fn ledger_equals_shard_accounting_under_random_tapes() {
     drop(shards);
     pool.check_invariants().unwrap();
     assert_eq!(pool.used_bytes(), 0);
+}
+
+/// Tenant churn: shards join and leave mid-run. A departing tenant's
+/// teardown (sessions + gate dropped) must refund the arbiter *exactly* —
+/// the pool's used gauge drops by precisely the departing shard's
+/// resident bytes — and later joiners run against the refunded pool with
+/// the ledger balanced throughout.
+#[test]
+fn tenant_churn_refunds_the_ledger_exactly() {
+    let h = Heuristic::dtr_eq();
+    let pool = ServePool::new(400, ArbiterPolicy::GlobalReclaim, 3);
+    let mut shards: Vec<ShardTape> =
+        (0..2).map(|i| ShardTape::new(&pool, 0xC33 + i as u64, h)).collect();
+    for _ in 0..40 {
+        for s in shards.iter_mut() {
+            s.tick();
+        }
+    }
+    pool.check_invariants().unwrap();
+
+    // A third tenant joins mid-run and immediately contends for budget.
+    shards.push(ShardTape::new(&pool, 0xC41, h));
+    for _ in 0..40 {
+        for s in shards.iter_mut() {
+            s.tick();
+        }
+    }
+    pool.check_invariants().unwrap();
+
+    // The oldest tenant leaves mid-run: exact refund, nothing stranded.
+    let departing = shards.remove(0);
+    let before = pool.used_bytes();
+    let leaving = departing.session.memory();
+    assert!(leaving > 0, "departing shard held no bytes; churn is vacuous");
+    drop(departing);
+    assert_eq!(
+        pool.used_bytes(),
+        before - leaving,
+        "teardown refunded a different amount than the departing shard held"
+    );
+    pool.check_invariants().unwrap();
+
+    // Survivors plus a fresh joiner reuse the refunded bytes.
+    shards.push(ShardTape::new(&pool, 0xC47, h));
+    for _ in 0..40 {
+        for s in shards.iter_mut() {
+            s.tick();
+        }
+    }
+    pool.check_invariants().unwrap();
+    let evictions: u64 = shards.iter().map(|s| s.session.stats().evict_count).sum();
+    assert!(evictions > 0, "churned pool never bound; stress is vacuous");
+    drop(shards);
+    pool.check_invariants().unwrap();
+    assert_eq!(pool.used_bytes(), 0, "churn left bytes leased after full teardown");
 }
 
 /// Static split over an uneven budget: the division remainder is spread
