@@ -24,8 +24,10 @@ bench:
 # Machine-readable perf trajectory, committed as BENCH_*.json baselines in
 # the repo root (CI also uploads fresh copies as workflow artifacts):
 #  * BENCH_dtr.json   — bench_dtr kernel section (scalar vs row-kernel
-#    GEMMs at the transformer shapes) + eviction-scaling (ns/eviction at
-#    growing pools, reference scan vs policy index);
+#    GEMMs at the transformer shapes, threads 1/2/4) + eviction-scaling
+#    (ns/eviction at growing pools, per heuristic: reference scan vs
+#    cached-numerator scan vs the differential kinetic index, with a
+#    100k/1M large-pool tier for the staleness-bearing h_dtr family);
 #  * BENCH_serve.json — bench_serve multi-tenant scaling (aggregate
 #    steps/sec + remat overhead vs tenant count, static-split vs
 #    global-reclaim arbitration) + front-end requests/sec and p50/p99
@@ -42,7 +44,9 @@ bench-json-serve:
 	cargo bench --bench bench_serve -- --json BENCH_serve.json
 
 # CI-sized regeneration of the full trajectory (small pools, few iters,
-# fewer tenants) — cheap enough to run on every push.
+# fewer tenants) — cheap enough to run on every push. Still includes the
+# reduced 100k-pool differential-vs-cached eviction sweep (CI greps for
+# those rows) so ns/eviction regressions are visible per push.
 bench-json-quick:
 	cargo bench --bench bench_dtr -- --json BENCH_dtr.json --quick
 	cargo bench --bench bench_serve -- --json BENCH_serve.json --quick

@@ -135,7 +135,8 @@ impl<B: Backend + 'static> Session<B> {
     }
 
     /// Name of the victim-selection index the runtime resolved from
-    /// `Config::index` (e.g. `"staleness_list"` for `h_lru` under the
+    /// `Config::index` (e.g. `"staleness_list"` for `h_lru` and
+    /// `"differential"` for the staleness-bearing `h_dtr` family under the
     /// default `PolicyKind::Auto`; `"scan"` for the reference path).
     pub fn policy_index(&self) -> &'static str {
         self.rt().index_name()

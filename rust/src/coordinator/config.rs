@@ -28,7 +28,11 @@ pub struct TrainConfig {
     pub budget_ratio: Option<f64>,
     pub heuristic: Heuristic,
     pub policy: DeallocPolicy,
-    /// Victim-selection index family (auto / scan / indexed).
+    /// Victim-selection index family (auto / scan / indexed / cached /
+    /// differential — `cached` pins the O(pool) cached-numerator scan,
+    /// `differential` forces the kinetic epoch-tier index for every
+    /// staleness-bearing heuristic; `auto` already picks differential for
+    /// the `h_DTR` family).
     pub index: PolicyKind,
     pub optimizer: Optimizer,
     pub sqrt_sample: bool,
@@ -358,6 +362,12 @@ mod tests {
         );
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.index, PolicyKind::Indexed);
+        let p = write_tmp(r#"{"index": "differential"}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.index, PolicyKind::Differential);
+        let p = write_tmp(r#"{"index": "cached"}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.index, PolicyKind::Cached);
         let bad = write_tmp(r#"{"index": "fancy"}"#);
         assert!(TrainConfig::from_file(&bad).is_err());
     }

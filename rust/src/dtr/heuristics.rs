@@ -305,15 +305,45 @@ pub fn finish_score(h: Heuristic, cost: f64, size: u64, last_access: u64, clock:
         Heuristic::EStarCount => cost,
         Heuristic::Msps => (cost + 1.0) / (size.max(1) as f64),
         Heuristic::Param(p) => {
-            let m = if p.use_size { size.max(1) as f64 } else { 1.0 };
-            let stale = if p.use_staleness {
-                (clock.saturating_sub(last_access) + 1) as f64
-            } else {
-                1.0
-            };
-            cost / (m * stale)
+            let (m, stale) = param_denominators(&p, size, last_access, clock);
+            cost / (m as f64 * stale as f64)
         }
     }
+}
+
+/// The exact integer denominator factoring of the parameterized score
+/// `c / (m · staleness)`: returns `(m, staleness)`, each 1 when ablated.
+/// `finish_score` is defined in terms of this factoring, so anything that
+/// compares these integers (the differential index's cross-multiplied
+/// comparisons) agrees with the scan's `f64` scores wherever `f64` is still
+/// injective on the products (the module-level 2^52 caveat).
+#[inline]
+pub fn param_denominators(p: &ParamSpec, size: u64, last_access: u64, clock: u64) -> (u64, u64) {
+    let m = if p.use_size { size.max(1) } else { 1 };
+    let stale = if p.use_staleness { clock.saturating_sub(last_access) + 1 } else { 1 };
+    (m, stale)
+}
+
+/// The staleness-bearing `Param` spec of `h`, if it has one — the heuristic
+/// family whose scores re-order with the clock and which the differential
+/// index (`policy::DifferentialIndex`) serves.
+#[inline]
+pub fn staleness_param(h: Heuristic) -> Option<ParamSpec> {
+    match h {
+        Heuristic::Param(p) if p.use_staleness => Some(p),
+        _ => None,
+    }
+}
+
+/// Exact integer view of a cached `Param` numerator. Every `Param`
+/// numerator is `1.0` plus sums of `u64` op costs accumulated in `f64`, so
+/// it is a non-negative integral `f64` whenever those sums stay below 2^53
+/// (the same caveat the scan's own score arithmetic carries); beyond that
+/// the truncating conversion is the documented best effort.
+#[inline]
+pub fn integral_cost(c: f64) -> u64 {
+    debug_assert!(c >= 1.0 && c.fract() == 0.0, "non-integral Param numerator {c}");
+    c as u64
 }
 
 /// ẽ*(S): sum the running costs of the distinct UF components adjacent to S

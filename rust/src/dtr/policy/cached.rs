@@ -14,6 +14,11 @@
 //! eq-class metadata). `pop_min` is then a cheap O(pool) pass of
 //! multiply/divide over cached numerators instead of O(pool) graph
 //! traversals.
+//!
+//! Retained as the oracle-adjacent fallback under [`super::PolicyKind::Cached`]:
+//! [`super::DifferentialIndex`] removes this index's remaining O(pool) pass,
+//! and this scan — sharing the numerator cache but none of the kinetic
+//! machinery — is what it is benchmarked and equivalence-tested against.
 
 use super::super::graph::Graph;
 use super::super::heuristics::{finish_score, Heuristic, InvalidationScope};
@@ -114,6 +119,25 @@ impl PolicyIndex for CachedCostScan {
         let cost = &mut self.cost;
         let dirty = &mut self.dirty;
         self.subs.merged(kept, absorbed, |s| mark(cost, dirty, s));
+    }
+
+    fn on_retire(&mut self, retired: &[StorageId], _g: &Graph) {
+        for &s in retired {
+            // The storage can never return to the pool: poison its cache
+            // slot and supersede its subscription generation, then sweep the
+            // subscription lists so roots never touched again release their
+            // entries too.
+            mark(&mut self.cost, &mut self.dirty, s);
+            self.subs.bump(s);
+        }
+        self.subs.sweep();
+    }
+
+    fn metadata_len(&self) -> usize {
+        // The cost/dirty slabs are id-indexed (graph-arena-proportional) and
+        // excluded by the trait contract; churn-driven state is the
+        // subscription entries.
+        self.subs.len()
     }
 
     fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {

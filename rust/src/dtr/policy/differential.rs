@@ -1,0 +1,706 @@
+//! Differential score index for the staleness-bearing `h_DTR` family
+//! (`h_DTR`, `h_DTR^eq`, `h_DTR^local`, `h_LRU`, and every staleness-bearing
+//! ablation cell): sub-linear `pop_min` where [`super::CachedCostScan`]
+//! still pays an O(pool) arithmetic pass per eviction.
+//!
+//! The score `c(S)/[m(S)·staleness(S)]` re-orders as the clock advances, so
+//! no single cached key is heap-able. But it *factors*: the numerator `c/m`
+//! is clock-independent (and already cached, Appendix E.1), and the
+//! denominator `staleness = clock − last_access + 1` is shared by every
+//! storage in one `last_access` epoch. Two consequences, exploited here:
+//!
+//! 1. **Within an epoch the order is frozen forever.** Storages sharing one
+//!    `last_access` divide by the same staleness, so their relative order
+//!    is the order of the exact rationals `c/m` (ties by lowest id) — an
+//!    ordered *tier* per epoch ([`Key`] in a `BTreeSet`), maintained
+//!    differentially: only storages whose numerator an invalidation
+//!    actually touched are re-keyed (the differential-dataflow arrangement
+//!    lesson — do work only where inputs changed), and `on_access` migrates
+//!    a storage to the newest epoch in O(log n).
+//! 2. **Across epochs the order changes, but predictably.** The comparison
+//!    of two tier minima at clock `t` is the sign of the exact integer line
+//!    `diff(t) = c₁m₂(t−a₂+1) − c₂m₁(t−a₁+1)`, which crosses zero at most
+//!    once as `t` grows. A kinetic tournament tree over the O(#epochs) tier
+//!    representatives stores each pairwise winner together with a
+//!    *certificate* — the first integer clock at which that winner flips,
+//!    from exact ceiling division — in a priority queue. `pop_min` replays
+//!    only the certificates that expired since the last search, so an
+//!    arbitrary clock advance costs O(flips · log), not O(pool), and a
+//!    quiescent clock costs nothing. The tournament is the "hierarchical
+//!    merging" that keeps the top level logarithmic even when every storage
+//!    sits in its own epoch (the chain-workload worst case, where a flat
+//!    scan over tier minima would degenerate to O(pool) again).
+//!
+//! Decision-exactness: all comparisons are exact integer cross-products
+//! (`u128`/`i128`), which agree with the scan's `f64` scores under the
+//! module-level 2^52 caveat; if a product would overflow even 128 bits the
+//! comparison falls back to exactly the scan's `f64` arithmetic, and
+//! certificates degrade to conservative next-tick re-checks. Ties break by
+//! lowest [`StorageId`], like every other index.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap, HashMap};
+
+use super::super::graph::Graph;
+use super::super::heuristics::{integral_cost, staleness_param, Heuristic, InvalidationScope};
+use super::super::ids::StorageId;
+use super::{Dirtier, EqSubs, PolicyIndex, SelectCtx};
+
+const NIL: u32 = u32::MAX;
+
+/// Within-tier ordering key: the clock-independent rational `c/m` compared
+/// exactly by cross-multiplication (both factors fit in `u64`, so the
+/// products always fit in `u128`), ties by lowest id — the same order the
+/// scan's `(f64 score, id)` induces for storages sharing one epoch.
+#[derive(Clone, Copy)]
+struct Key {
+    c: u64,
+    m: u64,
+    id: u32,
+}
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Key {}
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let l = self.c as u128 * other.m as u128;
+        let r = other.c as u128 * self.m as u128;
+        l.cmp(&r).then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+/// A tier representative: the minimum `(c/m, id)` member of one epoch, the
+/// only member that can win the cross-epoch tournament (any other member
+/// shares its staleness and loses to it within the tier's frozen order).
+#[derive(Clone, Copy, Debug)]
+struct Rep {
+    c: u64,
+    m: u64,
+    /// The tier's epoch (`last_access`).
+    a: u64,
+    id: u32,
+}
+
+/// Exact `(score, id)` comparison of two representatives at clock `t`:
+/// `c₁/(m₁s₁) < c₂/(m₂s₂) ⟺ c₁m₂s₂ < c₂m₁s₁` over exact integers. On
+/// `u128` overflow (products past 2^128 — far beyond where `f64` scores
+/// are injective) compare the way the scan itself does.
+fn cmp_reps(x: &Rep, y: &Rep, t: u64) -> Ordering {
+    let sx = t.saturating_sub(x.a) as u128 + 1;
+    let sy = t.saturating_sub(y.a) as u128 + 1;
+    let a = x.c as u128 * y.m as u128;
+    let b = y.c as u128 * x.m as u128;
+    match (a.checked_mul(sy), b.checked_mul(sx)) {
+        (Some(l), Some(r)) => l.cmp(&r).then_with(|| x.id.cmp(&y.id)),
+        _ => {
+            let fx = x.c as f64 / (x.m as f64 * sx as f64);
+            let fy = y.c as f64 / (y.m as f64 * sy as f64);
+            fx.total_cmp(&fy).then_with(|| x.id.cmp(&y.id))
+        }
+    }
+}
+
+/// The certificate: the first integer clock `> t` at which the winner
+/// between `x` and `y` changes, or `u64::MAX` if it never does.
+///
+/// `diff(t) = P·t + Q` with `P = c₁m₂ − c₂m₁` and
+/// `Q = c₁m₂(1−a₂) − c₂m₁(1−a₁)`; `diff < 0` means `x` wins, `> 0` means
+/// `y`, `== 0` falls to the lower id. `diff` is linear, so the winner flips
+/// at most once — at the exact ceiling of the rational root, nudged one
+/// tick past an integer root whose id-tie the current winner still takes.
+/// Any intermediate overflow degrades to a conservative `t + 1` re-check.
+fn cert_time(x: &Rep, y: &Rep, t: u64) -> u64 {
+    let amax = x.a.max(y.a);
+    if amax > t {
+        // Not yet in the linear region (an epoch from the future can only
+        // be transient); re-examine once both staleness terms are linear.
+        return amax;
+    }
+    let (a, b) = match (
+        i128::try_from(x.c as u128 * y.m as u128),
+        i128::try_from(y.c as u128 * x.m as u128),
+    ) {
+        (Ok(a), Ok(b)) => (a, b),
+        _ => return t.saturating_add(1),
+    };
+    let p = a - b;
+    if p == 0 {
+        // diff(t) is constant: proportional numerators never re-order.
+        return u64::MAX;
+    }
+    let q = match a
+        .checked_mul(1 - y.a as i128)
+        .and_then(|l| b.checked_mul(1 - x.a as i128).and_then(|r| l.checked_sub(r)))
+    {
+        Some(q) => q,
+        None => return t.saturating_add(1),
+    };
+    let x_now = cmp_reps(x, y, t) == Ordering::Less;
+    if (p < 0 && x_now) || (p > 0 && !x_now) {
+        // Already past the crossing: the asymptotic winner holds forever.
+        return u64::MAX;
+    }
+    // First integer t' where diff reaches the far side: ceil division with
+    // a positive denominator (p > 0 ⟹ diff rises through −q/p; p < 0 ⟹
+    // diff falls through q/(−p)).
+    let (num, den) = if p > 0 { (-q, p) } else { (q, -p) };
+    let rem = num.rem_euclid(den);
+    let t0 = num.div_euclid(den) + i128::from(rem != 0);
+    let flip = if rem == 0 {
+        // Exact integer root: the scores tie there and the lower id wins;
+        // if that is still the current winner, the flip lands a tick later.
+        let tie_x = x.id < y.id;
+        if tie_x == x_now {
+            t0 + 1
+        } else {
+            t0
+        }
+    } else {
+        t0
+    };
+    u64::try_from(flip.max(t as i128 + 1)).unwrap_or(u64::MAX)
+}
+
+#[derive(Clone, Copy)]
+struct Slot {
+    in_pool: bool,
+    /// Cached numerator invalid (fresh slots start dirty).
+    dirty: bool,
+    /// Present in `dirty_list` (dedup).
+    queued: bool,
+    /// Tier arena index holding this storage, or `NIL`.
+    tier: u32,
+    /// Cached integral numerator (valid when `!dirty`).
+    c: u64,
+    /// Size denominator factor (immutable per storage).
+    m: u64,
+}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Slot { in_pool: false, dirty: true, queued: false, tier: NIL, c: 1, m: 1 }
+    }
+}
+
+struct Tier {
+    a: u64,
+    leaf: u32,
+    members: BTreeSet<Key>,
+}
+
+pub struct DifferentialIndex {
+    eq: bool,
+    use_size: bool,
+    slots: Vec<Slot>,
+    dirty_list: Vec<StorageId>,
+    dirtier: Dirtier,
+    subs: EqSubs,
+    touch_buf: Vec<StorageId>,
+    // Epoch tiers.
+    tiers: Vec<Tier>,
+    free_tiers: Vec<u32>,
+    by_epoch: HashMap<u64, u32>,
+    // Kinetic tournament: a power-of-two segment layout. Leaves live at
+    // `tree[cap + i]` (tier index or NIL); internal node `n` holds the
+    // winning tier of its subtree, computed at some time ≤ `now` and kept
+    // current by certificates. With `cap == 1` the lone leaf *is* the root.
+    cap: usize,
+    next_leaf: usize,
+    free_leaves: Vec<u32>,
+    tree: Vec<u32>,
+    /// Certificate generation per internal node (stale-entry skipping).
+    ngen: Vec<u32>,
+    /// (fail_time, node, generation) min-heap.
+    certs: BinaryHeap<Reverse<(u64, u32, u32)>>,
+    /// Latest clock observed (hooks do not all carry one).
+    now: u64,
+}
+
+impl DifferentialIndex {
+    pub fn new(h: Heuristic) -> Self {
+        let p = staleness_param(h).expect("differential index requires a staleness-bearing Param");
+        DifferentialIndex {
+            eq: h.invalidation_scope() == InvalidationScope::EqNeighborhood,
+            use_size: p.use_size,
+            slots: Vec::new(),
+            dirty_list: Vec::new(),
+            dirtier: Dirtier::new(h),
+            subs: EqSubs::default(),
+            touch_buf: Vec::new(),
+            tiers: Vec::new(),
+            free_tiers: Vec::new(),
+            by_epoch: HashMap::new(),
+            cap: 0,
+            next_leaf: 0,
+            free_leaves: Vec::new(),
+            tree: Vec::new(),
+            ngen: Vec::new(),
+            certs: BinaryHeap::new(),
+            now: 0,
+        }
+    }
+
+    fn slot(&mut self, s: StorageId) -> usize {
+        let i = s.idx();
+        if self.slots.len() <= i {
+            self.slots.resize(i + 1, Slot::default());
+        }
+        i
+    }
+
+    fn rep(&self, ti: u32) -> Rep {
+        let tier = &self.tiers[ti as usize];
+        let k = tier.members.iter().next().expect("representative of empty tier");
+        Rep { c: k.c, m: k.m, a: tier.a, id: k.id }
+    }
+
+    // ------------------------------------------------------- tournament
+
+    /// Rebuild at double capacity (certificates are regenerated wholesale).
+    fn grow(&mut self, t: u64) {
+        let newcap = (self.cap * 2).max(1);
+        let mut tree = vec![NIL; 2 * newcap];
+        tree[newcap..newcap + self.cap].copy_from_slice(&self.tree[self.cap..2 * self.cap]);
+        self.tree = tree;
+        self.cap = newcap;
+        self.ngen = vec![0; newcap];
+        self.certs.clear();
+        for node in (1..newcap).rev() {
+            self.recompute_node(node, t);
+        }
+    }
+
+    fn alloc_leaf(&mut self, t: u64) -> u32 {
+        if let Some(l) = self.free_leaves.pop() {
+            return l;
+        }
+        if self.next_leaf == self.cap {
+            self.grow(t);
+        }
+        let l = self.next_leaf as u32;
+        self.next_leaf += 1;
+        l
+    }
+
+    /// Recompute one internal node's winner from its children at time `t`,
+    /// bumping its generation and (for a genuine two-way match) scheduling
+    /// the certificate for the first clock at which the winner flips.
+    fn recompute_node(&mut self, node: usize, t: u64) {
+        let l = self.tree[2 * node];
+        let r = self.tree[2 * node + 1];
+        self.ngen[node] = self.ngen[node].wrapping_add(1);
+        self.tree[node] = match (l, r) {
+            (NIL, NIL) => NIL,
+            (x, NIL) => x,
+            (NIL, y) => y,
+            (x, y) => {
+                let rx = self.rep(x);
+                let ry = self.rep(y);
+                let ft = cert_time(&rx, &ry, t);
+                if ft != u64::MAX {
+                    self.certs.push(Reverse((ft, node as u32, self.ngen[node])));
+                }
+                if cmp_reps(&rx, &ry, t) == Ordering::Less {
+                    x
+                } else {
+                    y
+                }
+            }
+        };
+    }
+
+    /// Recompute the path from a leaf to the root after its tier's
+    /// representative (or occupancy) changed.
+    fn update_from_leaf(&mut self, leaf: u32, t: u64) {
+        let mut node = (self.cap + leaf as usize) >> 1;
+        while node >= 1 {
+            self.recompute_node(node, t);
+            node >>= 1;
+        }
+    }
+
+    /// Replay every certificate that expired by time `t`: recompute the
+    /// failed match, and only if its winner actually changed, cascade the
+    /// recomputation up the tree (ancestor certificates are invalidated by
+    /// their generation bump).
+    fn advance(&mut self, t: u64) {
+        while let Some(&Reverse((ft, node, gen))) = self.certs.peek() {
+            if ft > t {
+                break;
+            }
+            self.certs.pop();
+            let node = node as usize;
+            if self.ngen[node] != gen {
+                continue;
+            }
+            let old = self.tree[node];
+            self.recompute_node(node, t);
+            if self.tree[node] != old {
+                let mut n = node >> 1;
+                while n >= 1 {
+                    self.recompute_node(n, t);
+                    n >>= 1;
+                }
+            }
+        }
+    }
+
+    /// Rebuild the certificate heap if lazy invalidation let it balloon.
+    fn maybe_compact_certs(&mut self, t: u64) {
+        if self.certs.len() > 8 * self.cap + 64 {
+            self.certs.clear();
+            for node in (1..self.cap).rev() {
+                self.recompute_node(node, t);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ tiers
+
+    fn tier_for_epoch(&mut self, a: u64, t: u64) -> u32 {
+        if let Some(&ti) = self.by_epoch.get(&a) {
+            return ti;
+        }
+        let leaf = self.alloc_leaf(t);
+        let ti = if let Some(ti) = self.free_tiers.pop() {
+            let tier = &mut self.tiers[ti as usize];
+            debug_assert!(tier.members.is_empty());
+            tier.a = a;
+            tier.leaf = leaf;
+            ti
+        } else {
+            self.tiers.push(Tier { a, leaf, members: BTreeSet::new() });
+            (self.tiers.len() - 1) as u32
+        };
+        self.by_epoch.insert(a, ti);
+        ti
+    }
+
+    /// Insert a clean, pooled storage into the tier of epoch `a`.
+    fn place(&mut self, s: StorageId, a: u64, t: u64) {
+        let i = s.idx();
+        debug_assert!(self.slots[i].in_pool && !self.slots[i].dirty);
+        debug_assert_eq!(self.slots[i].tier, NIL);
+        let ti = self.tier_for_epoch(a, t);
+        let key = Key { c: self.slots[i].c, m: self.slots[i].m, id: s.0 };
+        self.slots[i].tier = ti;
+        let tier = &mut self.tiers[ti as usize];
+        let old_rep = tier.members.iter().next().copied();
+        tier.members.insert(key);
+        let new_rep = tier.members.iter().next().copied();
+        if old_rep.map(|k| k.id) != new_rep.map(|k| k.id) {
+            let leaf = self.tiers[ti as usize].leaf;
+            self.tree[self.cap + leaf as usize] = ti;
+            self.update_from_leaf(leaf, t);
+        }
+    }
+
+    /// Remove a storage from its tier (no-op if unplaced), destroying the
+    /// tier when it empties.
+    fn unplace(&mut self, s: StorageId, t: u64) {
+        let i = self.slot(s);
+        let ti = self.slots[i].tier;
+        if ti == NIL {
+            return;
+        }
+        self.slots[i].tier = NIL;
+        let key = Key { c: self.slots[i].c, m: self.slots[i].m, id: s.0 };
+        let tier = &mut self.tiers[ti as usize];
+        let old_rep = tier.members.iter().next().copied();
+        let removed = tier.members.remove(&key);
+        debug_assert!(removed, "tier member missing on unplace");
+        if tier.members.is_empty() {
+            let (leaf, a) = (tier.leaf, tier.a);
+            self.by_epoch.remove(&a);
+            self.free_tiers.push(ti);
+            self.free_leaves.push(leaf);
+            self.tree[self.cap + leaf as usize] = NIL;
+            self.update_from_leaf(leaf, t);
+        } else {
+            let new_rep = tier.members.iter().next().copied();
+            if old_rep.map(|k| k.id) != new_rep.map(|k| k.id) {
+                let leaf = self.tiers[ti as usize].leaf;
+                self.update_from_leaf(leaf, t);
+            }
+        }
+    }
+
+    /// A storage's numerator may have changed: pull it out of its tier
+    /// *eagerly* (a stale numerator can err in either direction, unlike a
+    /// stale epoch) and queue the re-key for the next `pop_min`.
+    fn mark_dirty(&mut self, s: StorageId) {
+        let t = self.now;
+        let i = self.slot(s);
+        self.unplace(s, t);
+        self.slots[i].dirty = true;
+        if self.slots[i].in_pool && !self.slots[i].queued {
+            self.slots[i].queued = true;
+            self.dirty_list.push(s);
+        }
+    }
+
+    fn current_winner(&self) -> Option<StorageId> {
+        if self.cap == 0 {
+            return None;
+        }
+        let ti = self.tree[1];
+        if ti == NIL {
+            None
+        } else {
+            Some(StorageId(self.rep(ti).id))
+        }
+    }
+}
+
+impl PolicyIndex for DifferentialIndex {
+    fn name(&self) -> &'static str {
+        "differential"
+    }
+
+    fn on_insert(&mut self, s: StorageId, g: &Graph) {
+        let t = self.now;
+        let i = self.slot(s);
+        if self.slots[i].in_pool {
+            return;
+        }
+        self.slots[i].in_pool = true;
+        self.slots[i].m = if self.use_size { g.storage(s).size.max(1) } else { 1 };
+        if self.slots[i].dirty {
+            if !self.slots[i].queued {
+                self.slots[i].queued = true;
+                self.dirty_list.push(s);
+            }
+        } else {
+            // A returning storage's cached numerator is still valid (same
+            // policy as CachedCostScan: membership never enters the
+            // numerator, and invalidations land regardless of pool state).
+            self.place(s, g.storage(s).last_access, t);
+        }
+    }
+
+    fn on_remove(&mut self, s: StorageId, _g: &Graph) {
+        let t = self.now;
+        let i = self.slot(s);
+        self.slots[i].in_pool = false;
+        self.unplace(s, t);
+        // Cache and eq-class subscriptions stay live (see `on_insert`).
+    }
+
+    fn on_access(&mut self, s: StorageId, g: &Graph, clock: u64) {
+        self.now = self.now.max(clock);
+        let i = self.slot(s);
+        let ti = self.slots[i].tier;
+        if ti != NIL && self.tiers[ti as usize].a != g.storage(s).last_access {
+            let now = self.now;
+            self.unplace(s, now);
+            self.place(s, g.storage(s).last_access, now);
+        }
+    }
+
+    fn on_clock(&mut self, clock: u64) {
+        // Certificates are replayed lazily at the next `pop_min`.
+        self.now = self.now.max(clock);
+    }
+
+    fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
+        self.dirtier.collect(s, g, accesses);
+        let buf = std::mem::take(&mut self.dirtier.buf);
+        for &d in &buf {
+            self.mark_dirty(d);
+        }
+        self.dirtier.buf = buf;
+    }
+
+    fn on_component_touched(&mut self, root: u32) {
+        let mut buf = std::mem::take(&mut self.touch_buf);
+        buf.clear();
+        self.subs.touched(root, |s| buf.push(s));
+        for &s in &buf {
+            self.mark_dirty(s);
+        }
+        self.touch_buf = buf;
+    }
+
+    fn on_components_merged(&mut self, kept: u32, absorbed: u32) {
+        let mut buf = std::mem::take(&mut self.touch_buf);
+        buf.clear();
+        self.subs.merged(kept, absorbed, |s| buf.push(s));
+        for &s in &buf {
+            self.mark_dirty(s);
+        }
+        self.touch_buf = buf;
+    }
+
+    fn on_retire(&mut self, retired: &[StorageId], _g: &Graph) {
+        for &s in retired {
+            let i = self.slot(s);
+            debug_assert!(!self.slots[i].in_pool, "retired storage still pooled");
+            self.unplace(s, self.now);
+            self.slots[i].dirty = true;
+            self.subs.bump(s);
+        }
+        self.subs.sweep();
+        // GC the certificate heap as well: superseded certificates otherwise
+        // linger until the lazy size-triggered compaction, which would make
+        // post-compaction metadata counts oscillate instead of staying flat.
+        let t = self.now;
+        self.certs.clear();
+        for node in (1..self.cap).rev() {
+            self.recompute_node(node, t);
+        }
+    }
+
+    fn metadata_len(&self) -> usize {
+        let members: usize = self.tiers.iter().map(|t| t.members.len()).sum();
+        members + self.by_epoch.len() + self.dirty_list.len() + self.certs.len() + self.subs.len()
+    }
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        if ctx.pool.is_empty() {
+            return None;
+        }
+        self.now = self.now.max(ctx.clock);
+        let t = self.now;
+        // 1. Differential re-key: only the storages whose numerator an
+        // invalidation actually touched, each O(log n) to re-place.
+        while let Some(s) = self.dirty_list.pop() {
+            let i = s.idx();
+            self.slots[i].queued = false;
+            if !self.slots[i].in_pool || !self.slots[i].dirty {
+                continue;
+            }
+            let c = ctx.cached_cost_of(s);
+            if self.eq {
+                self.subs.bump(s);
+                self.subs.subscribe(s, ctx.root_buf);
+            }
+            self.slots[i].c = integral_cost(c);
+            self.slots[i].dirty = false;
+            self.place(s, ctx.graph.storage(s).last_access, t);
+        }
+        // 2. Replay expired certificates up to the current clock.
+        self.advance(t);
+        self.maybe_compact_certs(t);
+        // 3. The root's representative is the exact pool argmin. With the
+        // small-tensor filter, set aside small winners and restore them
+        // afterwards; if everything is small, the scan's starved fallback
+        // is the unfiltered argmin — the first one set aside.
+        if ctx.min_size == 0 {
+            return self.current_winner();
+        }
+        let mut set_aside: Vec<StorageId> = Vec::new();
+        let mut found: Option<StorageId> = None;
+        while let Some(s) = self.current_winner() {
+            *ctx.accesses += 1;
+            if ctx.graph.storage(s).size >= ctx.min_size {
+                found = Some(s);
+                break;
+            }
+            self.unplace(s, t);
+            set_aside.push(s);
+        }
+        let result = found.or_else(|| set_aside.first().copied());
+        for s in set_aside {
+            let a = ctx.graph.storage(s).last_access;
+            self.place(s, a, t);
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Direct rational winner at time `t` (brute-force oracle).
+    fn oracle_winner(x: &Rep, y: &Rep, t: u64) -> bool {
+        cmp_reps(x, y, t) == Ordering::Less
+    }
+
+    /// `cert_time` must name the *first* integer clock where the winner
+    /// differs from the winner at `t0`, over random small representatives
+    /// (where a brute-force sweep is exact).
+    #[test]
+    fn cert_time_matches_brute_force_sweep() {
+        let mut rng = Rng::new(42);
+        for case in 0..4000 {
+            let mk = |rng: &mut Rng, id: u32| Rep {
+                c: 1 + rng.below(40),
+                m: 1 + rng.below(12),
+                a: rng.below(30),
+                id,
+            };
+            let x = mk(&mut rng, 1 + rng.below(100) as u32);
+            let mut y = mk(&mut rng, 1 + rng.below(100) as u32);
+            if y.id == x.id {
+                y.id += 1;
+            }
+            let t0 = x.a.max(y.a) + rng.below(20);
+            let w0 = oracle_winner(&x, &y, t0);
+            let ct = cert_time(&x, &y, t0);
+            let mut first_change = u64::MAX;
+            for t in t0 + 1..t0 + 4000 {
+                if oracle_winner(&x, &y, t) != w0 {
+                    first_change = t;
+                    break;
+                }
+            }
+            if first_change == u64::MAX {
+                // Winner stable over the sweep horizon: the certificate must
+                // not fire inside it.
+                assert!(
+                    ct > t0 + 3999,
+                    "case {case}: cert {ct} fired but winner stable ({x:?} vs {y:?} at {t0})"
+                );
+            } else {
+                assert_eq!(
+                    ct, first_change,
+                    "case {case}: cert mismatch ({x:?} vs {y:?} at {t0})"
+                );
+            }
+        }
+    }
+
+    /// The id tie on an exact integer crossing must resolve like the scan:
+    /// lower id wins the tie, so the flip lands one tick after the tie if
+    /// the current winner also holds the lower id.
+    #[test]
+    fn cert_time_handles_exact_ties() {
+        // x: c=2, m=1, a=4; y: c=4, m=1, a=2. Scores equal when
+        // 2(t−2+1) = 4(t−4+1) ⟺ 2t−2 = 4t−12 ⟺ t = 5.
+        let x = Rep { c: 2, m: 1, a: 4, id: 1 };
+        let y = Rep { c: 4, m: 1, a: 2, id: 9 };
+        // At t=4: x = 2/1, y = 4/3 → y wins; at t=5 tie → x (lower id);
+        // y never wins again (x's staleness grows slower... check: t=6,
+        // x = 2/3, y = 4/5 → x). So from t=4 the first change is t=5.
+        assert_eq!(cmp_reps(&x, &y, 4), Ordering::Greater);
+        assert_eq!(cert_time(&x, &y, 4), 5);
+        // From t=5 (x winning on the tie), the winner never changes back.
+        assert_eq!(cmp_reps(&x, &y, 5), Ordering::Less);
+        assert_eq!(cert_time(&x, &y, 5), u64::MAX);
+    }
+
+    #[test]
+    fn key_orders_by_exact_rational_then_id() {
+        let a = Key { c: 1, m: 3, id: 5 }; // 1/3
+        let b = Key { c: 2, m: 6, id: 4 }; // 1/3, lower id
+        let c = Key { c: 1, m: 2, id: 1 }; // 1/2
+        assert_eq!(a.cmp(&c), Ordering::Less);
+        assert_eq!(b.cmp(&a), Ordering::Less, "equal rationals tie-break by id");
+        let mut set = BTreeSet::new();
+        set.insert(a);
+        set.insert(b);
+        set.insert(c);
+        assert_eq!(set.iter().next().unwrap().id, 4);
+    }
+}

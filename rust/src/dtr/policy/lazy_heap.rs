@@ -189,6 +189,22 @@ impl PolicyIndex for LazyHeapIndex {
         self.subs.merged(kept, absorbed, |s| queue_dirty(slots, dirty_list, s));
     }
 
+    fn on_retire(&mut self, retired: &[StorageId], _g: &Graph) {
+        for &s in retired {
+            let i = self.slot(s);
+            debug_assert!(!self.slots[i].in_pool, "retired storage still pooled");
+            // Supersede any live heap entry and subscription generation;
+            // stale heap entries drain through the usual lazy skipping.
+            self.slots[i].gen += 1;
+            self.subs.bump(s);
+        }
+        self.subs.sweep();
+    }
+
+    fn metadata_len(&self) -> usize {
+        self.heap.len() + self.dirty_list.len() + self.subs.len()
+    }
+
     fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
         self.refresh(ctx);
         self.maybe_compact(ctx.pool);

@@ -17,9 +17,10 @@
 //! | [`StalenessListIndex`]| `h_LRU`                     | staleness is monotone in access order, so an intrusive list ordered by `last_access` pops the argmin in O(1) |
 //! | [`SizeHeapIndex`]     | `h_size`                    | sizes are immutable, so a lazy max-size heap with stale-entry skipping is exact |
 //! | [`LazyHeapIndex`]     | clock-free scores: `h_MSPS`, `h_{e*}`, staleness-ablated grid cells | E.1 score caching as a lazy min-heap: invalidation re-keys only the dirtied graph/eq-class neighborhood; stale generations are skipped on pop |
-//! | [`CachedCostScan`]    | `h_DTR`, `h_DTR^eq`, `h_DTR^local`, staleness-bearing grid cells | E.1 cost caching: the expensive `e*`/ẽ*/local numerator is cached and invalidated per neighborhood; the staleness denominator is recomputed in a cheap O(pool) pass |
+//! | [`CachedCostScan`]    | staleness-bearing grid cells (fallback under [`PolicyKind::Cached`]) | E.1 cost caching: the expensive `e*`/ẽ*/local numerator is cached and invalidated per neighborhood; the staleness denominator is recomputed in a cheap O(pool) pass |
+//! | [`DifferentialIndex`] | `h_DTR`, `h_DTR^eq`, `h_DTR^local`, `h_LRU`-shaped cells, staleness-bearing grid cells | epoch tiers over the factored score + a kinetic tournament: `pop_min` in O(log) amortized, no O(pool) pass |
 //!
-//! Why `h_DTR` is *not* a heap: its score `c(S)/[m(S)·staleness(S)]`
+//! Why `h_DTR` is *not* a plain heap: its score `c(S)/[m(S)·staleness(S)]`
 //! re-orders as the clock advances (a cheap-but-fresh storage overtakes an
 //! expensive-but-stale one), so no clock-independent key exists and a
 //! cached-key min-heap would return wrong victims. The expensive part of the
@@ -28,6 +29,21 @@
 //! resident frontier of its evicted region ([`InvalidationScope`]), driven
 //! for ẽ* by union-find component subscriptions
 //! ([`PolicyIndex::on_component_touched`]).
+//!
+//! [`CachedCostScan`] stops there and still pays an O(pool) staleness pass
+//! per eviction. [`DifferentialIndex`] removes that last linear pass by
+//! applying the differential-dataflow arrangement idea (SNIPPETS.md
+//! Snippets 2–3: maintain indexed state under streams of updates, doing
+//! work only where inputs changed) to the score's factorization: storages
+//! sharing one `last_access` epoch divide by the same staleness, so their
+//! relative order is frozen forever — each epoch keeps an ordered *tier*
+//! keyed on the exact rational `c/m`, and a kinetic tournament over the
+//! O(#epochs) tier minima schedules, per pairwise match, the one future
+//! clock at which its winner flips (the score difference is linear in the
+//! clock). Numerator invalidations become differential re-keys of just the
+//! dirtied storages; `on_access` migrates one storage to the newest epoch;
+//! an arbitrary clock advance replays only the expired certificates. See
+//! `differential.rs` for the PAPER Appendix E mapping in detail.
 //!
 //! Every index is **decision-exact**: it must produce the *identical victim
 //! sequence* as [`ScanIndex`] for its heuristic (ties broken by lowest
@@ -44,6 +60,7 @@
 
 mod cached;
 mod dealloc;
+mod differential;
 mod lazy_heap;
 mod scan;
 mod size_heap;
@@ -53,6 +70,7 @@ use std::time::Instant;
 
 pub use cached::CachedCostScan;
 pub use dealloc::DeallocPolicy;
+pub use differential::DifferentialIndex;
 pub use lazy_heap::LazyHeapIndex;
 pub use scan::ScanIndex;
 pub use size_heap::SizeHeapIndex;
@@ -60,7 +78,9 @@ pub use staleness::StalenessListIndex;
 
 use super::evicted::{resident_frontier, EvictedScratch};
 use super::graph::Graph;
-use super::heuristics::{cached_cost, score, CostKind, Heuristic, InvalidationScope, ScoreCtx};
+use super::heuristics::{
+    cached_cost, score, staleness_param, CostKind, Heuristic, InvalidationScope, ScoreCtx,
+};
 use super::ids::StorageId;
 use super::unionfind::UnionFind;
 use crate::util::rng::Rng;
@@ -78,6 +98,14 @@ pub enum PolicyKind {
     /// Prefer the exact index even when √n sampling is requested (the
     /// index's exact argmin supersedes the sampled approximation).
     Indexed,
+    /// Force the O(pool)-per-pop [`CachedCostScan`] for the staleness-bearing
+    /// family (the oracle-adjacent fallback the differential index is
+    /// benchmarked and tested against); other heuristics route as `Indexed`.
+    Cached,
+    /// Force the [`DifferentialIndex`] for *every* staleness-bearing
+    /// heuristic — including `h_LRU`-shaped cells that `Auto` gives the
+    /// specialized staleness list; other heuristics route as `Indexed`.
+    Differential,
 }
 
 impl PolicyKind {
@@ -86,6 +114,8 @@ impl PolicyKind {
             PolicyKind::Auto => "auto",
             PolicyKind::Scan => "scan",
             PolicyKind::Indexed => "indexed",
+            PolicyKind::Cached => "cached",
+            PolicyKind::Differential => "differential",
         }
     }
 
@@ -94,12 +124,20 @@ impl PolicyKind {
             "auto" => PolicyKind::Auto,
             "scan" => PolicyKind::Scan,
             "indexed" | "index" => PolicyKind::Indexed,
+            "cached" | "cached_scan" => PolicyKind::Cached,
+            "differential" | "diff" => PolicyKind::Differential,
             _ => return None,
         })
     }
 
-    pub fn all() -> [PolicyKind; 3] {
-        [PolicyKind::Auto, PolicyKind::Scan, PolicyKind::Indexed]
+    pub fn all() -> [PolicyKind; 5] {
+        [
+            PolicyKind::Auto,
+            PolicyKind::Scan,
+            PolicyKind::Indexed,
+            PolicyKind::Cached,
+            PolicyKind::Differential,
+        ]
     }
 }
 
@@ -212,6 +250,21 @@ pub trait PolicyIndex: Send {
     /// Two evicted components merged (`absorbed` into `kept`).
     fn on_components_merged(&mut self, _kept: u32, _absorbed: u32) {}
 
+    /// A batch of storages was permanently retired (banished and pinned out
+    /// of circulation forever): the index may drop every cache, dirty flag,
+    /// and subscription it holds for them. Driven by the runtime's retired
+    /// list (`Runtime::compact_index`), this is the GC hook that keeps
+    /// long-lived serving sessions' index metadata flat under churn.
+    fn on_retire(&mut self, _retired: &[StorageId], _g: &Graph) {}
+
+    /// Approximate count of live metadata entries (dirty queues, heap
+    /// entries, tier members, subscriptions) — the quantity `on_retire`
+    /// compaction must hold flat. Excludes id-indexed slab vectors, which
+    /// are proportional to the graph arena, not to index churn.
+    fn metadata_len(&self) -> usize {
+        0
+    }
+
     /// The current argmin under `ctx`, or `None` if the pool is empty or
     /// fully filtered with no fallback. Does not structurally remove the
     /// winner — the caller evicts it, triggering `on_remove`.
@@ -224,10 +277,16 @@ pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn 
     let want_index = match kind {
         PolicyKind::Scan => false,
         PolicyKind::Auto => !sqrt_sample,
-        PolicyKind::Indexed => true,
+        PolicyKind::Indexed | PolicyKind::Cached | PolicyKind::Differential => true,
     };
     if !want_index || matches!(h, Heuristic::Random) {
         return Box::new(ScanIndex::new());
+    }
+    if kind == PolicyKind::Differential && staleness_param(h).is_some() {
+        // Forced: every staleness-bearing cell, even the `h_LRU` shape the
+        // staleness list would otherwise take (useful for equivalence tests
+        // and benches of the kinetic machinery itself).
+        return Box::new(DifferentialIndex::new(h));
     }
     match h {
         Heuristic::Param(p) if p.cost == CostKind::NoCost && !p.use_size && p.use_staleness => {
@@ -237,7 +296,8 @@ pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn 
             Box::new(SizeHeapIndex::new())
         }
         _ if h.clock_free() => Box::new(LazyHeapIndex::new(h)),
-        Heuristic::Param(_) => Box::new(CachedCostScan::new(h)),
+        Heuristic::Param(_) if kind == PolicyKind::Cached => Box::new(CachedCostScan::new(h)),
+        Heuristic::Param(_) => Box::new(DifferentialIndex::new(h)),
         _ => Box::new(ScanIndex::new()),
     }
 }
@@ -366,6 +426,25 @@ impl EqSubs {
             self.touched(r, &mut mark);
         }
     }
+
+    /// Full GC sweep ([`PolicyIndex::on_retire`] path): drop every
+    /// superseded-generation entry and every emptied root list. Unlike the
+    /// per-subscribe watermark compaction, this also reclaims roots that are
+    /// never touched again (permanently retired storages).
+    pub(crate) fn sweep(&mut self) {
+        let gen = &self.gen;
+        self.subs.retain(|_, list| {
+            list.entries
+                .retain(|&(sid, sg)| gen.get(StorageId(sid).idx()).copied() == Some(sg));
+            list.watermark = 2 * list.entries.len().max(32);
+            !list.entries.is_empty()
+        });
+    }
+
+    /// Total subscription entries held (live and not-yet-pruned).
+    pub(crate) fn len(&self) -> usize {
+        self.subs.values().map(|l| l.entries.len()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -390,13 +469,24 @@ mod tests {
         // Exact indexes under Auto.
         assert_eq!(route(Heuristic::lru(), PolicyKind::Auto, false), "staleness_list");
         assert_eq!(route(Heuristic::size(), PolicyKind::Auto, false), "size_heap");
-        assert_eq!(route(Heuristic::dtr(), PolicyKind::Auto, false), "cached_cost_scan");
-        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Auto, false), "cached_cost_scan");
-        assert_eq!(route(Heuristic::dtr_local(), PolicyKind::Auto, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::dtr(), PolicyKind::Auto, false), "differential");
+        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Auto, false), "differential");
+        assert_eq!(route(Heuristic::dtr_local(), PolicyKind::Auto, false), "differential");
         assert_eq!(route(Heuristic::Msps, PolicyKind::Auto, false), "lazy_heap");
         assert_eq!(route(Heuristic::EStarCount, PolicyKind::Auto, false), "lazy_heap");
         // Indexed overrides sampling.
         assert_eq!(route(Heuristic::lru(), PolicyKind::Indexed, true), "staleness_list");
+        // Cached pins the O(pool) fallback for the family; other heuristics
+        // keep their exact index.
+        assert_eq!(route(Heuristic::dtr(), PolicyKind::Cached, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Cached, false), "cached_cost_scan");
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Cached, false), "staleness_list");
+        // Differential forces the kinetic index onto every staleness-bearing
+        // cell, including the h_LRU shape.
+        assert_eq!(route(Heuristic::lru(), PolicyKind::Differential, false), "differential");
+        assert_eq!(route(Heuristic::dtr(), PolicyKind::Differential, false), "differential");
+        assert_eq!(route(Heuristic::size(), PolicyKind::Differential, false), "size_heap");
+        assert_eq!(route(Heuristic::Msps, PolicyKind::Differential, false), "lazy_heap");
         // Every ablation cell routes somewhere deterministic.
         for h in Heuristic::ablation_grid() {
             let name = route(h, PolicyKind::Auto, false);

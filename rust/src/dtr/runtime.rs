@@ -191,6 +191,10 @@ pub struct Runtime<B: Backend> {
     /// Storages awaiting banishment (policy = Banish, blocked on evicted
     /// dependents).
     pending_banish: Vec<StorageId>,
+    /// Permanently-retired storages (banished) not yet flushed to the index
+    /// GC hook ([`PolicyIndex::on_retire`]); auto-flushed in batches so
+    /// long-lived serving sessions hold index metadata flat under churn.
+    retired: Vec<StorageId>,
     /// Scratch for ẽ* root dedup.
     root_buf: Vec<u32>,
     /// Scratch for double-compute bookkeeping.
@@ -213,6 +217,7 @@ impl<B: Backend> Runtime<B> {
             pool_bytes: 0,
             index,
             pending_banish: Vec::new(),
+            retired: Vec::new(),
             root_buf: Vec::new(),
             was_defined: Vec::new(),
         }
@@ -229,6 +234,23 @@ impl<B: Backend> Runtime<B> {
     /// Name of the active victim-selection index (observability).
     pub fn index_name(&self) -> &'static str {
         self.index.name()
+    }
+
+    /// Approximate live metadata entries held by the index (see
+    /// [`PolicyIndex::metadata_len`]) — the quantity [`Runtime::compact_index`]
+    /// keeps flat under storage churn.
+    pub fn index_metadata_len(&self) -> usize {
+        self.index.metadata_len()
+    }
+
+    /// Flush the retired-storage free list into the index GC hook. Called
+    /// automatically once a batch accumulates; callable any time.
+    pub fn compact_index(&mut self) {
+        if self.retired.is_empty() {
+            return;
+        }
+        let retired = std::mem::take(&mut self.retired);
+        self.index.on_retire(&retired, &self.graph);
     }
 
     // ---------------------------------------------------------------- pool
@@ -686,6 +708,11 @@ impl<B: Backend> Runtime<B> {
                 dst.pinned = true;
             }
             self.pool_refresh(d);
+        }
+        // Banished storages never return: batch them into the index GC hook.
+        self.retired.push(s);
+        if self.retired.len() >= 256 {
+            self.compact_index();
         }
         true
     }

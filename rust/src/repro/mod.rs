@@ -53,7 +53,7 @@ system commands:
              a fraction of the non-pinned headroom; floor is ~0.6)
              [--config cfg.json --steps 50 --budget-ratio 0.8
               --heuristic h_dtr_eq --optimizer adam --curve-out loss.csv
-              --index auto|scan|indexed (victim-selection index family)
+              --index auto|scan|indexed|cached|differential (victim-selection index family)
               --threads N (intra-op kernel workers; bit-identical to 1)]
              [--backend interp|pjrt] (interp is hermetic; pjrt needs
              `--features pjrt` + artifacts) [--vocab N --d-model N

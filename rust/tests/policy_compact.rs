@@ -1,0 +1,92 @@
+//! Regression: index metadata must stay FLAT under storage churn.
+//!
+//! Before the `PolicyIndex::on_retire` GC hook, `CachedCostScan` (and any
+//! index sharing its "keep caches live across pool exits" policy) leaked
+//! state for permanently-dropped storages: `EqSubs` subscription entries of
+//! banished storages lived until their component root happened to be
+//! touched again — which for a retired region is never — so a long-lived
+//! serving session's index memory grew with total storages ever created
+//! instead of with the live set. The runtime now batches banished storages
+//! into a retired free list and flushes them through `on_retire`
+//! (`Runtime::compact_index`), which supersedes their cache generations and
+//! sweeps the subscription lists.
+//!
+//! The test drives a sliding-window chain under a tight budget with the
+//! Banish dealloc policy — every released storage eventually retires, and
+//! the budget pressure forces evictions so the eq-class subscription
+//! machinery is actually exercised — and asserts the index's churn-driven
+//! metadata (`Runtime::index_metadata_len`) at 8x the warm-up iteration
+//! count has not grown past a small constant factor of the warm measure.
+
+use dtr::dtr::{
+    Config, DeallocPolicy, Heuristic, NullBackend, OutSpec, PolicyKind, Runtime, TensorId,
+};
+
+/// Run `iters` sliding-window chain steps; sample `index_metadata_len`
+/// after a final compaction at each probe point.
+fn churn_metadata(h: Heuristic, kind: PolicyKind, probes: &[usize]) -> Vec<usize> {
+    let cfg = Config {
+        budget: 128,
+        heuristic: h,
+        policy: DeallocPolicy::Banish,
+        index: kind,
+        ..Config::default()
+    };
+    let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+    let mut window: Vec<TensorId> = vec![rt.constant(8)];
+    let mut out = Vec::new();
+    let iters = *probes.last().unwrap();
+    for i in 0..iters {
+        let prev = *window.last().unwrap();
+        let cost = 1 + (i as u64 % 7);
+        let size = 8 + (i as u64 % 5) * 4;
+        let t = rt
+            .call(&format!("f{i}"), cost, &[prev], &[OutSpec::sized(size)])
+            .unwrap_or_else(|e| panic!("{} [{}] step {i}: {e:?}", h.name(), kind.name()))[0];
+        window.push(t);
+        if window.len() > 10 {
+            rt.release(window.remove(0));
+        }
+        if probes.contains(&(i + 1)) {
+            rt.compact_index();
+            out.push(rt.index_metadata_len());
+        }
+    }
+    out
+}
+
+#[test]
+fn churn_holds_index_metadata_flat() {
+    let probes = [500usize, 1000, 2000, 4000];
+    for h in [Heuristic::dtr_eq(), Heuristic::dtr(), Heuristic::dtr_local()] {
+        for kind in [PolicyKind::Cached, PolicyKind::Differential] {
+            let sizes = churn_metadata(h, kind, &probes);
+            let warm = sizes[0].max(16);
+            let last = *sizes.last().unwrap();
+            assert!(
+                last <= 2 * warm,
+                "{} [{}]: index metadata grew with churn: probes {probes:?} -> {sizes:?}",
+                h.name(),
+                kind.name()
+            );
+        }
+    }
+}
+
+/// The same property for the clock-free lazy heap (EStar numerator without
+/// staleness), whose heap + subscriptions flow through the same hooks.
+#[test]
+fn churn_holds_lazy_heap_metadata_flat() {
+    use dtr::dtr::{CostKind, ParamSpec};
+    let h = Heuristic::Param(ParamSpec {
+        cost: CostKind::EqClass,
+        use_size: true,
+        use_staleness: false,
+    });
+    let sizes = churn_metadata(h, PolicyKind::Indexed, &[500, 1000, 2000, 4000]);
+    let warm = sizes[0].max(16);
+    assert!(
+        *sizes.last().unwrap() <= 2 * warm,
+        "lazy_heap: index metadata grew with churn: {sizes:?}"
+    );
+}

@@ -47,6 +47,49 @@ fn random_model(rng: &mut Rng, size: usize) -> Log {
     t.finish(loss)
 }
 
+/// Clock-adversarial tape: interleaves bursts of accesses deep into the
+/// history (epoch churn — re-freshened `last_access` plus remat storms when
+/// the touched storages were evicted) with ordinary frontier progress, and
+/// makes half the nodes share one `(cost, size)` cell so scores tie exactly
+/// and only the lowest-id rule separates victims. Under a tight budget this
+/// is the worst case for the differential index: mass evictions, eq-class
+/// merges (dtr_eq cells), and constant tier migration.
+fn adversarial_model(rng: &mut Rng, size: usize) -> Log {
+    let mut t = Tape::new("prop_policy_adv");
+    let x = t.data("x", 64 + rng.below(64));
+    let mut all: Vec<R> = vec![x];
+    let mut nodes = 0usize;
+    while nodes < size {
+        let mut inputs: Vec<R> = Vec::new();
+        if rng.chance(0.35) && all.len() > 4 {
+            // Access burst: touch storages from deep history.
+            let k = 1 + rng.index(3);
+            for _ in 0..k {
+                inputs.push(*rng.choose(&all));
+            }
+        } else {
+            let w = 4.min(all.len());
+            inputs.push(all[all.len() - 1 - rng.index(w)]);
+            if rng.chance(0.3) {
+                inputs.push(*rng.choose(&all));
+            }
+        }
+        // Half the nodes share one (cost, size) cell: exact score ties,
+        // broken by lowest StorageId on both sides of the comparison.
+        let (cost, bytes) = if rng.chance(0.5) {
+            (2, 64)
+        } else {
+            (1 + rng.below(20), 32 + rng.below(256))
+        };
+        let out = t.op(&format!("op{nodes}"), cost, &inputs, bytes);
+        all.push(out);
+        nodes += 1;
+    }
+    let last = *all.last().unwrap();
+    let loss = t.op("loss", 1, &[last], 8);
+    t.finish(loss)
+}
+
 /// Heuristics under equivalence test: the Fig. 2 set, the Appendix-A
 /// reduced heuristic, and staleness-/size-ablated grid cells that exercise
 /// the lazy-heap index family.
@@ -158,9 +201,73 @@ fn prop_small_filter_preserves_equivalence() {
             let scan = run(&log, budget, h, PolicyKind::Scan, true);
             let indexed = run(&log, budget, h, PolicyKind::Indexed, true);
             assert_equivalent(&scan, &indexed, h, "small_filter")?;
+            let diff = run(&log, budget, h, PolicyKind::Differential, true);
+            assert_equivalent(&scan, &diff, h, "small_filter_differential")?;
         }
         Ok(())
     });
+}
+
+/// Clock-adversarial equivalence for the differential index (and the cached
+/// scan it supersedes): long tapes interleaving access bursts (epoch
+/// churn), mass evictions (tight budgets), and eq-class merges, across the
+/// FULL ablation grid plus the Fig. 2 set. `PolicyKind::Differential`
+/// forces the kinetic index onto every staleness-bearing cell — including
+/// the `h_LRU` shape the staleness list normally takes — and victims plus
+/// `Stats::same_decisions` must pin to the scan exactly, id-broken score
+/// ties included.
+#[test]
+fn prop_clock_adversarial_differential_equivalence() {
+    check("clock_adversarial_equivalence", 25, 15, 45, |rng, size| {
+        let log = adversarial_model(rng, size);
+        let b = baseline(&log);
+        let budget = b.budget_at(0.2 + rng.f64() * 0.5);
+        let mut hs = Heuristic::ablation_grid();
+        hs.extend(Heuristic::fig2_set());
+        for h in hs {
+            let scan = run(&log, budget, h, PolicyKind::Scan, false);
+            let diff = run(&log, budget, h, PolicyKind::Differential, false);
+            assert_equivalent(&scan, &diff, h, "adversarial_differential")?;
+            let cached = run(&log, budget, h, PolicyKind::Cached, false);
+            assert_equivalent(&scan, &cached, h, "adversarial_cached")?;
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic tie gauntlet: a fan of identical `(cost, size)` siblings
+/// repeatedly co-accessed (each merge op stamps both inputs with the same
+/// completion clock, collapsing them into one epoch) so victim selection
+/// degenerates to pure lowest-id tie-breaks inside shared tiers. The
+/// differential index must reproduce the scan's choices eviction for
+/// eviction — and evictions must actually occur for the pin to mean
+/// anything.
+#[test]
+fn differential_breaks_score_ties_by_lowest_id() {
+    let mut t = Tape::new("tie_fan");
+    let x = t.data("x", 32);
+    let mut sibs: Vec<R> = Vec::new();
+    for i in 0..24usize {
+        sibs.push(t.op(&format!("s{i}"), 3, &[x], 64));
+    }
+    let mut prev = sibs[0];
+    for (i, &s) in sibs.iter().enumerate().skip(1) {
+        prev = t.op(&format!("m{i}"), 3, &[prev, s], 64);
+    }
+    let loss = t.op("loss", 1, &[prev], 8);
+    let log = t.finish(loss);
+    let b = baseline(&log);
+    let budget = b.budget_at(0.25);
+    for h in [Heuristic::lru(), Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()] {
+        let scan = run(&log, budget, h, PolicyKind::Scan, false);
+        let diff = run(&log, budget, h, PolicyKind::Differential, false);
+        assert_equivalent(&scan, &diff, h, "tie_fan").unwrap_or_else(|e| panic!("{e}"));
+        assert!(
+            !scan.stats.victims.is_empty(),
+            "{}: tie fan produced no evictions — budget not tight enough",
+            h.name()
+        );
+    }
 }
 
 /// √n sampling is a scan-coupled approximation: under `PolicyKind::Auto` it
@@ -249,6 +356,8 @@ fn banish_policy_equivalence_on_chain() {
             let scan = mk(PolicyKind::Scan);
             let indexed = mk(PolicyKind::Indexed);
             assert_equivalent(&scan, &indexed, h, policy.name()).unwrap_or_else(|e| panic!("{e}"));
+            let diff = mk(PolicyKind::Differential);
+            assert_equivalent(&scan, &diff, h, policy.name()).unwrap_or_else(|e| panic!("{e}"));
             assert!(
                 scan.ok(),
                 "chain under {} / {} should be feasible at 160 bytes: {:?}",
