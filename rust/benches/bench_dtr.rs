@@ -280,7 +280,11 @@ fn main() {
     let mut rows: Vec<ScalingRow> = Vec::new();
     let family = [Heuristic::dtr(), Heuristic::dtr_eq(), Heuristic::dtr_local()];
     let mut plan: Vec<(usize, Heuristic, &[PolicyKind])> = Vec::new();
-    let base: &[usize] = if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    // The 256 tier sits below AUTO_CROSSOVER_POOL: the Auto hybrid must
+    // price like the scan there (no kinetic bookkeeping), which is the
+    // measurement backing the crossover constant in `policy/auto.rs`.
+    let base: &[usize] =
+        if quick { &[256, 1_000, 10_000] } else { &[256, 1_000, 10_000, 100_000] };
     for &pool in base {
         for h in [Heuristic::lru(), Heuristic::size()] {
             plan.push((pool, h, &[PolicyKind::Scan, PolicyKind::Auto]));

@@ -15,10 +15,20 @@
 //! requests/sec and p50/p99 latency per arbiter policy (JSON key
 //! `frontend`). Empty or zeroed percentiles fail the run unless
 //! `--allow-empty` is passed — same contract as the scaling section.
+//!
+//! A third section (JSON key `dedup`) measures the content-addressed
+//! pinned-weight store: pinned parameter bytes at rest and inference
+//! throughput for a same-model fleet at 1/2/4/8 tenants, shared
+//! (`ServePool::with_dedup`) vs private copies, under a budget sized for
+//! one pinned copy plus `n` working sets. The run fails unless the shared
+//! mode pins strictly fewer bytes than private at the largest fleet.
 
 use dtr::dtr::Config;
 use dtr::frontend::{frontend_budget, serve_bursty, FrontendConfig};
-use dtr::serve::{fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantSpec};
+use dtr::serve::{
+    fleet_budget, run_tenants, tenant_envelope, ArbiterPolicy, ServePool, TenantDriver,
+    TenantKind, TenantSpec,
+};
 
 struct Row {
     tenants: usize,
@@ -89,6 +99,81 @@ fn run_frontend_point(n: usize, policy: ArbiterPolicy, per_class: usize) -> Fron
     }
 }
 
+struct DedupRow {
+    tenants: usize,
+    mode: &'static str,
+    /// Bytes the fleet's pinned parameters cost at rest: the arbiter's
+    /// shared ledger (one copy, measured) with dedup on, `n` private
+    /// copies with it off.
+    pinned_param_bytes: u64,
+    steps_per_sec: f64,
+    completed: usize,
+    requested: usize,
+    budget: u64,
+}
+
+/// Dedup capacity point: `n` tenants of the SAME base model serve `steps`
+/// inference requests each (round-robin, single caller thread — identical
+/// compute either mode) under a budget sized for ONE pinned copy plus `n`
+/// working sets. Shared mode fits by construction; private mode overdrafts
+/// `(n-1)` extra weight copies out of the evictable pool, which is the
+/// capacity cost the shared store removes.
+fn run_dedup_point(n: usize, dedup: bool, one_copy: u64, steps: usize) -> DedupRow {
+    let (peak, floor) = tenant_envelope(TenantKind::Transformer, 0x5EED).expect("envelope");
+    let budget = floor + (peak - floor) * n as u64;
+    let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, n).with_dedup(dedup);
+    let mut drivers: Vec<TenantDriver> = (0..n)
+        .map(|i| {
+            let cfg = Config { gate: Some(pool.lease()), ..Config::default() };
+            TenantDriver::build_with_store(
+                TenantKind::Transformer,
+                cfg,
+                0x5EED + i as u64,
+                pool.store().cloned(),
+            )
+            .expect("tenant build")
+        })
+        .collect();
+    let pinned_param_bytes =
+        if dedup { pool.shared_bytes() } else { one_copy * n as u64 };
+    let mut completed = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        for d in drivers.iter_mut() {
+            if d.infer().is_ok() {
+                completed += 1;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    drop(drivers);
+    pool.check_invariants().expect("ledger");
+    DedupRow {
+        tenants: n,
+        mode: if dedup { "shared" } else { "private" },
+        pinned_param_bytes,
+        steps_per_sec: completed as f64 / wall_s.max(1e-9),
+        completed,
+        requested: steps * n,
+        budget,
+    }
+}
+
+/// One tenant's worth of pinned parameter bytes, measured off a throwaway
+/// dedup pool (the exact quantity the shared ledger is charged).
+fn measure_one_copy() -> u64 {
+    let pool = ServePool::new(64 << 20, ArbiterPolicy::GlobalReclaim, 1).with_dedup(true);
+    let cfg = Config { gate: Some(pool.lease()), ..Config::default() };
+    let _d = TenantDriver::build_with_store(
+        TenantKind::Transformer,
+        cfg,
+        0x5EED,
+        pool.store().cloned(),
+    )
+    .expect("tenant build");
+    pool.shared_bytes()
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json_out = args
@@ -157,6 +242,32 @@ fn main() {
         }
     }
 
+    // Dedup capacity section: pinned parameter bytes at rest + inference
+    // throughput for a same-model fleet, shared (content-addressed
+    // WeightStore) vs private per-tenant copies, under a budget sized for
+    // ONE pinned copy plus n working sets.
+    println!("\n# bench_serve — dedup capacity: pinned weight bytes, shared vs private\n");
+    let one_copy = measure_one_copy();
+    let dedup_steps = if quick { 4 } else { 8 };
+    let mut dedup_rows = Vec::new();
+    for &n in tenant_counts {
+        for &dedup in &[true, false] {
+            let r = run_dedup_point(n, dedup, one_copy, dedup_steps);
+            println!(
+                "tenants={:<2} [{:<7}] pinned {:>9} B  {:>7.2} steps/s  {}/{} completed  \
+                 budget {} B",
+                r.tenants,
+                r.mode,
+                r.pinned_param_bytes,
+                r.steps_per_sec,
+                r.completed,
+                r.requested,
+                r.budget
+            );
+            dedup_rows.push(r);
+        }
+    }
+
     if let Some(path) = json_out {
         if rows.is_empty() && !allow_empty {
             eprintln!(
@@ -173,6 +284,30 @@ fn main() {
         if vacuous && !allow_empty {
             eprintln!(
                 "bench_serve: front-end section has empty percentile results for {path} \
+                 (pass --allow-empty to override)"
+            );
+            std::process::exit(1);
+        }
+        // The dedup section's acceptance bar: at the largest fleet, the
+        // shared store must pin strictly fewer bytes than private copies
+        // (the whole capacity claim), and every request must have run.
+        let max_n = dedup_rows.iter().map(|r| r.tenants).max().unwrap_or(0);
+        let shared_pin = dedup_rows
+            .iter()
+            .find(|r| r.tenants == max_n && r.mode == "shared")
+            .map(|r| r.pinned_param_bytes);
+        let private_pin = dedup_rows
+            .iter()
+            .find(|r| r.tenants == max_n && r.mode == "private")
+            .map(|r| r.pinned_param_bytes);
+        let no_win = match (shared_pin, private_pin) {
+            (Some(s), Some(p)) => s == 0 || s >= p,
+            _ => true,
+        };
+        if no_win && !allow_empty {
+            eprintln!(
+                "bench_serve: dedup section shows no capacity win at {max_n} tenants \
+                 (shared {shared_pin:?} vs private {private_pin:?} pinned bytes) for {path} \
                  (pass --allow-empty to override)"
             );
             std::process::exit(1);
@@ -213,6 +348,22 @@ fn main() {
                 r.completed,
                 r.rejected,
                 if i + 1 == front_rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n  \"dedup\": [\n");
+        for (i, r) in dedup_rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"tenants\": {}, \"mode\": \"{}\", \"pinned_param_bytes\": {}, \
+                 \"steps_per_sec\": {:.3}, \"completed\": {}, \"requested\": {}, \
+                 \"budget\": {}}}{}\n",
+                r.tenants,
+                r.mode,
+                r.pinned_param_bytes,
+                r.steps_per_sec,
+                r.completed,
+                r.requested,
+                r.budget,
+                if i + 1 == dedup_rows.len() { "" } else { "," }
             ));
         }
         s.push_str("  ]\n}\n");

@@ -21,10 +21,30 @@ use crate::runtime::executor::{Executor, HostTensor};
 /// own).
 pub type SharedExecutor = Arc<Mutex<Box<dyn Executor>>>;
 
+/// A backend buffer: either owned by this shard or a view of a
+/// content-addressed shared weight (`api::WeightStore`). Shared buffers
+/// are physically one allocation across every shard that interned the same
+/// bytes; they back pinned constants only, so the backend never frees or
+/// overwrites them through `execute`.
+enum Buf {
+    Owned(HostTensor),
+    Shared(Arc<HostTensor>),
+}
+
+impl Buf {
+    #[inline]
+    fn tensor(&self) -> &HostTensor {
+        match self {
+            Buf::Owned(v) => v,
+            Buf::Shared(v) => v,
+        }
+    }
+}
+
 /// Buffer store implementing the DTR backend trait over any [`Executor`].
 pub struct ExecBackend {
     exec: SharedExecutor,
-    bufs: HashMap<TensorId, HostTensor>,
+    bufs: HashMap<TensorId, Buf>,
     /// Wall time spent executing operators (Fig. 4's "operator time").
     pub exec_ns: u64,
     pub exec_count: u64,
@@ -36,11 +56,17 @@ impl ExecBackend {
     }
 
     pub fn put(&mut self, t: TensorId, v: HostTensor) {
-        self.bufs.insert(t, v);
+        self.bufs.insert(t, Buf::Owned(v));
+    }
+
+    /// Map a tensor id onto a shared allocation (a deduplicated pinned
+    /// weight) instead of a private copy.
+    pub fn put_shared(&mut self, t: TensorId, v: Arc<HostTensor>) {
+        self.bufs.insert(t, Buf::Shared(v));
     }
 
     pub fn get(&self, t: TensorId) -> Option<&HostTensor> {
-        self.bufs.get(&t)
+        self.bufs.get(&t).map(Buf::tensor)
     }
 }
 
@@ -49,7 +75,9 @@ impl Backend for ExecBackend {
         let t0 = Instant::now();
         let ins: Vec<&HostTensor> = inputs
             .iter()
-            .map(|t| self.bufs.get(t).with_context(|| format!("missing buffer {t}")))
+            .map(|t| {
+                self.bufs.get(t).map(Buf::tensor).with_context(|| format!("missing buffer {t}"))
+            })
             .collect::<Result<_>>()?;
         let outs = self.exec.lock().expect("executor poisoned").execute(name, &ins)?;
         anyhow::ensure!(
@@ -59,7 +87,7 @@ impl Backend for ExecBackend {
             outputs.len()
         );
         for (&t, v) in outputs.iter().zip(outs) {
-            self.bufs.insert(t, v);
+            self.bufs.insert(t, Buf::Owned(v));
         }
         self.exec_ns += t0.elapsed().as_nanos() as u64;
         self.exec_count += 1;

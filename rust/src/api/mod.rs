@@ -64,8 +64,10 @@
 
 mod backend;
 mod session;
+mod store;
 mod tensor;
 
 pub use backend::{ExecBackend, SharedExecutor};
 pub use session::{OpContract, Session};
+pub use store::{content_hash, PinnedWeight, WeightStore};
 pub use tensor::Tensor;

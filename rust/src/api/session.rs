@@ -136,8 +136,10 @@ impl<B: Backend + 'static> Session<B> {
 
     /// Name of the victim-selection index the runtime resolved from
     /// `Config::index` (e.g. `"staleness_list"` for `h_lru` and
-    /// `"differential"` for the staleness-bearing `h_dtr` family under the
-    /// default `PolicyKind::Auto`; `"scan"` for the reference path).
+    /// `"auto_differential"` — a scan that upgrades itself to the
+    /// differential index at a measured pool-size crossover — for the
+    /// staleness-bearing `h_dtr` family under the default
+    /// `PolicyKind::Auto`; `"scan"` for the reference path).
     pub fn policy_index(&self) -> &'static str {
         self.rt().index_name()
     }
@@ -213,6 +215,19 @@ impl Session<ExecBackend> {
         let mut rt = self.rt();
         let id = rt.constant(v.size_bytes());
         rt.backend_mut().put(id, v);
+        drop(rt);
+        self.wrap(id)
+    }
+
+    /// Register a *shared* pinned constant: the bytes are one physical
+    /// allocation interned in a cross-shard [`super::WeightStore`], charged
+    /// to the arbiter's shared ledger rather than this shard's lease. The
+    /// caller keeps the corresponding [`super::PinnedWeight`] alive for as
+    /// long as the tensor is in use.
+    pub fn constant_shared(&self, v: Arc<HostTensor>) -> Tensor {
+        let mut rt = self.rt();
+        let id = rt.constant_shared(v.size_bytes());
+        rt.backend_mut().put_shared(id, v);
         drop(rt);
         self.wrap(id)
     }

@@ -60,6 +60,18 @@ pub struct TrainConfig {
     /// frontend`): submits beyond it are shed with an explicit Rejected
     /// outcome (backpressure instead of unbounded queues).
     pub queue_cap: usize,
+    /// Content-addressed pinned-weight sharing for the serve fleet: tenants
+    /// of the same base model intern their pinned parameters in the pool's
+    /// `WeightStore` and share one physical copy, charged to the arbiter
+    /// once per distinct buffer. On by default; `--no-dedup` reverts to
+    /// private per-tenant copies (decision-exact either way at N=1).
+    pub dedup: bool,
+    /// Cross-shard request coalescing in the front-end scheduler: runs of
+    /// compatible Infer requests in one worker batch execute as a single
+    /// stacked kernel invocation instead of back-to-back singles. On by
+    /// default; `--no-coalesce` forces serial execution (the coalesced
+    /// path is bitwise-equal, so this is a perf knob, not a results knob).
+    pub coalesce: bool,
 }
 
 impl Default for TrainConfig {
@@ -90,6 +102,8 @@ impl Default for TrainConfig {
             threads: 1,
             fused: false,
             queue_cap: 64,
+            dedup: true,
+            coalesce: true,
         }
     }
 }
@@ -183,6 +197,8 @@ impl TrainConfig {
                 "threads" => cfg.threads = val.as_usize().context("threads")?,
                 "fused" => cfg.fused = val.as_bool().context("fused")?,
                 "queue_cap" => cfg.queue_cap = val.as_usize().context("queue_cap")?,
+                "dedup" => cfg.dedup = val.as_bool().context("dedup")?,
+                "coalesce" => cfg.coalesce = val.as_bool().context("coalesce")?,
                 "arbiter" => {
                     let name = val.as_str().context("arbiter")?;
                     cfg.arbiter = ArbiterPolicy::parse(name)
@@ -246,6 +262,12 @@ impl TrainConfig {
             self.fused = true;
         }
         self.queue_cap = args.usize_or("queue-cap", self.queue_cap);
+        if args.bool("no-dedup") {
+            self.dedup = false;
+        }
+        if args.bool("no-coalesce") {
+            self.coalesce = false;
+        }
         if let Some(a) = args.get("arbiter") {
             self.arbiter =
                 ArbiterPolicy::parse(a).with_context(|| format!("arbiter policy {a}"))?;
@@ -456,6 +478,32 @@ mod tests {
         );
         let c = TrainConfig::load(&args).unwrap();
         assert_eq!(c.queue_cap, 3);
+    }
+
+    #[test]
+    fn dedup_and_coalesce_knobs_parse_and_override() {
+        let c = TrainConfig::default();
+        assert!(c.dedup, "dedup must default on (pinned floor is the capacity win)");
+        assert!(c.coalesce, "coalesce must default on (bitwise-equal perf knob)");
+        let p = write_tmp(r#"{"dedup": false, "coalesce": false}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert!(!c.dedup);
+        assert!(!c.coalesce);
+        let p2 = write_tmp(r#"{"dedup": true, "coalesce": true}"#);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p2.to_str().unwrap().to_string(),
+                "--no-dedup".to_string(),
+                "--no-coalesce".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert!(!c.dedup, "--no-dedup must win over the file");
+        assert!(!c.coalesce, "--no-coalesce must win over the file");
+        let bad = write_tmp(r#"{"dedup": "yes"}"#);
+        assert!(TrainConfig::from_file(&bad).is_err());
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct Storage {
     /// Pinned storages are unevictable: constants, banish-neighbors, and
     /// final outputs. Pinned storages may still be banished.
     pub pinned: bool,
+    /// Content-addressed shared constant (`Runtime::constant_shared`): the
+    /// bytes live in a cross-shard `WeightStore` and are charged to the
+    /// arbiter's shared ledger, not to this runtime's lease gate. Shared
+    /// storages are always pinned, so they are invisible to eviction; the
+    /// flag only routes the gate accounting on banish/teardown.
+    pub shared: bool,
     pub banished: bool,
     /// External (user program) reference count.
     pub refs: u32,
@@ -128,6 +134,7 @@ impl Graph {
             resident: false,
             locks: 0,
             pinned: false,
+            shared: false,
             banished: false,
             refs: 0,
             last_access: 0,

@@ -161,6 +161,34 @@ pub trait BudgetGate: Send + Sync {
     fn bind(&self, remote: Arc<dyn RemoteEvictor>);
 }
 
+/// The budget-side contract of content-addressed pinned-weight sharing
+/// (`api::store::WeightStore`): one *global* ledger charged exactly once
+/// per distinct pinned buffer, however many shards intern it.
+///
+/// This is deliberately not part of [`BudgetGate`]: shared weights belong
+/// to no single shard's lease. The store charges the ledger when a buffer
+/// is first interned and refunds it when the **last** holder releases it;
+/// the arbiter subtracts the shared total from the grantable pool so the
+/// freed budget flows to activations instead of duplicate weights (Coop's
+/// pooled-memory lesson — see the `serve` module docs).
+pub trait PinnedLedger: Send + Sync {
+    /// A distinct pinned buffer of `bytes` entered the shared store.
+    fn charge_shared(&self, bytes: u64);
+
+    /// The last holder of a shared buffer released it.
+    fn refund_shared(&self, bytes: u64);
+}
+
+/// Ledger that ignores charges — for stores used outside a serving pool
+/// (single-tenant runs and unit tests of the store mechanics).
+#[derive(Debug, Default)]
+pub struct NullLedger;
+
+impl PinnedLedger for NullLedger {
+    fn charge_shared(&self, _bytes: u64) {}
+    fn refund_shared(&self, _bytes: u64) {}
+}
+
 /// Cloneable, `Debug`-able handle to a [`BudgetGate`], carried inside
 /// [`super::Config`]. Cloning a `Config` (one session per training step)
 /// keeps pointing at the same shard lease.

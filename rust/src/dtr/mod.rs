@@ -27,7 +27,8 @@ pub use graph::{Graph, Operator, Storage, Tensor};
 pub use heuristics::{CostKind, Heuristic, InvalidationScope, ParamSpec};
 pub use ids::{OpId, StorageId, TensorId};
 pub use lease::{
-    BudgetGate, GateRef, LocalEvictor, RemoteEvictor, RemotePeek, RemoteReclaim, RuntimeHandle,
+    BudgetGate, GateRef, LocalEvictor, NullLedger, PinnedLedger, RemoteEvictor, RemotePeek,
+    RemoteReclaim, RuntimeHandle,
 };
 pub use policy::{DeallocPolicy, PolicyIndex, PolicyKind};
 pub use runtime::{Config, DtrError, OutSpec, Runtime, Stats};

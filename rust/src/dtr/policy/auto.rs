@@ -1,0 +1,144 @@
+//! Pool-size-adaptive victim selection: the reference scan until the pool
+//! is large enough for the kinetic differential index to pay for itself,
+//! then a one-way upgrade.
+//!
+//! The differential index (`differential.rs`) makes `pop_min` sub-linear,
+//! but every insert/remove/access pays tournament bookkeeping the O(pool)
+//! scan never does. On the serve fleet's small per-shard pools that
+//! overhead is pure loss; on a training shard under a tight budget the
+//! pool grows into the thousands and the scan's per-eviction pass is the
+//! loss instead. `AutoIndex` holds both: it *is* the scan while the pool
+//! stays below [`AUTO_CROSSOVER_POOL`], and at the first `pop_min` that
+//! sees a pool at or past the crossover it builds a fresh
+//! [`DifferentialIndex`] and replays `on_insert` for the live pool.
+//!
+//! The rebuild is decision-exact by construction: a fresh differential
+//! slot starts `dirty`, so every replayed entry lands on the dirty list
+//! and has its numerator recomputed through [`SelectCtx`] at the very
+//! `pop_min` that triggered the upgrade, and staleness epochs are read
+//! from `Graph::storage(s).last_access` — none of the invalidations or
+//! accesses the scan ignored are needed, because nothing was cached yet.
+//!
+//! The upgrade is one-way. A pool that shrinks back under the crossover
+//! keeps the differential index: its steady-state maintenance is cheap at
+//! small pools (the bookkeeping constant, not the build), while
+//! downgrade/re-upgrade hysteresis would pay the O(pool) rebuild on every
+//! oscillation around the threshold.
+
+use super::super::graph::Graph;
+use super::super::heuristics::Heuristic;
+use super::super::ids::StorageId;
+use super::differential::DifferentialIndex;
+use super::scan::ScanIndex;
+use super::{PolicyIndex, SelectCtx};
+
+/// Pool size at which `pop_min` upgrades from the scan to the differential
+/// index.
+///
+/// Backed by the `eviction_scaling` section of `BENCH_dtr.json`
+/// (`benches/bench_dtr.rs`): the reference scan costs ~2.0 ns x pool per
+/// eviction across the sweep (2.3 us at the 1k pool scaling linearly to
+/// 1.9 ms at 1M), while the differential index is flat at 0.6-2.1 us per
+/// eviction for the three staleness-bearing heuristics. Equating the two
+/// puts the break-even pool at roughly 300 (`h_dtr_local`, cheapest
+/// numerator) to 900 (`h_dtr`, exact e*); 512 sits mid-family, and the
+/// 256-entry bench tier pins the scan side of the crossover in CI.
+pub const AUTO_CROSSOVER_POOL: usize = 512;
+
+/// Scan-until-crossover hybrid for the staleness-bearing `h_DTR` family.
+pub struct AutoIndex {
+    h: Heuristic,
+    scan: ScanIndex,
+    /// `Some` once the pool first reached [`AUTO_CROSSOVER_POOL`].
+    upgraded: Option<DifferentialIndex>,
+}
+
+impl AutoIndex {
+    pub fn new(h: Heuristic) -> Self {
+        AutoIndex { h, scan: ScanIndex::new(), upgraded: None }
+    }
+
+    /// Build a fresh differential index over the live pool. Each replayed
+    /// entry is one maintenance traversal under Fig. 12 accounting.
+    fn upgrade(&mut self, ctx: &mut SelectCtx<'_>) -> &mut DifferentialIndex {
+        let mut d = DifferentialIndex::new(self.h);
+        d.on_clock(ctx.clock);
+        for &s in ctx.pool {
+            d.on_insert(s, ctx.graph);
+        }
+        *ctx.accesses += ctx.pool.len() as u64;
+        self.upgraded.insert(d)
+    }
+}
+
+impl PolicyIndex for AutoIndex {
+    fn name(&self) -> &'static str {
+        "auto_differential"
+    }
+
+    fn on_insert(&mut self, s: StorageId, g: &Graph) {
+        match &mut self.upgraded {
+            Some(d) => d.on_insert(s, g),
+            None => self.scan.on_insert(s, g),
+        }
+    }
+
+    fn on_remove(&mut self, s: StorageId, g: &Graph) {
+        match &mut self.upgraded {
+            Some(d) => d.on_remove(s, g),
+            None => self.scan.on_remove(s, g),
+        }
+    }
+
+    fn on_access(&mut self, s: StorageId, g: &Graph, clock: u64) {
+        match &mut self.upgraded {
+            Some(d) => d.on_access(s, g, clock),
+            None => self.scan.on_access(s, g, clock),
+        }
+    }
+
+    fn on_clock(&mut self, clock: u64) {
+        if let Some(d) = &mut self.upgraded {
+            d.on_clock(clock);
+        }
+    }
+
+    fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
+        match &mut self.upgraded {
+            Some(d) => d.invalidate(s, g, accesses),
+            None => self.scan.invalidate(s, g, accesses),
+        }
+    }
+
+    fn on_component_touched(&mut self, root: u32) {
+        if let Some(d) = &mut self.upgraded {
+            d.on_component_touched(root);
+        }
+    }
+
+    fn on_components_merged(&mut self, kept: u32, absorbed: u32) {
+        if let Some(d) = &mut self.upgraded {
+            d.on_components_merged(kept, absorbed);
+        }
+    }
+
+    fn on_retire(&mut self, retired: &[StorageId], g: &Graph) {
+        if let Some(d) = &mut self.upgraded {
+            d.on_retire(retired, g);
+        }
+    }
+
+    fn metadata_len(&self) -> usize {
+        self.upgraded.as_ref().map_or(0, |d| d.metadata_len())
+    }
+
+    fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
+        if let Some(d) = &mut self.upgraded {
+            return d.pop_min(ctx);
+        }
+        if ctx.pool.len() >= AUTO_CROSSOVER_POOL {
+            return self.upgrade(ctx).pop_min(ctx);
+        }
+        self.scan.pop_min(ctx)
+    }
+}

@@ -19,6 +19,7 @@
 //! | [`LazyHeapIndex`]     | clock-free scores: `h_MSPS`, `h_{e*}`, staleness-ablated grid cells | E.1 score caching as a lazy min-heap: invalidation re-keys only the dirtied graph/eq-class neighborhood; stale generations are skipped on pop |
 //! | [`CachedCostScan`]    | staleness-bearing grid cells (fallback under [`PolicyKind::Cached`]) | E.1 cost caching: the expensive `e*`/ẽ*/local numerator is cached and invalidated per neighborhood; the staleness denominator is recomputed in a cheap O(pool) pass |
 //! | [`DifferentialIndex`] | `h_DTR`, `h_DTR^eq`, `h_DTR^local`, `h_LRU`-shaped cells, staleness-bearing grid cells | epoch tiers over the factored score + a kinetic tournament: `pop_min` in O(log) amortized, no O(pool) pass |
+//! | [`AutoIndex`]         | staleness-bearing cells under [`PolicyKind::Auto`] | [`ScanIndex`] until the pool reaches [`AUTO_CROSSOVER_POOL`], then a one-way decision-exact upgrade to [`DifferentialIndex`] — small serve pools skip the kinetic bookkeeping entirely |
 //!
 //! Why `h_DTR` is *not* a plain heap: its score `c(S)/[m(S)·staleness(S)]`
 //! re-orders as the clock advances (a cheap-but-fresh storage overtakes an
@@ -58,6 +59,7 @@
 //! additionally assumes clocks/sizes below 2^52 (where `1/x` is still
 //! injective in `f64`) — 52 days of nanosecond clock.
 
+mod auto;
 mod cached;
 mod dealloc;
 mod differential;
@@ -68,6 +70,7 @@ mod staleness;
 
 use std::time::Instant;
 
+pub use auto::{AutoIndex, AUTO_CROSSOVER_POOL};
 pub use cached::CachedCostScan;
 pub use dealloc::DeallocPolicy;
 pub use differential::DifferentialIndex;
@@ -297,6 +300,7 @@ pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn 
         }
         _ if h.clock_free() => Box::new(LazyHeapIndex::new(h)),
         Heuristic::Param(_) if kind == PolicyKind::Cached => Box::new(CachedCostScan::new(h)),
+        Heuristic::Param(_) if kind == PolicyKind::Auto => Box::new(AutoIndex::new(h)),
         Heuristic::Param(_) => Box::new(DifferentialIndex::new(h)),
         _ => Box::new(ScanIndex::new()),
     }
@@ -469,9 +473,12 @@ mod tests {
         // Exact indexes under Auto.
         assert_eq!(route(Heuristic::lru(), PolicyKind::Auto, false), "staleness_list");
         assert_eq!(route(Heuristic::size(), PolicyKind::Auto, false), "size_heap");
-        assert_eq!(route(Heuristic::dtr(), PolicyKind::Auto, false), "differential");
-        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Auto, false), "differential");
-        assert_eq!(route(Heuristic::dtr_local(), PolicyKind::Auto, false), "differential");
+        // The staleness-bearing family gets the scan-until-crossover
+        // hybrid under Auto: small serve pools never pay the kinetic
+        // bookkeeping, large training pools upgrade at the first pop.
+        assert_eq!(route(Heuristic::dtr(), PolicyKind::Auto, false), "auto_differential");
+        assert_eq!(route(Heuristic::dtr_eq(), PolicyKind::Auto, false), "auto_differential");
+        assert_eq!(route(Heuristic::dtr_local(), PolicyKind::Auto, false), "auto_differential");
         assert_eq!(route(Heuristic::Msps, PolicyKind::Auto, false), "lazy_heap");
         assert_eq!(route(Heuristic::EStarCount, PolicyKind::Auto, false), "lazy_heap");
         // Indexed overrides sampling.

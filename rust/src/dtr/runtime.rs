@@ -199,6 +199,12 @@ pub struct Runtime<B: Backend> {
     root_buf: Vec<u32>,
     /// Scratch for double-compute bookkeeping.
     was_defined: Vec<bool>,
+    /// Bytes of resident content-addressed shared constants
+    /// ([`Runtime::constant_shared`]). Counted in `stats.memory` (they are
+    /// physically resident and `check_invariants` ties memory to the graph)
+    /// but never charged to the lease gate — the cross-shard store charges
+    /// the arbiter's shared ledger exactly once per distinct buffer.
+    shared_bytes: u64,
 }
 
 impl<B: Backend> Runtime<B> {
@@ -220,6 +226,7 @@ impl<B: Backend> Runtime<B> {
             retired: Vec::new(),
             root_buf: Vec::new(),
             was_defined: Vec::new(),
+            shared_bytes: 0,
         }
     }
 
@@ -313,6 +320,38 @@ impl<B: Backend> Runtime<B> {
         self.stats.memory += size;
         self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
         t
+    }
+
+    /// Register a **shared** pinned constant: a content-addressed buffer
+    /// owned by a cross-shard `WeightStore`, physically shared by every
+    /// shard that interned the same bytes. Like [`Runtime::constant`] it is
+    /// resident, pinned, and never rematerializable — so it is invisible to
+    /// eviction — but its bytes are *not* reserved through this shard's
+    /// lease gate: the store already charged the arbiter's shared ledger
+    /// exactly once for the single physical copy. The bytes still count in
+    /// `stats.memory` (the buffer is genuinely resident in this shard's
+    /// address space for accounting purposes), and teardown refunds only
+    /// `memory - shared_bytes` to the gate.
+    pub fn constant_shared(&mut self, size: u64) -> TensorId {
+        let uf = self.uf.make_set();
+        let s = self.graph.new_storage(size, uf);
+        let t = self.graph.new_tensor(s, None, false);
+        self.graph.tensor_mut(t).defined = true;
+        let st = self.graph.storage_mut(s);
+        st.resident = true;
+        st.pinned = true;
+        st.shared = true;
+        st.refs = 1;
+        st.last_access = self.stats.clock;
+        self.shared_bytes += size;
+        self.stats.memory += size;
+        self.stats.peak_memory = self.stats.peak_memory.max(self.stats.memory);
+        t
+    }
+
+    /// Bytes of resident shared constants (see [`Runtime::constant_shared`]).
+    pub fn shared_bytes(&self) -> u64 {
+        self.shared_bytes
     }
 
     /// Record and perform a new operator application. Returns the output
@@ -689,7 +728,12 @@ impl<B: Backend> Runtime<B> {
             self.backend.free(&[root]);
             let size = self.graph.storage(s).size;
             self.stats.memory -= size;
-            if let Some(g) = &self.cfg.gate {
+            if self.graph.storage(s).shared {
+                // Shared constants were never charged to the gate; the
+                // store refunds the arbiter's shared ledger when the last
+                // holder releases its interned handle.
+                self.shared_bytes -= size;
+            } else if let Some(g) = &self.cfg.gate {
                 g.0.on_free(size);
             }
         }
@@ -873,8 +917,12 @@ impl<B: Backend> Drop for Runtime<B> {
     /// pinned constants (which no eviction ever refunds) every step.
     fn drop(&mut self) {
         if let Some(g) = &self.cfg.gate {
-            if self.stats.memory > 0 {
-                g.0.on_free(self.stats.memory);
+            // Shared constants were never charged to this lease: their one
+            // physical copy lives in the cross-shard store, whose refcount
+            // drop refunds the arbiter's shared ledger separately.
+            let leased = self.stats.memory.saturating_sub(self.shared_bytes);
+            if leased > 0 {
+                g.0.on_free(leased);
             }
         }
     }
@@ -1189,7 +1237,7 @@ mod tests {
             r.stats.clone()
         };
         let scan = run(PolicyKind::Scan);
-        let indexed = run(PolicyKind::Auto);
+        let indexed = run(PolicyKind::Indexed);
         assert!(scan.same_decisions(&indexed), "victim sequences diverged");
         assert!(
             indexed.metadata_accesses < scan.metadata_accesses,
@@ -1197,6 +1245,40 @@ mod tests {
             indexed.metadata_accesses,
             scan.metadata_accesses
         );
+    }
+
+    /// The Auto hybrid: a pool below the crossover is served by the plain
+    /// scan (zero index metadata), growing past it upgrades to the kinetic
+    /// differential index mid-drain, and the full victim sequence is
+    /// identical to the reference scan across the upgrade boundary.
+    #[test]
+    fn auto_index_upgrades_at_the_pool_crossover() {
+        use super::policy::AUTO_CROSSOVER_POOL;
+        let drive = |kind: PolicyKind| {
+            let cfg = Config { heuristic: Heuristic::dtr(), index: kind, ..Config::default() };
+            let mut r = Runtime::new(cfg, NullBackend::new());
+            // Start below the crossover: the hybrid must stay in scan mode.
+            let ts = run_chain(&mut r, AUTO_CROSSOVER_POOL - 32);
+            let mut victims = Vec::new();
+            for _ in 0..8 {
+                victims.push(r.evict_one().expect("pool drained early"));
+            }
+            let pre_upgrade_meta = r.index_metadata_len();
+            // Grow past the crossover and keep draining: the first pop at
+            // or past the threshold flips the hybrid over.
+            run_chain_from(&mut r, ts[ts.len() - 1], 64);
+            assert!(r.pool_len() >= AUTO_CROSSOVER_POOL, "pool never reached the crossover");
+            for _ in 0..32 {
+                victims.push(r.evict_one().expect("pool drained early"));
+            }
+            r.check_invariants().unwrap();
+            (victims, pre_upgrade_meta, r.index_metadata_len())
+        };
+        let (scan_victims, _, _) = drive(PolicyKind::Scan);
+        let (auto_victims, pre, post) = drive(PolicyKind::Auto);
+        assert_eq!(scan_victims, auto_victims, "victim sequences diverged");
+        assert_eq!(pre, 0, "hybrid paid index metadata below the crossover");
+        assert!(post > 0, "hybrid never upgraded past the crossover");
     }
 
     #[test]
@@ -1227,6 +1309,55 @@ mod tests {
         for &t in &ts[1..20] {
             r.release(t);
         }
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_constants_are_resident_pinned_and_never_victims() {
+        let mut r = rt(8, Heuristic::lru());
+        let w = r.constant_shared(4);
+        assert_eq!(r.stats.memory, 4);
+        assert_eq!(r.shared_bytes(), 4);
+        assert!(r.is_resident(w));
+        // Shared weights are invisible to eviction: a chain that forces a
+        // steady eviction stream must never pick the shared storage.
+        let cfg_victims = {
+            let mut rr = Runtime::new(
+                Config {
+                    budget: 8,
+                    heuristic: Heuristic::lru(),
+                    trace_victims: true,
+                    ..Config::default()
+                },
+                NullBackend::new(),
+            );
+            let w = rr.constant_shared(4);
+            let ts = run_chain_from(&mut rr, w, 32);
+            rr.access(ts[32]).unwrap();
+            assert!(rr.stats.evict_count > 0, "budget never bound");
+            let ws = rr.graph.storage_of(w);
+            assert!(rr.is_resident(w), "shared weight was evicted");
+            rr.check_invariants().unwrap();
+            (ws, rr.stats.victims.clone())
+        };
+        assert!(
+            !cfg_victims.1.contains(&cfg_victims.0),
+            "shared storage appeared in the victim trace"
+        );
+    }
+
+    #[test]
+    fn banishing_a_shared_constant_clears_shared_bytes() {
+        let mut r = Runtime::new(
+            Config { policy: DeallocPolicy::Banish, ..Config::default() },
+            NullBackend::new(),
+        );
+        let w = r.constant_shared(8);
+        let _t = r.call("f", 1, &[w], &[OutSpec::sized(1)]).unwrap()[0];
+        assert_eq!(r.shared_bytes(), 8);
+        r.release(w);
+        assert_eq!(r.shared_bytes(), 0, "banish must release the shared-byte gauge");
+        assert_eq!(r.graph.resident_bytes(), r.stats.memory);
         r.check_invariants().unwrap();
     }
 

@@ -26,7 +26,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::api::{OpContract, Session, SharedExecutor, Tensor};
+use crate::api::{OpContract, PinnedWeight, Session, SharedExecutor, Tensor, WeightStore};
 use crate::dtr;
 use crate::runtime::executor::{init_param, Executor, HostTensor};
 use crate::runtime::{InterpExecutor, Manifest, ModelConfig};
@@ -61,6 +61,12 @@ pub struct Engine {
     pub optimizer: Optimizer,
     /// name -> (tensor, param group) for every parameter tensor.
     params: Vec<ParamSlot>,
+    /// Cross-shard weight store, when this engine shares its pinned
+    /// parameters ([`Engine::attach_store`]).
+    store: Option<Arc<WeightStore>>,
+    /// One interned handle per parameter (same order as `params`); empty
+    /// when no store is attached.
+    pins: Vec<PinnedWeight>,
     step: u64,
     data_rng: Rng,
 }
@@ -89,6 +95,8 @@ impl Engine {
             dtr_cfg,
             optimizer,
             params: Vec::new(),
+            store: None,
+            pins: Vec::new(),
             step: 0,
             data_rng: Rng::new(0xDA7A),
         };
@@ -129,6 +137,31 @@ impl Engine {
 
     pub fn backend_name(&self) -> &'static str {
         self.exec.lock().expect("executor poisoned").name()
+    }
+
+    /// Share this engine's pinned parameters through a content-addressed
+    /// [`WeightStore`]: every parameter buffer is interned, so engines with
+    /// bit-identical weights (N serving tenants of one base model) hold one
+    /// physical copy, charged to the store's ledger once per distinct
+    /// buffer. Steps then register parameters via
+    /// [`Session::constant_shared`], and each fine-tune update re-interns
+    /// the new values (the old interns are released, refunding the ledger
+    /// once the last sharer moves on).
+    pub fn attach_store(&mut self, store: Arc<WeightStore>) {
+        self.store = Some(store);
+        self.reintern_pins();
+    }
+
+    /// Re-intern every parameter's current value (no-op without a store).
+    /// New handles are taken before the old ones drop, so a buffer shared
+    /// with other engines is never refunded-and-recharged across an update
+    /// that leaves it unchanged.
+    fn reintern_pins(&mut self) {
+        if let Some(store) = &self.store {
+            let fresh: Vec<PinnedWeight> =
+                self.params.iter().map(|p| store.intern(p.value.clone())).collect();
+            self.pins = fresh;
+        }
     }
 
     /// Initialize parameters + optimizer state host-side (same scheme as
@@ -202,8 +235,13 @@ impl Engine {
 
         let mut param_ts: Vec<(Tensor, Option<Tensor>, Option<Tensor>)> =
             Vec::with_capacity(self.params.len());
-        for slot in &self.params {
-            let p = s.constant(slot.value.clone());
+        for (i, slot) in self.params.iter().enumerate() {
+            // Shared (deduplicated) parameter buffers when a store is
+            // attached; optimizer state stays private either way.
+            let p = match self.pins.get(i) {
+                Some(pin) => s.constant_shared(pin.arc()),
+                None => s.constant(slot.value.clone()),
+            };
             let (mm, vv) = if self.optimizer == Optimizer::Adam {
                 (Some(s.constant(slot.m.clone())), Some(s.constant(slot.v.clone())))
             } else {
@@ -302,6 +340,10 @@ impl Engine {
         }
 
         s.check_invariants()?;
+        // The updated parameters are this engine's weights from now on:
+        // re-intern them so the shared store serves the *new* bytes to the
+        // next step (and releases this engine's claim on the old ones).
+        self.reintern_pins();
 
         Ok(StepResult {
             loss,
@@ -327,8 +369,15 @@ impl Engine {
         let as_f32 = |xs: &[i32]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
         let tok = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&tokens)));
         let tgt = s.constant(HostTensor::new(vec![cfg.batch, cfg.seq], as_f32(&targets)));
-        let param_ts: Vec<Tensor> =
-            self.params.iter().map(|slot| s.constant(slot.value.clone())).collect();
+        let param_ts: Vec<Tensor> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| match self.pins.get(i) {
+                Some(pin) => s.constant_shared(pin.arc()),
+                None => s.constant(slot.value.clone()),
+            })
+            .collect();
 
         let mut x = s.call("embed_fwd", &[&tok, &param_ts[0]])?.remove(0);
         for l in 0..cfg.n_layers {
@@ -346,6 +395,100 @@ impl Engine {
         let loss = s.scalar(&loss_t)?;
         s.check_invariants()?;
         Ok(loss)
+    }
+
+    /// `n` coalesced inference requests as **one** batched kernel
+    /// invocation: their token batches are stacked into a `[n*batch, seq]`
+    /// input, the forward runs through `batched_embed_fwd` /
+    /// `batched_block_fwd` (the interpreter widens its per-sample kernels
+    /// to the stacked batch, reading the single shared weight copy), and
+    /// each request's loss is computed on its own row-slice.
+    ///
+    /// Consumes the same `n` data batches, in the same order, as `n`
+    /// serial [`Engine::infer_step`] calls — and because every stacked
+    /// kernel is per-sample (GEMM rows are independent accumulation
+    /// chains, attention loops per (batch, head), layernorm per row), the
+    /// returned losses are **bitwise equal** to the serial path
+    /// (`tests/stress_dedup.rs`).
+    pub fn infer_batch(&mut self, n: usize) -> Result<Vec<f32>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if n == 1 {
+            return Ok(vec![self.infer_step()?]);
+        }
+        let cfg = self.cfg;
+        let (b, sq, d) = (cfg.batch, cfg.seq, cfg.d_model);
+        // Same data-RNG stream as n serial infer_steps, consumed in order.
+        let batches: Vec<(Vec<i32>, Vec<i32>)> = (0..n).map(|_| self.make_batch()).collect();
+        let s =
+            Session::with_contract(Arc::clone(&self.exec), self.dtr_cfg.clone(), &self.contract);
+
+        let as_f32 = |xs: &[i32]| xs.iter().map(|&x| x as f32).collect::<Vec<f32>>();
+        let mut stacked = Vec::with_capacity(n * b * sq);
+        for (tokens, _) in &batches {
+            stacked.extend(tokens.iter().map(|&x| x as f32));
+        }
+        let tok = s.constant(HostTensor::new(vec![n * b, sq], stacked));
+        let tgts: Vec<Tensor> = batches
+            .iter()
+            .map(|(_, targets)| s.constant(HostTensor::new(vec![b, sq], as_f32(targets))))
+            .collect();
+        let param_ts: Vec<Tensor> = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| match self.pins.get(i) {
+                Some(pin) => s.constant_shared(pin.arc()),
+                None => s.constant(slot.value.clone()),
+            })
+            .collect();
+
+        // Batched ops are shape-dynamic (the stacked batch is not in the
+        // manifest), so they go through call_sized: the interpreter
+        // derives the widened batch from the input shapes, and the cost
+        // model charges n times the base op.
+        let xbytes = (n * b * sq * d * 4) as u64;
+        let mut x = s
+            .call_sized(
+                "batched_embed_fwd",
+                n as u64 * s.op_cost("embed_fwd"),
+                &[&tok, &param_ts[0]],
+                &[xbytes],
+            )?
+            .remove(0);
+        for l in 0..cfg.n_layers {
+            let y = {
+                let mut ins: Vec<&Tensor> = vec![&x];
+                for k in 0..6 {
+                    ins.push(&param_ts[1 + l * 6 + k]);
+                }
+                s.call_sized(
+                    "batched_block_fwd",
+                    n as u64 * s.op_cost("block_fwd"),
+                    &ins,
+                    &[xbytes],
+                )?
+                .remove(0)
+            };
+            x = y;
+        }
+        // Per-request losses: loss_fwd averages over its rows, so each
+        // request's loss comes from its own sample-slice of the stacked
+        // activations (bitwise what its serial forward would produce).
+        let w_out = &param_ts[self.params.len() - 1];
+        let slice_bytes = (b * sq * d * 4) as u64;
+        let mut losses = Vec::with_capacity(n);
+        for (i, tgt) in tgts.iter().enumerate() {
+            let idx = s.constant(HostTensor::new(vec![2], vec![(i * b) as f32, b as f32]));
+            let xi = s
+                .call_sized("batched_slice_rows", 1, &[&x, &idx], &[slice_bytes])?
+                .remove(0);
+            let loss_t = s.call("loss_fwd", &[&xi, w_out, tgt])?.remove(0);
+            losses.push(s.scalar(&loss_t)?);
+        }
+        s.check_invariants()?;
+        Ok(losses)
     }
 
     /// Measure the unbudgeted peak memory of one step (for ratio budgets).
@@ -370,6 +513,9 @@ impl Engine {
             slot.m = m;
             slot.v = vv;
         }
+        // The throwaway step re-interned the post-step weights; point the
+        // shared store back at the restored ones.
+        self.reintern_pins();
         Ok(peak)
     }
 

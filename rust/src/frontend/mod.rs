@@ -15,10 +15,16 @@
 //! * **Scheduler** ([`scheduler::Scheduler`]) — bounded per-class FIFO
 //!   queues behind one mutex + condvar. Submits are admit-or-shed (never
 //!   block, never grow unbounded); workers pull FIFO batches of up to
-//!   `batch_max` same-class requests and run them back-to-back on one
-//!   driver — the batching win is amortizing queue wakeups and keeping a
-//!   shard's working set (its pinned weights) hot across consecutive
-//!   requests. Snippet 1's `Scheduler` "assigning tasks to idle agents".
+//!   `batch_max` same-class requests, and with
+//!   [`FrontendConfig::coalesce`] on (the default) a run of consecutive
+//!   `Infer` requests inside a batch runs as **one** batched kernel
+//!   invocation (`TenantDriver::infer_batch`: the requests' token batches
+//!   stack into one GEMM-widened forward over the shard's single shared
+//!   weight copy, and each member's loss comes off its own row-slice,
+//!   bitwise what serial service would return). Remaining requests run
+//!   back-to-back — that batching win is amortizing queue wakeups and
+//!   keeping a shard's working set hot. Snippet 1's `Scheduler`
+//!   "assigning tasks to idle agents".
 //! * **Event bus** ([`events::EventBus`]) — every request deposits exactly
 //!   one terminal event (completed / rejected / failed) with timestamps
 //!   off a shared epoch; [`events::summarize`] turns the log into
@@ -33,7 +39,11 @@
 //! (static-split vs global-reclaim) are meant to absorb. Because DTR is
 //! online (PAPER §1), requests with data-dependent shapes (LSTM/TreeLSTM
 //! classes) need no ahead-of-time plan — admission control is the *only*
-//! planning the front-end does.
+//! planning the front-end does. When the pool was built
+//! [`ServePool::with_dedup`], shard workers also intern their pinned
+//! weights in the pool's content-addressed [`WeightStore`], so every
+//! transformer shard reads one physical copy of the base model and the
+//! fleet's pinned floor scales with distinct models, not shards.
 //!
 //! **Backpressure contract**: queues are bounded by
 //! `TrainConfig::queue_cap`; a submit against a full queue is shed with an
@@ -49,6 +59,7 @@ mod queue;
 mod request;
 mod scheduler;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
@@ -58,6 +69,7 @@ pub use queue::{Admission, ClassQueue};
 pub use request::{ClassSpec, Outcome, Request, RequestOp};
 pub use scheduler::Scheduler;
 
+use crate::api::WeightStore;
 use crate::dtr;
 use crate::serve::{fleet_budget, ServePool, TenantDriver};
 use crate::util::rng::Rng;
@@ -71,11 +83,17 @@ pub struct FrontendConfig {
     pub queue_cap: usize,
     /// Max same-class requests a worker runs back-to-back per wakeup.
     pub batch_max: usize,
+    /// Coalesce runs of consecutive `Infer` requests within a worker batch
+    /// into **one** batched kernel invocation (`TenantDriver::infer_batch`
+    /// — stacked GEMMs over the shard's single weight copy). Per-request
+    /// results are bitwise what serial execution produces, so this is a
+    /// pure throughput knob; off restores request-at-a-time service.
+    pub coalesce: bool,
 }
 
 impl FrontendConfig {
     pub fn new(classes: Vec<ClassSpec>) -> FrontendConfig {
-        FrontendConfig { classes, queue_cap: 64, batch_max: 4 }
+        FrontendConfig { classes, queue_cap: 64, batch_max: 4, coalesce: true }
     }
 
     /// The canonical mixed fleet: `n` classes, one shard each.
@@ -172,10 +190,11 @@ where
                 let mut dcfg = base.clone();
                 dcfg.gate = Some(pool.lease());
                 let (sched, bus, class) = (&sched, &bus, *class);
-                let batch_max = cfg.batch_max;
-                workers.push(
-                    scope.spawn(move || worker_loop(sched, bus, ci, class, shard, dcfg, batch_max)),
-                );
+                let (batch_max, coalesce) = (cfg.batch_max, cfg.coalesce);
+                let store = pool.store().cloned();
+                workers.push(scope.spawn(move || {
+                    worker_loop(sched, bus, ci, class, shard, dcfg, batch_max, coalesce, store)
+                }));
             }
         }
 
@@ -223,9 +242,11 @@ where
 }
 
 /// One shard worker: build the class driver under this shard's leased
-/// gate, then serve batches until drained. A failed build does not stall
+/// gate (interning its weights in the pool's shared store when dedup is
+/// on), then serve batches until drained. A failed build does not stall
 /// the drain — the worker keeps consuming its queue, failing requests,
 /// and surfaces the build error to the report.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     sched: &Scheduler,
     bus: &EventBus,
@@ -234,16 +255,52 @@ fn worker_loop(
     shard: usize,
     dcfg: dtr::Config,
     batch_max: usize,
+    coalesce: bool,
+    store: Option<Arc<WeightStore>>,
 ) -> Result<()> {
     let mut driver = None;
     let mut build_err = None;
-    match TenantDriver::build(class.kind, dcfg, class.seed + shard as u64) {
+    match TenantDriver::build_with_store(class.kind, dcfg, class.seed + shard as u64, store) {
         Ok(d) => driver = Some(d),
         Err(e) => build_err = Some(e),
     }
     while let Some(batch) = sched.next_batch(ci, batch_max) {
         let bsize = batch.len();
-        for req in batch {
+        let mut i = 0;
+        while i < batch.len() {
+            // Cross-request coalescing: a run of >= 2 consecutive Infer
+            // requests becomes ONE batched kernel invocation instead of
+            // back-to-back singles. Members share start/done timestamps
+            // and record the coalesced group size as their batch.
+            let run = if coalesce && driver.is_some() {
+                batch[i..].iter().take_while(|r| r.op == RequestOp::Infer).count()
+            } else {
+                0
+            };
+            if run >= 2 {
+                let start_ns = bus.now_ns();
+                let outcome = match driver.as_mut().unwrap().infer_batch(run) {
+                    Ok(_) => Outcome::Completed,
+                    Err(_) => Outcome::Failed,
+                };
+                let done_ns = bus.now_ns();
+                for req in &batch[i..i + run] {
+                    bus.record(RequestEvent {
+                        id: req.id,
+                        class: ci,
+                        op: req.op,
+                        outcome,
+                        submit_ns: req.submit_ns,
+                        start_ns,
+                        done_ns,
+                        queue_depth: req.depth,
+                        batch: run,
+                    });
+                }
+                i += run;
+                continue;
+            }
+            let req = &batch[i];
             let start_ns = bus.now_ns();
             let outcome = match driver.as_mut() {
                 Some(d) => match run_request(d, req.op) {
@@ -263,6 +320,7 @@ fn worker_loop(
                 queue_depth: req.depth,
                 batch: bsize,
             });
+            i += 1;
         }
     }
     match build_err {

@@ -52,6 +52,7 @@ fn metrics_row(
 pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy]) -> Result<()> {
     let mut cfg = FrontendConfig::mixed(tc.tenants.max(1));
     cfg.queue_cap = tc.queue_cap;
+    cfg.coalesce = tc.coalesce;
     let pct = (tc.budget_ratio.unwrap_or(1.0).clamp(0.01, 1.0) * 100.0) as u64;
     let budget = frontend_budget(&cfg.classes, pct)?;
     let base = dtr::Config {
@@ -77,7 +78,7 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
     ])?;
     for &policy in policies {
         let shards: usize = cfg.classes.iter().map(|c| c.shards.max(1)).sum();
-        let pool = ServePool::new(budget, policy, shards);
+        let pool = ServePool::new(budget, policy, shards).with_dedup(tc.dedup);
         let report = serve_bursty(&pool, &cfg, &base, PER_CLASS, SEED)?;
         for (ci, m) in report.classes.iter().enumerate() {
             metrics_row(out, policy, &ci.to_string(), m)?;

@@ -43,12 +43,15 @@ system commands:
   serve      multi-tenant serving: N tenants (transformer + LSTM/TreeLSTM
              mix) on worker threads under ONE global budget
              [--tenants 4 --arbiter static|global (default: both policies)
-              --steps 10 --budget-ratio 0.6 --heuristic h_dtr_eq]
+              --steps 10 --budget-ratio 0.6 --heuristic h_dtr_eq
+              --no-dedup (private per-tenant weight copies)]
   frontend   request front-end: bursty per-class client streams (infer/
              fine-tune/probe) through bounded queues onto shard workers
              under ONE global budget; reports requests/sec + p50/p95/p99
              [--tenants 4 --arbiter static|global (default: both policies)
-              --queue-cap 64 --budget-ratio 0.6 --heuristic h_dtr_eq]
+              --queue-cap 64 --budget-ratio 0.6 --heuristic h_dtr_eq
+              --no-dedup --no-coalesce (disable weight sharing / batched
+              infer; both default on and are result-identical)]
   train      train the transformer LM under a DTR budget (budget-ratio is
              a fraction of the non-pinned headroom; floor is ~0.6)
              [--config cfg.json --steps 50 --budget-ratio 0.8

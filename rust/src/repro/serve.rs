@@ -44,7 +44,7 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
         "error",
     ])?;
     for &policy in policies {
-        let pool = ServePool::new(budget, policy, specs.len());
+        let pool = ServePool::new(budget, policy, specs.len()).with_dedup(tc.dedup);
         let reports = run_tenants(&pool, &specs, &base, tc.steps)?;
         pool.check_invariants()?;
         let mut agg_steps = 0usize;

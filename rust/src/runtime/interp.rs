@@ -76,6 +76,72 @@ impl InterpExecutor {
     pub fn fused(&self) -> bool {
         self.fused
     }
+
+    /// Coalesced-request ops: `n` same-class inference requests stacked
+    /// into one kernel invocation (`dtr::frontend` coalescing). These are
+    /// shape-dynamic — the stacked batch `n*cfg.batch` is not a manifest
+    /// shape — so they derive their dimensions from the inputs and
+    /// dispatch *before* the manifest signature check. Every transformer
+    /// forward kernel is per-sample (GEMM rows are independent
+    /// accumulation chains, attention loops per (batch, head), layernorm
+    /// per row), so widening the batch is bitwise-identical to running
+    /// the members back-to-back. Returns `Ok(None)` for ordinary
+    /// manifest ops.
+    fn execute_batched(&self, op: &str, inputs: &[&HostTensor]) -> Result<Option<Vec<HostTensor>>> {
+        let cfg = self.cfg;
+        match op {
+            "batched_embed_fwd" => {
+                ensure!(inputs.len() == 2, "batched_embed_fwd: 2 inputs expected, got {}", inputs.len());
+                let tok = inputs[0];
+                ensure!(
+                    tok.shape.len() == 2 && tok.shape[1] == cfg.seq && tok.shape[0] > 0,
+                    "batched_embed_fwd: stacked tokens must be [n*batch, seq], got {:?}",
+                    tok.shape
+                );
+                let wide = ModelConfig { batch: tok.shape[0], ..cfg };
+                embed_fwd(&wide, tok, inputs[1]).map(Some)
+            }
+            "batched_block_fwd" => {
+                ensure!(inputs.len() == 7, "batched_block_fwd: 7 inputs expected, got {}", inputs.len());
+                let x = inputs[0];
+                ensure!(
+                    x.shape.len() == 3 && x.shape[1] == cfg.seq && x.shape[2] == cfg.d_model,
+                    "batched_block_fwd: stacked input must be [n*batch, seq, d_model], got {:?}",
+                    x.shape
+                );
+                let wide = ModelConfig { batch: x.shape[0], ..cfg };
+                if self.fused {
+                    block_fwd_fused(&wide, inputs, self.threads).map(Some)
+                } else {
+                    block_fwd(&wide, inputs, self.threads).map(Some)
+                }
+            }
+            "batched_slice_rows" => {
+                ensure!(inputs.len() == 2, "batched_slice_rows: 2 inputs expected, got {}", inputs.len());
+                let (x, idx) = (inputs[0], inputs[1]);
+                ensure!(
+                    x.shape.len() == 3,
+                    "batched_slice_rows: stacked input must be rank 3, got {:?}",
+                    x.shape
+                );
+                ensure!(
+                    idx.data.len() == 2 && idx.data[0] >= 0.0 && idx.data[1] > 0.0,
+                    "batched_slice_rows: index must be [start_sample, n_samples]"
+                );
+                let (start, count) = (idx.data[0] as usize, idx.data[1] as usize);
+                ensure!(
+                    start + count <= x.shape[0],
+                    "batched_slice_rows: samples {start}..{} out of {}",
+                    start + count,
+                    x.shape[0]
+                );
+                let row = x.shape[1] * x.shape[2];
+                let out = x.data[start * row..(start + count) * row].to_vec();
+                Ok(Some(vec![HostTensor::new(vec![count, x.shape[1], x.shape[2]], out)]))
+            }
+            _ => Ok(None),
+        }
+    }
 }
 
 impl Executor for InterpExecutor {
@@ -88,6 +154,9 @@ impl Executor for InterpExecutor {
     }
 
     fn execute(&mut self, op: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Some(out) = self.execute_batched(op, inputs)? {
+            return Ok(out);
+        }
         let sig = self.manifest.op(op)?;
         ensure!(
             inputs.len() == sig.inputs.len(),
@@ -1035,6 +1104,61 @@ mod tests {
         ins.extend(ps.iter());
         let out = ex.execute("block_fwd", &ins).unwrap();
         assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    /// Coalescing correctness at the kernel layer: one stacked
+    /// embed+block forward over `n` request batches, sliced back apart,
+    /// is bitwise what each request's own forward produces.
+    #[test]
+    fn batched_forward_bitwise_matches_serial() {
+        let cfg = ModelConfig::tiny();
+        let mut ex = exec(cfg);
+        let mut rng = Rng::new(7);
+        let n = 3;
+        let per = cfg.batch * cfg.seq;
+        let toks: Vec<HostTensor> = (0..n)
+            .map(|_| {
+                HostTensor::new(
+                    vec![cfg.batch, cfg.seq],
+                    (0..per).map(|_| rng.index(cfg.vocab) as f32).collect(),
+                )
+            })
+            .collect();
+        let emb = randn_host(&mut rng, &[cfg.vocab, cfg.d_model], 0.1);
+        let shapes = cfg.param_shapes();
+        let ps: Vec<HostTensor> = ["ln", "wqkv", "wo", "ln", "w1", "w2"]
+            .iter()
+            .map(|&g| init_param(g, &shapes[g], &mut rng))
+            .collect();
+
+        // Serial reference: each request through the manifest ops.
+        let serial: Vec<HostTensor> = toks
+            .iter()
+            .map(|tok| {
+                let x = ex.execute("embed_fwd", &[tok, &emb]).unwrap().remove(0);
+                let mut ins = vec![&x];
+                ins.extend(ps.iter());
+                ex.execute("block_fwd", &ins).unwrap().remove(0)
+            })
+            .collect();
+
+        // Batched: one stacked invocation, sliced back per request.
+        let stacked: Vec<f32> = toks.iter().flat_map(|t| t.data.iter().copied()).collect();
+        let tok_nb = HostTensor::new(vec![n * cfg.batch, cfg.seq], stacked);
+        let x = ex.execute("batched_embed_fwd", &[&tok_nb, &emb]).unwrap().remove(0);
+        assert_eq!(x.shape, vec![n * cfg.batch, cfg.seq, cfg.d_model]);
+        let mut ins = vec![&x];
+        ins.extend(ps.iter());
+        let y = ex.execute("batched_block_fwd", &ins).unwrap().remove(0);
+        for (i, want) in serial.iter().enumerate() {
+            let idx = HostTensor::new(vec![2], vec![(i * cfg.batch) as f32, cfg.batch as f32]);
+            let got = ex.execute("batched_slice_rows", &[&y, &idx]).unwrap().remove(0);
+            assert_eq!(got.shape, want.shape);
+            assert!(
+                got.data.iter().zip(&want.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "request {i}: batched forward diverged from serial"
+            );
+        }
     }
 
     #[test]

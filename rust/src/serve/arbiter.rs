@@ -30,15 +30,18 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::dtr::lease::{BudgetGate, LocalEvictor, RemoteEvictor, RemotePeek, RemoteReclaim};
+use crate::dtr::lease::{
+    BudgetGate, LocalEvictor, PinnedLedger, RemoteEvictor, RemotePeek, RemoteReclaim,
+};
 use crate::dtr::DtrError;
 
 /// How the arbiter divides the global budget among shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArbiterPolicy {
-    /// Each shard's lease is capped at its static share of the budget
-    /// (`total / planned_tenants`, with the division remainder spread one
-    /// byte per low slot so the shares sum exactly to the total); shards
+    /// Each shard's lease is capped at its even share of the budget, split
+    /// over the *live* shards (the division remainder spread one byte per
+    /// low slot so the shares sum exactly to the splittable total) and
+    /// recomputed on every join, leave, and shared-ledger change; shards
     /// reclaim only from themselves. The offline-partitioning baseline.
     StaticSplit,
     /// Any shard may lease up to the whole budget; the arbiter revokes idle
@@ -186,20 +189,19 @@ struct Shard {
 
 struct ArbState {
     shards: Vec<Shard>,
+    /// Bytes charged by the content-addressed [`crate::api::WeightStore`]:
+    /// distinct pinned buffers shared across shards, owned by no single
+    /// lease. Subtracted from the grantable pool and from the splittable
+    /// total of `StaticSplit` caps.
+    shared: u64,
 }
 
 /// The central allocator-interposition point of PAPER §5, generalized to N
-/// tenants: all shard leases sum to at most `total`.
+/// tenants: all shard leases plus the shared-weight ledger sum to at most
+/// `total`.
 pub struct BudgetArbiter {
     total: u64,
     policy: ArbiterPolicy,
-    /// Per-shard lease cap parameters, fixed at construction. `StaticSplit`
-    /// divides the total across the planned tenant count and spreads the
-    /// division remainder one byte at a time over the first `cap_remainder`
-    /// slots, so the per-shard caps sum *exactly* to `total` — no bytes are
-    /// stranded. `GlobalReclaim` lets any shard lease everything.
-    cap_base: u64,
-    cap_remainder: u64,
     state: Mutex<ArbState>,
     cv: Condvar,
 }
@@ -210,36 +212,72 @@ const STALL_WAIT: Duration = Duration::from_millis(2);
 const MAX_STALLED_ROUNDS: usize = 2_000;
 
 impl BudgetArbiter {
+    /// `planned_tenants` is a sizing hint only: `StaticSplit` caps follow
+    /// the *live* membership (recomputed on every join and leave), so a
+    /// fleet that churns below its planned size never strands budget on
+    /// absent tenants.
     pub fn new(total: u64, policy: ArbiterPolicy, planned_tenants: usize) -> Arc<BudgetArbiter> {
+        let _ = planned_tenants;
         // Ledger arithmetic runs in i64 (signed headroom); clamp the total
         // accordingly — practically unlimited.
         let total = total.min(i64::MAX as u64);
-        let (cap_base, cap_remainder) = match policy {
-            ArbiterPolicy::StaticSplit => {
-                let planned = planned_tenants.max(1) as u64;
-                (total / planned, total % planned)
-            }
-            ArbiterPolicy::GlobalReclaim => (total, 0),
-        };
         Arc::new(BudgetArbiter {
             total,
             policy,
-            cap_base,
-            cap_remainder,
-            state: Mutex::new(ArbState { shards: Vec::new() }),
+            state: Mutex::new(ArbState { shards: Vec::new(), shared: 0 }),
             cv: Condvar::new(),
         })
     }
 
-    /// Lease cap for the shard occupying `slot`. Static split hands the
-    /// division remainder out one byte per low slot, so the caps of the
-    /// first `planned_tenants` slots sum exactly to the total budget.
-    fn cap_for(&self, slot: usize) -> u64 {
-        match self.policy {
-            ArbiterPolicy::StaticSplit => {
-                self.cap_base + u64::from((slot as u64) < self.cap_remainder)
+    /// Recompute `StaticSplit` lease caps over the live shards. The
+    /// splittable total is the budget minus the shared-weight ledger
+    /// (deduplicated pinned buffers belong to everyone, so nobody's cap
+    /// covers them). Water-filling: a shard whose granted lease already
+    /// exceeds the even share keeps `cap = lease` — caps are never cut
+    /// below bytes already granted — and the rest splits evenly over the
+    /// others, division remainder spread one byte per low slot so the live
+    /// caps sum exactly to the splittable total.
+    fn resplit_locked(&self, st: &mut ArbState) {
+        if self.policy != ArbiterPolicy::StaticSplit {
+            return;
+        }
+        let splittable = self.total.saturating_sub(st.shared);
+        let mut unclamped: Vec<usize> = st
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, sh)| sh.live)
+            .map(|(i, _)| i)
+            .collect();
+        if unclamped.is_empty() {
+            return;
+        }
+        let mut remaining = splittable;
+        loop {
+            let fair = remaining / unclamped.len() as u64;
+            let mut clamped_any = false;
+            unclamped.retain(|&i| {
+                let lease = st.shards[i].lease;
+                if lease > fair {
+                    st.shards[i].cap = lease;
+                    remaining = remaining.saturating_sub(lease);
+                    clamped_any = true;
+                    false
+                } else {
+                    true
+                }
+            });
+            if !clamped_any || unclamped.is_empty() {
+                break;
             }
-            ArbiterPolicy::GlobalReclaim => self.total,
+        }
+        let n = unclamped.len() as u64;
+        if n > 0 {
+            let base = remaining / n;
+            let rem = remaining % n;
+            for (k, &i) in unclamped.iter().enumerate() {
+                st.shards[i].cap = base + u64::from((k as u64) < rem);
+            }
         }
     }
 
@@ -266,7 +304,10 @@ impl BudgetArbiter {
         let shard = Shard {
             live: true,
             lease: 0,
-            cap: self.cap_for(id),
+            cap: match self.policy {
+                ArbiterPolicy::StaticSplit => 0, // set by the resplit below
+                ArbiterPolicy::GlobalReclaim => self.total,
+            },
             meter: Arc::clone(&meter),
             remote: None,
         };
@@ -275,6 +316,7 @@ impl BudgetArbiter {
         } else {
             st.shards[id] = shard;
         }
+        self.resplit_locked(&mut st);
         drop(st);
         LeaseGate { arb: Arc::clone(self), id, meter }
     }
@@ -286,12 +328,19 @@ impl BudgetArbiter {
     /// reference can die on a thread that already holds it (a remote
     /// peek's temporary `Arc` upgrade being the final strong reference).
     fn reap_locked(&self, st: &mut ArbState) {
+        let mut reaped = false;
         for sh in &mut st.shards {
             if sh.live && sh.meter.dead.load(Ordering::Acquire) {
                 sh.live = false;
                 sh.lease = 0;
                 sh.remote = None;
+                reaped = true;
             }
+        }
+        // A leave frees its lease *and* its static share: re-split so the
+        // survivors' caps absorb it instead of idling on a dead slot.
+        if reaped {
+            self.resplit_locked(st);
         }
     }
 
@@ -304,10 +353,11 @@ impl BudgetArbiter {
         st.shards.iter().filter(|s| s.live).map(|s| s.lease).sum()
     }
 
-    /// Grant up to `want` new lease bytes to `id` from the unleased pool
-    /// (bounded by the shard's cap). Returns the granted amount.
+    /// Grant up to `want` new lease bytes to `id` from the unleased pool —
+    /// the budget minus live leases minus the shared-weight ledger —
+    /// bounded by the shard's cap. Returns the granted amount.
     fn grant_locked(&self, st: &mut ArbState, id: usize, want: u64) -> u64 {
-        let pool = self.total.saturating_sub(Self::leased_total(st));
+        let pool = self.total.saturating_sub(Self::leased_total(st)).saturating_sub(st.shared);
         let sh = &mut st.shards[id];
         let grant = want.min(pool).min(sh.cap.saturating_sub(sh.lease));
         if grant > 0 {
@@ -566,17 +616,21 @@ impl BudgetArbiter {
     }
 
     /// Ledger identity at quiescence (no reservation in flight on any
-    /// shard): every live shard's `lease == used + headroom`, and live
-    /// leases never exceed the global budget.
+    /// shard): every live shard's `lease == used + headroom`, live leases
+    /// plus the shared-weight ledger never exceed the global budget, and
+    /// under `StaticSplit` the live caps sum exactly to the splittable
+    /// total (budget minus shared) whenever the leases fit it.
     pub fn check_ledger(&self) -> Result<()> {
         let mut st = self.state.lock().expect("arbiter poisoned");
         self.reap_locked(&mut st);
         let mut leased = 0u64;
+        let mut cap_sum = 0u64;
         for (i, sh) in st.shards.iter().enumerate() {
             if !sh.live {
                 continue;
             }
             leased += sh.lease;
+            cap_sum += sh.cap;
             let used = sh.meter.used();
             let headroom = sh.meter.headroom();
             anyhow::ensure!(
@@ -594,10 +648,28 @@ impl BudgetArbiter {
             );
         }
         anyhow::ensure!(
-            leased <= self.total,
-            "live leases {leased} exceed the global budget {}",
+            leased.saturating_add(st.shared) <= self.total,
+            "live leases {leased} + shared {} exceed the global budget {}",
+            st.shared,
             self.total
         );
+        if self.policy == ArbiterPolicy::StaticSplit && st.shards.iter().any(|sh| sh.live) {
+            let splittable = self.total.saturating_sub(st.shared);
+            // Leases exceeding the splittable total (a shared charge landing
+            // after grants) clamp every cap to its lease; otherwise the
+            // water-filling resplit covers the splittable total exactly.
+            if leased <= splittable {
+                anyhow::ensure!(
+                    cap_sum == splittable,
+                    "static-split caps {cap_sum} != splittable budget {splittable}"
+                );
+            } else {
+                anyhow::ensure!(
+                    cap_sum >= leased,
+                    "static-split caps {cap_sum} dropped below granted leases {leased}"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -619,12 +691,43 @@ impl BudgetArbiter {
             .collect()
     }
 
-    /// Bytes currently resident across all live shards (live-sampled by the
-    /// stress tests to assert the global budget is respected).
+    /// Bytes currently resident across all live shards, including the
+    /// shared-weight ledger (live-sampled by the stress tests to assert the
+    /// global budget is respected).
     pub fn used_bytes(&self) -> u64 {
         let mut st = self.state.lock().expect("arbiter poisoned");
         self.reap_locked(&mut st);
-        st.shards.iter().filter(|s| s.live).map(|s| s.meter.used()).sum()
+        st.shared + st.shards.iter().filter(|s| s.live).map(|s| s.meter.used()).sum::<u64>()
+    }
+
+    /// Bytes currently charged to the shared-weight ledger: the physical
+    /// footprint of all distinct deduplicated pinned buffers.
+    pub fn shared_bytes(&self) -> u64 {
+        self.state.lock().expect("arbiter poisoned").shared
+    }
+}
+
+/// The arbiter *is* the global ledger of content-addressed pinned weights:
+/// the [`crate::api::WeightStore`] charges it once per distinct buffer and
+/// refunds it when the last shard releases one. Charges shrink the
+/// grantable pool (and the `StaticSplit` splittable total); refunds return
+/// the bytes to the pool and wake any reservation blocked on it — freed
+/// duplicate-weight budget flows straight to activations.
+impl PinnedLedger for BudgetArbiter {
+    fn charge_shared(&self, bytes: u64) {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        st.shared = st.shared.checked_add(bytes).expect("shared ledger overflow");
+        self.resplit_locked(&mut st);
+    }
+
+    fn refund_shared(&self, bytes: u64) {
+        let mut st = self.state.lock().expect("arbiter poisoned");
+        self.reap_locked(&mut st);
+        st.shared = st.shared.checked_sub(bytes).expect("shared refund exceeds charges");
+        self.resplit_locked(&mut st);
+        drop(st);
+        self.cv.notify_all();
     }
 }
 
@@ -721,22 +824,78 @@ mod tests {
 
     #[test]
     fn static_split_caps_leases() {
+        // Caps follow the *live* membership: two registered shards split
+        // the whole budget evenly, regardless of the planned tenant count.
         let arb = BudgetArbiter::new(100, ArbiterPolicy::StaticSplit, 4);
         let a = arb.register();
         let b = arb.register();
+        let snap = arb.snapshot();
+        assert_eq!(snap[a.shard_id()].cap, 50);
+        assert_eq!(snap[b.shard_id()].cap, 50);
         assert!(!a.try_reserve(10), "no lease granted yet");
         a.reserve_pinned(10);
         a.on_alloc(10);
-        // Cap is 25: pinned growth stops at the cap, the rest overdrafts.
-        a.reserve_pinned(30);
-        a.on_alloc(30);
+        // Cap is 50: pinned growth stops at the cap, the rest overdrafts.
+        a.reserve_pinned(55);
+        a.on_alloc(55);
         let snap = arb.snapshot();
-        assert_eq!(snap[a.shard_id()].lease, 25);
-        assert_eq!(snap[a.shard_id()].used, 40);
+        assert_eq!(snap[a.shard_id()].lease, 50);
+        assert_eq!(snap[a.shard_id()].used, 65);
         assert_eq!(snap[a.shard_id()].headroom, -15);
         arb.check_ledger().unwrap();
+        // b leaves: the survivor's cap absorbs the freed share.
         drop(b);
         arb.check_ledger().unwrap();
+        let snap = arb.snapshot();
+        assert_eq!(snap[a.shard_id()].cap, 100);
+    }
+
+    #[test]
+    fn static_split_resplits_on_join_and_shared_charge() {
+        let arb = BudgetArbiter::new(120, ArbiterPolicy::StaticSplit, 2);
+        let a = arb.register();
+        assert_eq!(arb.snapshot()[a.shard_id()].cap, 120, "sole tenant owns it all");
+        // a leases more than a half-share before b joins: water-filling
+        // keeps a's cap at its granted lease, b gets the rest.
+        a.reserve_pinned(80);
+        a.on_alloc(80);
+        let b = arb.register();
+        let snap = arb.snapshot();
+        assert_eq!(snap[a.shard_id()].cap, 80, "caps never cut below granted leases");
+        assert_eq!(snap[b.shard_id()].cap, 40);
+        arb.check_ledger().unwrap();
+        a.on_free(80);
+        drop(a);
+        // Shared-weight charges shrink the splittable total.
+        arb.charge_shared(20);
+        assert_eq!(arb.shared_bytes(), 20);
+        let snap = arb.snapshot();
+        assert_eq!(snap[b.shard_id()].cap, 100);
+        arb.check_ledger().unwrap();
+        arb.refund_shared(20);
+        assert_eq!(arb.shared_bytes(), 0);
+        assert_eq!(arb.snapshot()[b.shard_id()].cap, 120);
+        arb.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn shared_ledger_shrinks_the_grantable_pool() {
+        let arb = BudgetArbiter::new(100, ArbiterPolicy::GlobalReclaim, 1);
+        arb.charge_shared(60);
+        let a = arb.register();
+        // Pinned growth can lease only the 40 unshared bytes; the rest is
+        // overdraft, exactly as if 60 bytes were physically occupied.
+        a.reserve_pinned(50);
+        a.on_alloc(50);
+        let snap = arb.snapshot();
+        assert_eq!(snap[a.shard_id()].lease, 40);
+        assert_eq!(snap[a.shard_id()].headroom, -10);
+        assert_eq!(arb.used_bytes(), 60 + 50);
+        arb.check_ledger().unwrap();
+        a.on_free(50);
+        drop(a);
+        arb.refund_shared(60);
+        assert_eq!(arb.used_bytes(), 0);
     }
 
     #[test]

@@ -63,7 +63,8 @@ pub use tenants::{
     TenantReport, TenantSpec,
 };
 
-use crate::dtr::GateRef;
+use crate::api::WeightStore;
+use crate::dtr::{GateRef, PinnedLedger};
 
 /// A multi-tenant serving pool: one global byte budget, N shard leases.
 ///
@@ -72,15 +73,42 @@ use crate::dtr::GateRef;
 /// tenant's `Config::gate`. All shards' resident bytes sum to at most the
 /// budget (up to pinned-constant overdraft, which mirrors the fixed-budget
 /// runtime's unconditional constant registration).
+///
+/// With [`ServePool::with_dedup`] the pool also owns a content-addressed
+/// [`WeightStore`]: tenants that serve the *same* base model intern their
+/// pinned parameter buffers there and share one physical copy, charged to
+/// the arbiter's shared ledger exactly once per distinct buffer. That is
+/// Coop's pooled-memory lesson (PAPERS.md) applied to the pinned floor
+/// itself — the N-fold copy of identical weights was the one fragment the
+/// leased pool could never reclaim — while PAPER §5's allocator
+/// interposition is what makes it safe: every pinned byte already funnels
+/// through the arbiter chokepoint, so moving a buffer from a shard lease
+/// to the shared ledger is invisible to the eviction policy.
 pub struct ServePool {
     arb: Arc<BudgetArbiter>,
+    store: Option<Arc<WeightStore>>,
 }
 
 impl ServePool {
-    /// `planned_tenants` sizes the static-split share (`total / planned`);
-    /// global reclaim ignores it beyond diagnostics.
+    /// `planned_tenants` is a sizing hint retained for API stability; the
+    /// static-split policy re-splits caps over *live* membership on every
+    /// join/leave, so the hint no longer fixes the share.
     pub fn new(total: u64, policy: ArbiterPolicy, planned_tenants: usize) -> ServePool {
-        ServePool { arb: BudgetArbiter::new(total, policy, planned_tenants) }
+        ServePool { arb: BudgetArbiter::new(total, policy, planned_tenants), store: None }
+    }
+
+    /// Enable (or disable) content-addressed pinned-weight sharing. With
+    /// dedup on, [`run_tenants`] and the front-end attach the pool's
+    /// [`WeightStore`] to every tenant that can share weights.
+    pub fn with_dedup(mut self, on: bool) -> ServePool {
+        self.store = on
+            .then(|| WeightStore::new(Arc::clone(&self.arb) as Arc<dyn PinnedLedger>));
+        self
+    }
+
+    /// The pool's shared weight store, when dedup is enabled.
+    pub fn store(&self) -> Option<&Arc<WeightStore>> {
+        self.store.as_ref()
     }
 
     /// Register a new shard and lease it a gate. Install the result as
@@ -103,9 +131,16 @@ impl ServePool {
         &self.arb
     }
 
-    /// Bytes currently resident across all live shards.
+    /// Bytes currently resident across all live shards (shared pinned
+    /// bytes included, counted once).
     pub fn used_bytes(&self) -> u64 {
         self.arb.used_bytes()
+    }
+
+    /// Bytes currently charged to the shared pinned ledger (deduplicated
+    /// weights; 0 with dedup off).
+    pub fn shared_bytes(&self) -> u64 {
+        self.arb.shared_bytes()
     }
 
     /// Per-shard ledger rows.

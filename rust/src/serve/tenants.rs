@@ -8,11 +8,13 @@
 //! a static model with LSTM/TreeLSTM tenants whose per-step shapes are
 //! random reproduces the serving scenario no offline partitioner can plan.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::ServePool;
+use crate::api::WeightStore;
 use crate::dtr;
 use crate::exec::{Engine, LstmTrainer, Optimizer, TreeLstmTrainer};
 use crate::runtime::{InterpExecutor, ModelConfig, RnnConfig};
@@ -138,12 +140,28 @@ impl TenantDriver {
     /// `dtr_cfg` carries the shard's budget gate (or a fixed budget for
     /// standalone runs).
     pub fn build(kind: TenantKind, dtr_cfg: dtr::Config, seed: u64) -> Result<TenantDriver> {
+        TenantDriver::build_with_store(kind, dtr_cfg, seed, None)
+    }
+
+    /// [`TenantDriver::build`] plus an optional shared [`WeightStore`].
+    /// Transformer tenants intern their pinned parameters there (every
+    /// transformer tenant serves the same fixed-seed base model, so N
+    /// tenants share one physical copy of the weights). Dynamic tenants
+    /// stream per-seed weights and keep private copies.
+    pub fn build_with_store(
+        kind: TenantKind,
+        dtr_cfg: dtr::Config,
+        seed: u64,
+        store: Option<Arc<WeightStore>>,
+    ) -> Result<TenantDriver> {
         Ok(match kind {
-            TenantKind::Transformer => TenantDriver::Transformer(Box::new(Engine::interp(
-                ModelConfig::tiny(),
-                dtr_cfg,
-                Optimizer::Sgd,
-            )?)),
+            TenantKind::Transformer => {
+                let mut e = Engine::interp(ModelConfig::tiny(), dtr_cfg, Optimizer::Sgd)?;
+                if let Some(store) = store {
+                    e.attach_store(store);
+                }
+                TenantDriver::Transformer(Box::new(e))
+            }
             TenantKind::Lstm => {
                 let rnn = RnnConfig::tiny();
                 TenantDriver::Lstm(Box::new(LstmTrainer::new(
@@ -195,6 +213,23 @@ impl TenantDriver {
         }
     }
 
+    /// `n` coalesced inference requests as one batched kernel invocation
+    /// where the driver supports it (transformer: stacked GEMMs over one
+    /// shared weight copy), falling back to serial [`TenantDriver::infer`]
+    /// calls otherwise. Either path consumes the same data batches in the
+    /// same order, so the returned per-request losses are bitwise-equal to
+    /// `n` serial calls.
+    pub fn infer_batch(&mut self, n: usize) -> Result<Vec<f32>> {
+        if let TenantDriver::Transformer(e) = self {
+            return e.infer_batch(n);
+        }
+        let mut losses = Vec::with_capacity(n);
+        for _ in 0..n {
+            losses.push(self.infer()?);
+        }
+        Ok(losses)
+    }
+
     /// Unbudgeted fixed-batch probe loss (dynamic tenants only).
     pub fn probe(&self) -> Option<f32> {
         match self {
@@ -240,7 +275,12 @@ pub fn fleet_budget(specs: &[TenantSpec], pct: u64) -> Result<u64> {
     Ok(total)
 }
 
-fn run_one(spec: TenantSpec, cfg: dtr::Config, steps: usize) -> TenantReport {
+fn run_one(
+    spec: TenantSpec,
+    cfg: dtr::Config,
+    steps: usize,
+    store: Option<Arc<WeightStore>>,
+) -> TenantReport {
     let mut report = TenantReport {
         kind: spec.kind.name(),
         steps,
@@ -253,7 +293,7 @@ fn run_one(spec: TenantSpec, cfg: dtr::Config, steps: usize) -> TenantReport {
         probe_after: None,
         error: None,
     };
-    let mut driver = match TenantDriver::build(spec.kind, cfg, spec.seed) {
+    let mut driver = match TenantDriver::build_with_store(spec.kind, cfg, spec.seed, store) {
         Ok(d) => d,
         Err(e) => {
             report.error = Some(format!("build: {e:#}"));
@@ -300,7 +340,8 @@ pub fn run_tenants(
             let mut cfg = base.clone();
             cfg.gate = Some(gate);
             let spec = *spec;
-            handles.push(scope.spawn(move || run_one(spec, cfg, steps)));
+            let store = pool.store().cloned();
+            handles.push(scope.spawn(move || run_one(spec, cfg, steps, store)));
         }
         handles
             .into_iter()

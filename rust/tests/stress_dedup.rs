@@ -1,0 +1,233 @@
+//! Content-addressed pinned-weight sharing (dedup) and cross-shard
+//! request coalescing, under tenant churn. Pins the PR's acceptance
+//! properties:
+//!
+//! * **Capacity**: N same-model tenants hold ~1/N of the private pinned
+//!   bytes — the arbiter's shared ledger is charged once per distinct
+//!   buffer, verified through `ServePool::shared_bytes` accounting.
+//! * **Churn**: tenants joining and leaving mid-run bump and release
+//!   refcounts; the ledger is refunded exactly once, when the *last*
+//!   holder leaves, and a fully drained pool returns to zero bytes.
+//! * **Exactness**: dedup on vs off is bit- and decision-exact at N=1
+//!   (same losses, same victim sequences), and a coalesced infer batch
+//!   returns bitwise the losses of serial member requests.
+//!
+//! CI runs this file in release mode as well (debug is too slow to stress
+//! the multi-tenant interleavings hard).
+
+use dtr::dtr::{Config, Heuristic};
+use dtr::exec::{Engine, Optimizer};
+use dtr::frontend::{run, FrontendConfig, Outcome, RequestOp};
+use dtr::runtime::ModelConfig;
+use dtr::serve::{
+    fleet_budget, run_tenants, ArbiterPolicy, ServePool, TenantDriver, TenantKind, TenantSpec,
+};
+
+fn transformer_fleet(n: usize) -> Vec<TenantSpec> {
+    (0..n).map(|i| TenantSpec { kind: TenantKind::Transformer, seed: 0x5EED + i as u64 }).collect()
+}
+
+fn driver_on(pool: &ServePool, heuristic: Heuristic) -> TenantDriver {
+    let cfg = Config { heuristic, gate: Some(pool.lease()), ..Config::default() };
+    TenantDriver::build_with_store(TenantKind::Transformer, cfg, 0, pool.store().cloned())
+        .expect("tenant build")
+}
+
+/// N tenants of the same base model share ONE physical weight copy: the
+/// shared ledger holds exactly one tenant's worth of parameter bytes no
+/// matter how many tenants are live, while the private (dedup-off)
+/// configuration pays it N times over.
+#[test]
+fn n_tenants_share_one_pinned_copy() {
+    const N: usize = 4;
+    let budget = 64 << 20;
+    let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, N).with_dedup(true);
+    let store = pool.store().expect("dedup pool has a store");
+
+    let first = driver_on(&pool, Heuristic::dtr_eq());
+    let one_copy = pool.shared_bytes();
+    let distinct = store.distinct();
+    assert!(one_copy > 0, "no pinned bytes were interned");
+    assert!(distinct > 0);
+
+    let mut rest: Vec<TenantDriver> = Vec::new();
+    for _ in 1..N {
+        rest.push(driver_on(&pool, Heuristic::dtr_eq()));
+        // Every additional same-model tenant charges nothing: the pinned
+        // floor is 1/N of what N private copies would cost.
+        assert_eq!(pool.shared_bytes(), one_copy, "extra tenant was charged for shared weights");
+        assert_eq!(store.distinct(), distinct, "identical buffers failed to dedup");
+    }
+    assert_eq!(store.total_refs(), N * distinct);
+    // Quiescent (no sessions live): the only resident bytes ARE the single
+    // shared copy — the arbiter-accounting form of the 1/N claim.
+    assert_eq!(pool.used_bytes(), pool.shared_bytes());
+    pool.check_invariants().unwrap();
+
+    drop(first);
+    drop(rest);
+    assert_eq!(pool.shared_bytes(), 0);
+    assert_eq!(pool.used_bytes(), 0);
+    pool.check_invariants().unwrap();
+}
+
+/// Tenants joining and leaving mid-run (inference traffic in between):
+/// refcounts track membership, the charge survives any proper subset of
+/// holders leaving, and the refund lands exactly once — when the last
+/// holder goes. Fine-tuning then un-shares: a tenant whose weights
+/// diverge pays for its own copies, and still refunds them on exit.
+#[test]
+fn churn_refunds_exactly_once() {
+    let pool = ServePool::new(64 << 20, ArbiterPolicy::StaticSplit, 4).with_dedup(true);
+
+    let mut a = driver_on(&pool, Heuristic::dtr_eq());
+    let one_copy = pool.shared_bytes();
+    assert!(one_copy > 0);
+
+    let mut b = driver_on(&pool, Heuristic::dtr_eq());
+    a.infer().unwrap();
+    b.infer().unwrap();
+    assert_eq!(pool.shared_bytes(), one_copy);
+
+    // Join mid-run...
+    let mut c = driver_on(&pool, Heuristic::dtr_eq());
+    assert_eq!(pool.shared_bytes(), one_copy);
+    // ...leave mid-run: B's exit must NOT refund buffers A and C still hold.
+    drop(b);
+    assert_eq!(pool.shared_bytes(), one_copy, "refund fired before the last holder left");
+    a.infer().unwrap();
+    c.infer().unwrap();
+    pool.check_invariants().unwrap();
+
+    // A fine-tune step rewrites A's weights: its re-interned buffers no
+    // longer match the base model, so the shared ledger grows past one
+    // copy (A's divergent params) without disturbing C's.
+    a.step().unwrap();
+    assert!(pool.shared_bytes() > one_copy, "divergent weights cannot stay fully shared");
+    c.infer().unwrap();
+
+    drop(a);
+    assert_eq!(pool.shared_bytes(), one_copy, "A's exit must refund exactly its own buffers");
+    drop(c);
+    assert_eq!(pool.shared_bytes(), 0);
+    assert_eq!(pool.used_bytes(), 0);
+    pool.check_invariants().unwrap();
+}
+
+/// Serving with dedup ON is bit- and decision-exact against dedup OFF at
+/// N=1: same per-step losses, same victim sequences, same eviction
+/// counts. Sharing moves pinned bytes to a different ledger — it must not
+/// move a single eviction decision.
+#[test]
+fn single_tenant_dedup_is_decision_exact() {
+    let mut sizing =
+        Engine::interp(ModelConfig::tiny(), Config::default(), Optimizer::Sgd).expect("sizing");
+    let budget = sizing.headroom_budget(70).expect("envelope");
+
+    let run_steps = |dedup: bool| {
+        let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, 1).with_dedup(dedup);
+        let cfg = Config {
+            heuristic: Heuristic::dtr_eq(),
+            trace_victims: true,
+            gate: Some(pool.lease()),
+            ..Config::default()
+        };
+        let mut d =
+            TenantDriver::build_with_store(TenantKind::Transformer, cfg, 0, pool.store().cloned())
+                .expect("tenant build");
+        let out: Vec<_> =
+            (0..3).map(|_| d.step().map(|(l, s)| (l.to_bits(), s)).expect("step")).collect();
+        drop(d);
+        pool.check_invariants().unwrap();
+        assert_eq!(pool.used_bytes(), 0);
+        out
+    };
+
+    let on = run_steps(true);
+    let off = run_steps(false);
+    let evictions: u64 = off.iter().map(|(_, s)| s.evict_count).sum();
+    assert!(evictions > 0, "budget never bound — the exactness claim is vacuous");
+    for (i, ((lb_on, st_on), (lb_off, st_off))) in on.iter().zip(&off).enumerate() {
+        assert_eq!(lb_on, lb_off, "step {i}: loss bits diverged between dedup on/off");
+        assert!(
+            st_on.same_decisions(st_off),
+            "step {i}: eviction decisions diverged:\non  {st_on:?}\noff {st_off:?}"
+        );
+    }
+}
+
+/// A coalesced infer batch returns bitwise the losses serial service
+/// produces: same engine config, same data stream, one stacked kernel
+/// invocation vs n back-to-back singles.
+#[test]
+fn coalesced_infer_batch_matches_serial_bitwise() {
+    const N: usize = 5;
+    let mk = || Engine::interp(ModelConfig::tiny(), Config::default(), Optimizer::Sgd).unwrap();
+    let mut serial = mk();
+    let expect: Vec<u32> = (0..N).map(|_| serial.infer_step().unwrap().to_bits()).collect();
+    let mut batched = mk();
+    let got = batched.infer_batch(N).unwrap();
+    assert_eq!(got.len(), N);
+    for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+        assert_eq!(g.to_bits(), *e, "request {i}: coalesced loss diverged from serial");
+    }
+}
+
+/// End-to-end: an all-transformer fleet trains concurrently over a dedup
+/// pool; every tenant completes, and the drained pool refunds every byte
+/// (threads joining and leaving ARE the churn here).
+#[test]
+fn dedup_fleet_trains_and_drains_clean() {
+    let specs = transformer_fleet(4);
+    let budget = fleet_budget(&specs, 80).expect("envelope");
+    for policy in ArbiterPolicy::all() {
+        let pool = ServePool::new(budget, policy, specs.len()).with_dedup(true);
+        let base = Config { heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        let reports = run_tenants(&pool, &specs, &base, 3).expect("serve run");
+        for r in &reports {
+            assert!(r.error.is_none(), "tenant failed under {}: {:?}", policy.name(), r.error);
+            assert_eq!(r.completed, 3);
+        }
+        assert_eq!(pool.shared_bytes(), 0, "drained pool still holds shared bytes");
+        assert_eq!(pool.used_bytes(), 0);
+        pool.check_invariants().unwrap();
+    }
+}
+
+/// The front-end coalesces queued Infer runs into batched invocations
+/// (events record the coalesced group size), completes every admitted
+/// request, and produces the same outcome ledger with coalescing off.
+#[test]
+fn frontend_coalesces_infer_runs() {
+    const REQS: usize = 24;
+    let serve = |coalesce: bool| {
+        let mut cfg = FrontendConfig::mixed(1);
+        cfg.queue_cap = REQS;
+        cfg.coalesce = coalesce;
+        let budget = 64 << 20;
+        let pool = ServePool::new(budget, ArbiterPolicy::GlobalReclaim, 1).with_dedup(true);
+        let base = Config { heuristic: Heuristic::dtr_eq(), ..Config::default() };
+        run(&pool, &cfg, &base, |h| {
+            for _ in 0..REQS {
+                assert!(h.submit(0, RequestOp::Infer), "queue under cap must admit");
+            }
+        })
+        .expect("frontend run")
+    };
+
+    let on = serve(true);
+    assert!(on.errors.is_empty(), "worker errors: {:?}", on.errors);
+    let completed = on.events.iter().filter(|e| e.outcome == Outcome::Completed).count();
+    assert_eq!(completed, REQS, "every admitted request must complete");
+    // The client floods the queue before the worker can drain it, so the
+    // worker must have served at least one multi-request coalesced group.
+    assert!(
+        on.events.iter().any(|e| e.batch >= 2 && e.outcome == Outcome::Completed),
+        "no coalesced batch was recorded"
+    );
+
+    let off = serve(false);
+    assert!(off.errors.is_empty());
+    let off_completed = off.events.iter().filter(|e| e.outcome == Outcome::Completed).count();
+    assert_eq!(off_completed, REQS, "coalescing must not change the outcome ledger");
+}
