@@ -21,6 +21,13 @@
 //!   where the differential index must beat `CachedCostScan` by ≥5x. All
 //!   rows are decision-identical across kinds (the equivalence property),
 //!   so ns/eviction compares equal work.
+//! * `section: "epoch_migration"` — ns/op of a burst-heavy
+//!   access-then-evict stream on the differential index, lazy epoch
+//!   migration (`Config::default()`: touched storages park and
+//!   batch-migrate at the next `pop_min`) vs eager
+//!   (`eager_migration: true`: every touch re-seats its tier
+//!   immediately). Decision-identical by construction — lazy only defers
+//!   *where* the bookkeeping happens.
 //!
 //! `--quick` shrinks every section to CI size (small pools, few iters) so
 //! the JSON trajectory can be regenerated on every push; `--json` exits
@@ -212,6 +219,64 @@ fn eviction_scaling(
     ScalingRow { pool, heuristic: h.name(), index: kind.name(), index_name, ns_per_eviction: ns }
 }
 
+struct MigrationRow {
+    pool: usize,
+    mode: &'static str,
+    burst: usize,
+    ns_per_op: u64,
+}
+
+/// ns/op of a burst-heavy stream on the differential index: `bursts`
+/// rounds of `burst` accesses over a 16-storage hot window followed by
+/// one eviction, lazy vs eager epoch migration. The burst shape is the
+/// serving access pattern the lazy path exists for — many re-touches
+/// between victim selections park as O(1) no-ops and batch-migrate once
+/// at the pop, instead of `burst` immediate tier re-seats per round.
+fn epoch_migration(pool: usize, eager: bool, bursts: usize, burst: usize, iters: usize) -> MigrationRow {
+    let ops = bursts * (burst + 1);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..=iters {
+        let cfg = Config {
+            heuristic: Heuristic::dtr_eq(),
+            index: PolicyKind::Differential,
+            eager_migration: eager,
+            ..Config::default()
+        };
+        let mut rt: Runtime<NullBackend> = Runtime::new(cfg, NullBackend::new());
+        let mut prev = rt.constant(1);
+        let mut ts = vec![prev];
+        for i in 0..pool {
+            let size = 1 + (i as u64 % 13);
+            let cost = 1 + (i as u64 % 7);
+            prev = rt.call(&format!("f{i}"), cost, &[prev], &[OutSpec::sized(size)]).unwrap()[0];
+            ts.push(prev);
+        }
+        let mut rng = Rng::new(17);
+        let t0 = Instant::now();
+        for _ in 0..bursts {
+            // Hot window: a burst re-touches a small working set many
+            // times between victim selections (the serving shape).
+            // Re-touching a parked storage is an O(1) no-op under lazy
+            // migration; eager re-seats its tier on every single touch.
+            let hot = 1 + rng.index(pool - 16);
+            for j in 0..burst {
+                rt.access(ts[hot + (j % 16)]).unwrap();
+            }
+            rt.evict_one().expect("pool drained early");
+        }
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    samples.remove(0); // warmup
+    samples.sort();
+    let ns = samples[samples.len() / 2] / ops as u64;
+    let mode = if eager { "eager" } else { "lazy" };
+    println!(
+        "migrate: pool={pool} bursts={bursts}x{burst} [{mode:<5}] {:>12}/op",
+        fmt_ns(ns)
+    );
+    MigrationRow { pool, mode, burst, ns_per_op: ns }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json_out = args
@@ -343,6 +408,16 @@ fn main() {
         i = j;
     }
 
+    // Lazy vs eager epoch migration on burst-heavy access (the serving
+    // shape: many touches per victim selection).
+    println!("\n# epoch migration — lazy (park + batch at pop) vs eager (ns/op)\n");
+    let mig_pool = if quick { 20_000 } else { 100_000 };
+    let (mig_bursts, mig_burst) = if quick { (128, 64) } else { (256, 128) };
+    let mut migration_rows = Vec::new();
+    for &eager in &[false, true] {
+        migration_rows.push(epoch_migration(mig_pool, eager, mig_bursts, mig_burst, 2));
+    }
+
     if let Some(path) = json_out {
         let mut entries: Vec<String> = Vec::new();
         for r in &kernel_rows {
@@ -357,6 +432,13 @@ fn main() {
                 "    {{\"section\": \"eviction_scaling\", \"pool\": {}, \"heuristic\": \"{}\", \
                  \"index\": \"{}\", \"resolved_index\": \"{}\", \"ns_per_eviction\": {}}}",
                 r.pool, r.heuristic, r.index, r.index_name, r.ns_per_eviction
+            ));
+        }
+        for r in &migration_rows {
+            entries.push(format!(
+                "    {{\"section\": \"epoch_migration\", \"pool\": {}, \"mode\": \"{}\", \
+                 \"burst\": {}, \"ns_per_op\": {}}}",
+                r.pool, r.mode, r.burst, r.ns_per_op
             ));
         }
         if entries.is_empty() && !allow_empty {

@@ -16,6 +16,15 @@
 //! `frontend`). Empty or zeroed percentiles fail the run unless
 //! `--allow-empty` is passed — same contract as the scaling section.
 //!
+//! A fourth section (JSON key `global_evict`) times the arbiter's
+//! global-eviction *decision* — `pick_victim`, the exact capture the
+//! reservation slow path runs — over populated fleets of 1/2/4/8 shards,
+//! shared fleet tournament (`GlobalIndexKind::Shared`, one O(log N)
+//! read over published minima) vs the retained peek-every-shard scan
+//! (`GlobalIndexKind::Scan`, N runtime locks + victim searches). The
+//! write fails unless shared ≤ scan at 4+ tenants — the sub-linearity
+//! claim — with the usual `--allow-empty` escape.
+//!
 //! A third section (JSON key `dedup`) measures the content-addressed
 //! pinned-weight store: pinned parameter bytes at rest and inference
 //! throughput for a same-model fleet at 1/2/4/8 tenants, shared
@@ -23,11 +32,12 @@
 //! one pinned copy plus `n` working sets. The run fails unless the shared
 //! mode pins strictly fewer bytes than private at the largest fleet.
 
-use dtr::dtr::Config;
+use dtr::api::{Session, Tensor};
+use dtr::dtr::{Config, NullBackend};
 use dtr::frontend::{frontend_budget, serve_bursty, FrontendConfig};
 use dtr::serve::{
-    fleet_budget, run_tenants, tenant_envelope, ArbiterPolicy, ServePool, TenantDriver,
-    TenantKind, TenantSpec,
+    fleet_budget, run_tenants, tenant_envelope, ArbiterPolicy, GlobalIndexKind, ServePool,
+    TenantDriver, TenantKind, TenantSpec,
 };
 
 struct Row {
@@ -159,6 +169,68 @@ fn run_dedup_point(n: usize, dedup: bool, one_copy: u64, steps: usize) -> DedupR
     }
 }
 
+struct EvictRow {
+    tenants: usize,
+    mode: &'static str,
+    ns_per_decision: f64,
+    decisions: usize,
+    /// Decisions that produced a victim certificate (a requester has no
+    /// peers at `tenants == 1`, so hits are only demanded for 2+).
+    hits: usize,
+}
+
+/// Global-eviction decision latency: `pick_victim` timed over a fleet of
+/// `n` populated accounting shards, under one `GlobalIndexKind`. The
+/// budget is generous — nothing actually evicts; the measured quantity is
+/// the victim *choice*: one tournament read over published minima
+/// (shared) vs `n` runtime locks + index peeks (scan).
+fn run_global_evict_point(n: usize, kind: GlobalIndexKind, decisions: usize) -> EvictRow {
+    let pool =
+        ServePool::new(16 << 20, ArbiterPolicy::GlobalReclaim, n).with_global_index(kind);
+    let sessions: Vec<Session<NullBackend>> = (0..n)
+        .map(|_| {
+            Session::accounting(Config {
+                // Skip the auto index's scan pool so the publishing
+                // differential tournament is what runs from op one.
+                auto_crossover: 0,
+                gate: Some(pool.lease()),
+                ..Config::default()
+            })
+        })
+        .collect();
+    let mut lives: Vec<Vec<Tensor>> =
+        sessions.iter().map(|s| vec![s.constant_sized(8)]).collect();
+    for (sh, s) in sessions.iter().enumerate() {
+        for i in 0..64u64 {
+            let t = s
+                .call_sized(
+                    &format!("w{sh}_{i}"),
+                    1 + i % 4,
+                    &[lives[sh].last().expect("seeded")],
+                    &[8 + i % 16],
+                )
+                .expect("warm op under generous budget")
+                .remove(0);
+            lives[sh].push(t);
+        }
+    }
+    let arb = pool.arbiter();
+    // Warm pick: the first drain folds every publish queued during setup.
+    let _ = arb.pick_victim(0);
+    let mut hits = 0usize;
+    let t0 = std::time::Instant::now();
+    for i in 0..decisions {
+        if arb.pick_victim(i % n).is_some() {
+            hits += 1;
+        }
+    }
+    let ns_per_decision = t0.elapsed().as_nanos() as f64 / decisions.max(1) as f64;
+    drop(lives);
+    drop(sessions);
+    pool.check_invariants().expect("ledger");
+    EvictRow { tenants: n, mode: kind.name(), ns_per_decision, decisions, hits }
+}
+
 /// One tenant's worth of pinned parameter bytes, measured off a throwaway
 /// dedup pool (the exact quantity the shared ledger is charged).
 fn measure_one_copy() -> u64 {
@@ -268,6 +340,22 @@ fn main() {
         }
     }
 
+    // Global-eviction decision latency: shared fleet tournament vs the
+    // retained peek scan, same fleet sizes as the scaling section.
+    println!("\n# bench_serve — global-evict ns/decision, shared tournament vs peek scan\n");
+    let decisions = if quick { 2_000 } else { 10_000 };
+    let mut evict_rows = Vec::new();
+    for &n in tenant_counts {
+        for kind in GlobalIndexKind::all() {
+            let r = run_global_evict_point(n, kind, decisions);
+            println!(
+                "tenants={:<2} [{:<6}] {:>9.1} ns/decision  {}/{} certificates",
+                r.tenants, r.mode, r.ns_per_decision, r.hits, r.decisions
+            );
+            evict_rows.push(r);
+        }
+    }
+
     if let Some(path) = json_out {
         if rows.is_empty() && !allow_empty {
             eprintln!(
@@ -312,6 +400,29 @@ fn main() {
             );
             std::process::exit(1);
         }
+        // Global-evict acceptance bar: rows must exist, every 2+-tenant
+        // decision must have produced a certificate, and the shared
+        // tournament must not lose to the peek scan at 4+ tenants (the
+        // sub-linearity claim the section exists to demonstrate).
+        let ge_vacuous = evict_rows.is_empty()
+            || evict_rows.iter().any(|r| r.tenants >= 2 && r.hits < r.decisions);
+        let ge_no_win = evict_rows
+            .iter()
+            .filter(|s| s.tenants >= 4 && s.mode == "shared")
+            .any(|s| {
+                match evict_rows.iter().find(|p| p.tenants == s.tenants && p.mode == "scan") {
+                    Some(p) => s.ns_per_decision > p.ns_per_decision,
+                    None => true,
+                }
+            });
+        if (ge_vacuous || ge_no_win) && !allow_empty {
+            eprintln!(
+                "bench_serve: global_evict section is vacuous or shows the shared \
+                 tournament losing to the peek scan at 4+ tenants for {path} \
+                 (pass --allow-empty to override)"
+            );
+            std::process::exit(1);
+        }
         let mut s = String::from(
             "{\n  \"bench\": \"serve_scaling\",\n  \"unit\": \"aggregate_steps_per_sec\",\n  \"quick\": ",
         );
@@ -348,6 +459,19 @@ fn main() {
                 r.completed,
                 r.rejected,
                 if i + 1 == front_rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n  \"global_evict\": [\n");
+        for (i, r) in evict_rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"tenants\": {}, \"mode\": \"{}\", \"ns_per_decision\": {:.1}, \
+                 \"decisions\": {}, \"hits\": {}}}{}\n",
+                r.tenants,
+                r.mode,
+                r.ns_per_decision,
+                r.decisions,
+                r.hits,
+                if i + 1 == evict_rows.len() { "" } else { "," }
             ));
         }
         s.push_str("  ],\n  \"dedup\": [\n");

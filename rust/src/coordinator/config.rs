@@ -5,10 +5,11 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::dtr::policy::AUTO_CROSSOVER_POOL;
 use crate::dtr::{DeallocPolicy, Heuristic, PolicyKind};
 use crate::exec::Optimizer;
 use crate::runtime::{BackendKind, Executor, InterpExecutor, ModelConfig};
-use crate::serve::ArbiterPolicy;
+use crate::serve::{ArbiterPolicy, GlobalIndexKind};
 use crate::util::cli::Args;
 use crate::util::json::parse;
 
@@ -34,6 +35,10 @@ pub struct TrainConfig {
     /// staleness-bearing heuristic; `auto` already picks differential for
     /// the `h_DTR` family).
     pub index: PolicyKind,
+    /// Pool size at which the `auto` index upgrades from the scan to the
+    /// differential index (`--auto-crossover`): bench sweeps price the
+    /// boundary without recompiling. 0 upgrades at the first pop.
+    pub auto_crossover: usize,
     pub optimizer: Optimizer,
     pub sqrt_sample: bool,
     pub small_filter: bool,
@@ -45,6 +50,10 @@ pub struct TrainConfig {
     pub tenants: usize,
     /// ...and how the arbiter divides it (static-split vs global-reclaim).
     pub arbiter: ArbiterPolicy,
+    /// How `GlobalReclaim` finds the fleet-wide victim (`--global-index`):
+    /// `shared` = one cross-shard tournament over published per-shard
+    /// minima (default), `scan` = the peek-every-peer loop.
+    pub global_index: GlobalIndexKind,
     /// Intra-op worker threads for the interpreter's kernel layer. Any
     /// value is bit-identical to 1 (threads partition disjoint output
     /// rows; see `runtime/kernels`), so DTR decision traces are
@@ -89,6 +98,7 @@ impl Default for TrainConfig {
             heuristic: Heuristic::dtr_eq(),
             policy: DeallocPolicy::EagerEvict,
             index: PolicyKind::Auto,
+            auto_crossover: AUTO_CROSSOVER_POOL,
             // SGD by default: Adam's m/v state triples the pinned constant
             // footprint, which dominates small models and shrinks the
             // evictable headroom the budget ladder sweeps.
@@ -99,6 +109,7 @@ impl Default for TrainConfig {
             curve_out: None,
             tenants: 1,
             arbiter: ArbiterPolicy::GlobalReclaim,
+            global_index: GlobalIndexKind::Shared,
             threads: 1,
             fused: false,
             queue_cap: 64,
@@ -186,6 +197,14 @@ impl TrainConfig {
                     cfg.index = PolicyKind::parse(name)
                         .with_context(|| format!("unknown index kind {name}"))?;
                 }
+                "auto_crossover" => {
+                    cfg.auto_crossover = val.as_usize().context("auto_crossover")?
+                }
+                "global_index" => {
+                    let name = val.as_str().context("global_index")?;
+                    cfg.global_index = GlobalIndexKind::parse(name)
+                        .with_context(|| format!("unknown global index kind {name}"))?;
+                }
                 "optimizer" => {
                     cfg.optimizer = match val.as_str().context("optimizer")? {
                         "adam" => Optimizer::Adam,
@@ -248,6 +267,11 @@ impl TrainConfig {
         }
         if let Some(i) = args.get("index") {
             self.index = PolicyKind::parse(i).with_context(|| format!("index kind {i}"))?;
+        }
+        self.auto_crossover = args.usize_or("auto-crossover", self.auto_crossover);
+        if let Some(g) = args.get("global-index") {
+            self.global_index =
+                GlobalIndexKind::parse(g).with_context(|| format!("global index kind {g}"))?;
         }
         if let Some(o) = args.get("optimizer") {
             self.optimizer = match o {
@@ -418,6 +442,33 @@ mod tests {
         assert_eq!(c.tenants, 8);
         assert_eq!(c.arbiter, ArbiterPolicy::GlobalReclaim);
         let bad = write_tmp(r#"{"arbiter": "roundrobin"}"#);
+        assert!(TrainConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn global_index_and_auto_crossover_knobs_parse_and_override() {
+        let c = TrainConfig::default();
+        assert_eq!(c.global_index, GlobalIndexKind::Shared, "shared must be the default");
+        assert_eq!(c.auto_crossover, AUTO_CROSSOVER_POOL);
+        let p = write_tmp(r#"{"global_index": "scan", "auto_crossover": 0}"#);
+        let c = TrainConfig::from_file(&p).unwrap();
+        assert_eq!(c.global_index, GlobalIndexKind::Scan);
+        assert_eq!(c.auto_crossover, 0);
+        let args = crate::util::cli::Args::parse(
+            vec![
+                "--config".to_string(),
+                p.to_str().unwrap().to_string(),
+                "--global-index".to_string(),
+                "shared".to_string(),
+                "--auto-crossover".to_string(),
+                "1".to_string(),
+            ]
+            .into_iter(),
+        );
+        let c = TrainConfig::load(&args).unwrap();
+        assert_eq!(c.global_index, GlobalIndexKind::Shared, "flag must win over the file");
+        assert_eq!(c.auto_crossover, 1);
+        let bad = write_tmp(r#"{"global_index": "gossip"}"#);
         assert!(TrainConfig::from_file(&bad).is_err());
     }
 

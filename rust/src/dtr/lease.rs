@@ -33,6 +33,7 @@ use anyhow::Result;
 
 use super::backend::Backend;
 use super::ids::StorageId;
+use super::policy::MinSlot;
 use super::runtime::Runtime;
 
 /// The requester's own runtime, surrendered to the arbiter for the duration
@@ -159,6 +160,17 @@ pub trait BudgetGate: Send + Sync {
     /// *current* runtime. Sessions are per-step objects, so this is called
     /// once per session construction.
     fn bind(&self, remote: Arc<dyn RemoteEvictor>);
+
+    /// The shard's leaf in the fleet-wide eviction tournament, if the gate
+    /// participates in one (`serve::BudgetArbiter` under
+    /// `GlobalIndexKind::Shared`). The runtime hands this slot to its
+    /// victim-selection index (`PolicyIndex::bind_slot`) so every local
+    /// minimum change is published for the arbiter to read lock-free;
+    /// gates outside a fleet return `None` and the runtime publishes
+    /// nothing.
+    fn min_slot(&self) -> Option<Arc<MinSlot>> {
+        None
+    }
 }
 
 /// The budget-side contract of content-addressed pinned-weight sharing

@@ -25,15 +25,21 @@
 //! downgrade/re-upgrade hysteresis would pay the O(pool) rebuild on every
 //! oscillation around the threshold.
 
+use std::sync::Arc;
+
 use super::super::graph::Graph;
 use super::super::heuristics::Heuristic;
 use super::super::ids::StorageId;
 use super::differential::DifferentialIndex;
+use super::fleet::MinSlot;
 use super::scan::ScanIndex;
 use super::{PolicyIndex, SelectCtx};
 
-/// Pool size at which `pop_min` upgrades from the scan to the differential
-/// index.
+/// Default pool size at which `pop_min` upgrades from the scan to the
+/// differential index (`Config::auto_crossover` overrides it per run, via
+/// JSON `auto_crossover` or `--auto-crossover`, so bench sweeps can price
+/// the boundary without recompiling; `0` upgrades at the first pop, and a
+/// huge value pins the scan forever).
 ///
 /// Backed by the `eviction_scaling` section of `BENCH_dtr.json`
 /// (`benches/bench_dtr.rs`): the reference scan costs ~2.0 ns x pool per
@@ -49,22 +55,34 @@ pub const AUTO_CROSSOVER_POOL: usize = 512;
 pub struct AutoIndex {
     h: Heuristic,
     scan: ScanIndex,
-    /// `Some` once the pool first reached [`AUTO_CROSSOVER_POOL`].
+    /// Upgrade threshold (normally [`AUTO_CROSSOVER_POOL`]).
+    crossover: usize,
+    /// Epoch-migration mode handed to the differential index on upgrade.
+    eager: bool,
+    /// Fleet publish slot to forward on upgrade. While still in the scan
+    /// phase the slot stays wherever the binder left it (`Unbound` →
+    /// the arbiter peeks this shard), which is correct: the scan has no
+    /// incremental minimum to publish.
+    slot: Option<Arc<MinSlot>>,
+    /// `Some` once the pool first reached the crossover.
     upgraded: Option<DifferentialIndex>,
 }
 
 impl AutoIndex {
-    pub fn new(h: Heuristic) -> Self {
-        AutoIndex { h, scan: ScanIndex::new(), upgraded: None }
+    pub fn new(h: Heuristic, crossover: usize, eager: bool) -> Self {
+        AutoIndex { h, scan: ScanIndex::new(), crossover, eager, slot: None, upgraded: None }
     }
 
     /// Build a fresh differential index over the live pool. Each replayed
     /// entry is one maintenance traversal under Fig. 12 accounting.
     fn upgrade(&mut self, ctx: &mut SelectCtx<'_>) -> &mut DifferentialIndex {
-        let mut d = DifferentialIndex::new(self.h);
+        let mut d = DifferentialIndex::new(self.h).with_eager(self.eager);
         d.on_clock(ctx.clock);
         for &s in ctx.pool {
             d.on_insert(s, ctx.graph);
+        }
+        if let Some(slot) = self.slot.take() {
+            d.bind_slot(slot);
         }
         *ctx.accesses += ctx.pool.len() as u64;
         self.upgraded.insert(d)
@@ -132,11 +150,18 @@ impl PolicyIndex for AutoIndex {
         self.upgraded.as_ref().map_or(0, |d| d.metadata_len())
     }
 
+    fn bind_slot(&mut self, slot: Arc<MinSlot>) {
+        match &mut self.upgraded {
+            Some(d) => d.bind_slot(slot),
+            None => self.slot = Some(slot),
+        }
+    }
+
     fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
         if let Some(d) = &mut self.upgraded {
             return d.pop_min(ctx);
         }
-        if ctx.pool.len() >= AUTO_CROSSOVER_POOL {
+        if ctx.pool.len() >= self.crossover {
             return self.upgrade(ctx).pop_min(ctx);
         }
         self.scan.pop_min(ctx)

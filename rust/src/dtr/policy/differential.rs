@@ -40,10 +40,12 @@
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeSet, BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use super::super::graph::Graph;
 use super::super::heuristics::{integral_cost, staleness_param, Heuristic, InvalidationScope};
 use super::super::ids::StorageId;
+use super::fleet::MinSlot;
 use super::{Dirtier, EqSubs, PolicyIndex, SelectCtx};
 
 const NIL: u32 = u32::MAX;
@@ -177,6 +179,9 @@ struct Slot {
     dirty: bool,
     /// Present in `dirty_list` (dedup).
     queued: bool,
+    /// Accessed since placement but not yet migrated to its new epoch tier
+    /// (lazy migration; present in `pending`).
+    parked: bool,
     /// Tier arena index holding this storage, or `NIL`.
     tier: u32,
     /// Cached integral numerator (valid when `!dirty`).
@@ -187,8 +192,18 @@ struct Slot {
 
 impl Default for Slot {
     fn default() -> Self {
-        Slot { in_pool: false, dirty: true, queued: false, tier: NIL, c: 1, m: 1 }
+        Slot { in_pool: false, dirty: true, queued: false, parked: false, tier: NIL, c: 1, m: 1 }
     }
+}
+
+/// The score a [`MinSlot`] publishes, pinned to `heuristics::finish_score`
+/// for the staleness-bearing Param family: `c` is the lossless integral
+/// numerator ([`integral_cost`]), `m` the size denominator (`size.max(1)`
+/// or 1), so `c as f64` reproduces the cached `f64` numerator exactly and
+/// this expression — same operands, same association — is bit-identical to
+/// the score a `try_lock` peek of the shard would compute.
+fn published_score(c: u64, m: u64, stale: u64) -> f64 {
+    c as f64 / (m as f64 * stale as f64)
 }
 
 struct Tier {
@@ -223,6 +238,14 @@ pub struct DifferentialIndex {
     certs: BinaryHeap<Reverse<(u64, u32, u32)>>,
     /// Latest clock observed (hooks do not all carry one).
     now: u64,
+    /// Storages parked by a lazy `on_access` (epoch migration deferred to
+    /// the next `pop_min`; dedup via `Slot::parked`).
+    pending: Vec<StorageId>,
+    /// Restore the pre-fleet eager per-touch migration (bench comparison).
+    eager: bool,
+    /// The shard's published-minimum slot in the fleet tournament, when
+    /// this index serves a shard of an arbitrated pool.
+    fleet_slot: Option<Arc<MinSlot>>,
 }
 
 impl DifferentialIndex {
@@ -246,7 +269,19 @@ impl DifferentialIndex {
             ngen: Vec::new(),
             certs: BinaryHeap::new(),
             now: 0,
+            pending: Vec::new(),
+            eager: false,
+            fleet_slot: None,
         }
+    }
+
+    /// Restore eager per-touch epoch migration (the pre-fleet behavior):
+    /// `on_access` re-keys immediately instead of parking for the next
+    /// `pop_min`. Kept for the `epoch_migration` bench rows and as a
+    /// regression bar; both modes are decision-exact.
+    pub fn with_eager(mut self, eager: bool) -> Self {
+        self.eager = eager;
+        self
     }
 
     fn slot(&mut self, s: StorageId) -> usize {
@@ -413,6 +448,9 @@ impl DifferentialIndex {
             return;
         }
         self.slots[i].tier = NIL;
+        // A pending lazy migration is moot once the storage leaves its tier
+        // (evicted, dirtied, retired); the flush skips unparked entries.
+        self.slots[i].parked = false;
         let key = Key { c: self.slots[i].c, m: self.slots[i].m, id: s.0 };
         let tier = &mut self.tiers[ti as usize];
         let old_rep = tier.members.iter().next().copied();
@@ -459,6 +497,63 @@ impl DifferentialIndex {
             Some(StorageId(self.rep(ti).id))
         }
     }
+
+    /// Batch-migrate every parked storage to its current epoch — the lazy
+    /// half of `on_access`, run at the head of `pop_min` before any score
+    /// is consulted. A burst of touches to one storage costs one migration
+    /// here instead of one O(log) re-key per touch, and repeated touches
+    /// coalesce to the *final* `last_access`.
+    fn flush_parked(&mut self, g: &Graph, t: u64) {
+        while let Some(s) = self.pending.pop() {
+            let i = s.idx();
+            if !self.slots[i].parked {
+                continue; // left its tier (evicted/dirtied) since parking
+            }
+            self.slots[i].parked = false;
+            let ti = self.slots[i].tier;
+            if ti == NIL {
+                continue;
+            }
+            let a = g.storage(s).last_access;
+            if self.tiers[ti as usize].a != a {
+                self.unplace(s, t);
+                self.place(s, a, t);
+            }
+        }
+    }
+
+    /// Push this shard's exact current minimum into its fleet slot (no-op
+    /// without one). Trust rules, in order:
+    ///
+    /// * pending dirty re-keys → [`MinSlot::mark_stale`] (a dirtied
+    ///   numerator can err in either direction);
+    /// * empty tournament → [`MinSlot::publish_empty`] (every pooled
+    ///   storage is either placed or on the dirty list, so an empty tree
+    ///   with no dirt means an empty pool);
+    /// * parked winner → stale: a parked entry's structure epoch lags its
+    ///   true `last_access`, so its structure score *under*states the true
+    ///   score — it can only err toward winning, never toward hiding a
+    ///   cheaper victim, hence any *non*-parked winner is the exact argmin
+    ///   but a parked one cannot vouch for itself;
+    /// * otherwise → the winner's exact score at the current clock.
+    fn republish(&mut self) {
+        let Some(slot) = &self.fleet_slot else { return };
+        if !self.dirty_list.is_empty() {
+            slot.mark_stale();
+            return;
+        }
+        if self.cap == 0 || self.tree[1] == NIL {
+            slot.publish_empty();
+            return;
+        }
+        let rep = self.rep(self.tree[1]);
+        if self.slots[StorageId(rep.id).idx()].parked {
+            slot.mark_stale();
+            return;
+        }
+        let stale = self.now.saturating_sub(rep.a) + 1;
+        slot.publish_min(published_score(rep.c, rep.m, stale), rep.id);
+    }
 }
 
 impl PolicyIndex for DifferentialIndex {
@@ -485,6 +580,7 @@ impl PolicyIndex for DifferentialIndex {
             // numerator, and invalidations land regardless of pool state).
             self.place(s, g.storage(s).last_access, t);
         }
+        self.republish();
     }
 
     fn on_remove(&mut self, s: StorageId, _g: &Graph) {
@@ -493,22 +589,58 @@ impl PolicyIndex for DifferentialIndex {
         self.slots[i].in_pool = false;
         self.unplace(s, t);
         // Cache and eq-class subscriptions stay live (see `on_insert`).
+        self.republish();
     }
 
     fn on_access(&mut self, s: StorageId, g: &Graph, clock: u64) {
         self.now = self.now.max(clock);
         let i = self.slot(s);
         let ti = self.slots[i].tier;
-        if ti != NIL && self.tiers[ti as usize].a != g.storage(s).last_access {
+        if ti == NIL || self.tiers[ti as usize].a == g.storage(s).last_access {
+            return;
+        }
+        if self.eager {
             let now = self.now;
             self.unplace(s, now);
             self.place(s, g.storage(s).last_access, now);
+            self.republish();
+            return;
+        }
+        // Lazy epoch migration: park the touched storage and batch-migrate
+        // at the next `pop_min` (`flush_parked`). Decision-exact by
+        // construction — scores are only consulted at pop, after the flush.
+        if !self.slots[i].parked {
+            self.slots[i].parked = true;
+            self.pending.push(s);
+        }
+        // Parking changes no tree structure, so the published minimum moves
+        // only if the touched storage *is* the current winner (its true
+        // score just rose past its structure score).
+        if self.fleet_slot.is_some() && self.current_winner() == Some(s) {
+            if let Some(slot) = &self.fleet_slot {
+                slot.mark_stale();
+            }
         }
     }
 
     fn on_clock(&mut self, clock: u64) {
-        // Certificates are replayed lazily at the next `pop_min`.
         self.now = self.now.max(clock);
+        if self.fleet_slot.is_some() {
+            // A publishing shard keeps its slot current as the moving clock
+            // re-orders scores: replay expired certificates (exact at any
+            // clock; amortized the same work a later pop_min would do) and
+            // republish the root. Non-publishing indexes keep the lazy
+            // replay-at-pop behavior below.
+            let t = self.now;
+            self.advance(t);
+            self.republish();
+        }
+        // Otherwise certificates are replayed lazily at the next `pop_min`.
+    }
+
+    fn bind_slot(&mut self, slot: Arc<MinSlot>) {
+        self.fleet_slot = Some(slot);
+        self.republish();
     }
 
     fn invalidate(&mut self, s: StorageId, g: &Graph, accesses: &mut u64) {
@@ -518,6 +650,7 @@ impl PolicyIndex for DifferentialIndex {
             self.mark_dirty(d);
         }
         self.dirtier.buf = buf;
+        self.republish();
     }
 
     fn on_component_touched(&mut self, root: u32) {
@@ -528,6 +661,7 @@ impl PolicyIndex for DifferentialIndex {
             self.mark_dirty(s);
         }
         self.touch_buf = buf;
+        self.republish();
     }
 
     fn on_components_merged(&mut self, kept: u32, absorbed: u32) {
@@ -538,6 +672,7 @@ impl PolicyIndex for DifferentialIndex {
             self.mark_dirty(s);
         }
         self.touch_buf = buf;
+        self.republish();
     }
 
     fn on_retire(&mut self, retired: &[StorageId], _g: &Graph) {
@@ -557,11 +692,17 @@ impl PolicyIndex for DifferentialIndex {
         for node in (1..self.cap).rev() {
             self.recompute_node(node, t);
         }
+        self.republish();
     }
 
     fn metadata_len(&self) -> usize {
         let members: usize = self.tiers.iter().map(|t| t.members.len()).sum();
-        members + self.by_epoch.len() + self.dirty_list.len() + self.certs.len() + self.subs.len()
+        members
+            + self.by_epoch.len()
+            + self.dirty_list.len()
+            + self.certs.len()
+            + self.subs.len()
+            + self.pending.len()
     }
 
     fn pop_min(&mut self, ctx: &mut SelectCtx<'_>) -> Option<StorageId> {
@@ -570,6 +711,9 @@ impl PolicyIndex for DifferentialIndex {
         }
         self.now = self.now.max(ctx.clock);
         let t = self.now;
+        // 0. Batch-migrate parked epochs (lazy `on_access`): after this,
+        // tiers match the eager index's state exactly.
+        self.flush_parked(ctx.graph, t);
         // 1. Differential re-key: only the storages whose numerator an
         // invalidation actually touched, each O(log n) to re-place.
         while let Some(s) = self.dirty_list.pop() {
@@ -595,7 +739,12 @@ impl PolicyIndex for DifferentialIndex {
         // afterwards; if everything is small, the scan's starved fallback
         // is the unfiltered argmin — the first one set aside.
         if ctx.min_size == 0 {
-            return self.current_winner();
+            let winner = self.current_winner();
+            // The pop healed every stale source (parked epochs flushed,
+            // dirt re-keyed, certificates replayed): republish so a STALE
+            // fleet slot returns to VALID — a remote peek heals the shard.
+            self.republish();
+            return winner;
         }
         let mut set_aside: Vec<StorageId> = Vec::new();
         let mut found: Option<StorageId> = None;
@@ -613,6 +762,10 @@ impl PolicyIndex for DifferentialIndex {
             let a = ctx.graph.storage(s).last_access;
             self.place(s, a, t);
         }
+        // Published min is the *unfiltered* argmin; under a small-tensor
+        // filter the arbiter's shared choice may differ from a filtered
+        // peek (documented exactness scope: default `min_size == 0`).
+        self.republish();
         result
     }
 }

@@ -1,0 +1,553 @@
+//! Fleet-wide differential eviction: **one** kinetic tournament shared
+//! across all serve shards.
+//!
+//! PAPER §5's prototype interposes on a single allocator; Coop's
+//! pooled-reclaim lesson (PAPERS.md) extends that to serving fleets —
+//! eviction decisions should be made against the whole memory pool, not
+//! per-silo. Our `GlobalReclaim` arbiter used to rediscover the globally
+//! least-valuable tensor by peeking *every* peer shard per eviction round
+//! (an O(shards) fan-out of `try_lock`ed per-shard victim searches). But
+//! each shard's [`super::DifferentialIndex`] already maintains exactly the
+//! structure needed to answer the global question: its kinetic tournament
+//! root *is* the shard's current min score. This module lifts that
+//! tournament one level:
+//!
+//! * [`MinSlot`] — a seqlock-published `(state, score, id)` triple, one per
+//!   shard, written by the shard's index on every mutation that changes its
+//!   local minimum and read by the arbiter **without touching the shard's
+//!   runtime lock**. The published score is bit-identical to the score the
+//!   scan's `f64` arithmetic would compute (`heuristics::finish_score`),
+//!   because the differential index caches the lossless integral numerator.
+//! * [`FleetTournament`] — a segment tree over the slots, keyed by
+//!   `(score, shard)` so ties resolve exactly like the peek loop's
+//!   first-peer-wins order. Slots announce changes on a shared dirty queue
+//!   (deduplicated per slot), so a drain re-reads only the slots that moved
+//!   and repairs each leaf's root path in O(log shards).
+//!
+//! `GlobalReclaim`'s victim choice becomes one tournament read; the peek
+//! loop survives only as the `--global-index scan` fallback/benchmark bar,
+//! and as the per-shard escape hatch for slots that cannot vouch for
+//! themselves ([`SlotRead::Stale`] / [`SlotRead::Unbound`]).
+//!
+//! Churn safety: every (re)bind of a shard slot bumps a generation
+//! counter, and dirty-queue entries carry the generation they were
+//! published under — a replayed certificate from a departed tenant's slot
+//! can never resurrect a dead shard's leaf ([`FleetTournament::drain`]
+//! drops it and counts it in [`FleetTournament::dead_drops`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+const NIL: u32 = u32::MAX;
+
+const ST_UNBOUND: u8 = 0;
+const ST_EMPTY: u8 = 1;
+const ST_STALE: u8 = 2;
+const ST_VALID: u8 = 3;
+
+/// One consistent read of a [`MinSlot`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlotRead {
+    /// No publishing index is bound (scan/heap/auto-below-crossover shards,
+    /// or a runtime between sessions): the arbiter must peek.
+    Unbound,
+    /// A publishing index is bound and its pool is empty: skip the shard
+    /// (exactly what the peek loop does with `RemotePeek::Empty`).
+    Empty,
+    /// The published minimum is outdated (pending invalidations or a parked
+    /// epoch migration): the arbiter must peek; the peek itself heals the
+    /// slot (the shard's `pop_min` republishes).
+    Stale,
+    /// The shard's exact current minimum score and its storage id.
+    Valid { score: f64, id: u32 },
+}
+
+/// A shard's published tier-minimum: a small seqlock written by the shard's
+/// [`super::PolicyIndex`] (under the shard's own runtime lock — there is
+/// exactly one writer at a time) and read lock-free by the arbiter.
+///
+/// Writes announce themselves on the owning [`FleetTournament`]'s dirty
+/// queue, deduplicated by the `queued` flag: a slot sits in the queue at
+/// most once until the next drain re-reads it, so the queue is bounded by
+/// the shard count however chatty the publishers are.
+pub struct MinSlot {
+    seq: AtomicU32,
+    state: AtomicU8,
+    bits: AtomicU64,
+    id: AtomicU32,
+    queued: AtomicBool,
+    shard: u32,
+    generation: u32,
+    queue: Arc<Mutex<Vec<(u32, u32)>>>,
+}
+
+impl MinSlot {
+    fn new(shard: u32, generation: u32, queue: Arc<Mutex<Vec<(u32, u32)>>>) -> MinSlot {
+        MinSlot {
+            seq: AtomicU32::new(0),
+            state: AtomicU8::new(ST_UNBOUND),
+            bits: AtomicU64::new(0),
+            id: AtomicU32::new(NIL),
+            queued: AtomicBool::new(false),
+            shard,
+            generation,
+            queue,
+        }
+    }
+
+    /// A slot attached to nothing — for unit tests of publishing indexes
+    /// outside a serve fleet.
+    pub fn detached() -> Arc<MinSlot> {
+        Arc::new(MinSlot::new(0, 0, Arc::new(Mutex::new(Vec::new()))))
+    }
+
+    /// The shard slot index this slot publishes for.
+    pub fn shard(&self) -> usize {
+        self.shard as usize
+    }
+
+    fn write(&self, state: u8, bits: u64, id: u32) {
+        // Single-writer (runtime lock held); skip no-op publishes so a
+        // quiescent shard never churns the dirty queue.
+        if self.state.load(Ordering::Acquire) == state
+            && self.bits.load(Ordering::Acquire) == bits
+            && self.id.load(Ordering::Acquire) == id
+        {
+            return;
+        }
+        let s0 = self.seq.load(Ordering::Relaxed);
+        self.seq.store(s0.wrapping_add(1), Ordering::Release); // odd: torn
+        self.bits.store(bits, Ordering::Release);
+        self.id.store(id, Ordering::Release);
+        self.state.store(state, Ordering::Release);
+        self.seq.store(s0.wrapping_add(2), Ordering::Release); // even: clean
+        if !self.queued.swap(true, Ordering::AcqRel) {
+            self.queue.lock().expect("fleet queue poisoned").push((self.shard, self.generation));
+        }
+    }
+
+    /// Publish the shard's exact current minimum.
+    pub fn publish_min(&self, score: f64, id: u32) {
+        self.write(ST_VALID, score.to_bits(), id);
+    }
+
+    /// Publish "nothing evictable" (empty pool, or the shard's runtime was
+    /// torn down between steps).
+    pub fn publish_empty(&self) {
+        self.write(ST_EMPTY, 0, NIL);
+    }
+
+    /// The published minimum can no longer be trusted (pending dirty
+    /// entries or a parked epoch migration); the arbiter falls back to a
+    /// peek until the shard's next `pop_min` republishes.
+    pub fn mark_stale(&self) {
+        self.write(ST_STALE, 0, NIL);
+    }
+
+    /// Reset to the non-publishing state (a fresh session bound an index
+    /// that may not publish at all).
+    pub fn reset_unbound(&self) {
+        self.write(ST_UNBOUND, 0, NIL);
+    }
+
+    /// One consistent snapshot; retries while a write is in flight, and
+    /// degrades to [`SlotRead::Stale`] (a safe "go peek") if a writer keeps
+    /// the slot torn across every retry.
+    pub fn read(&self) -> SlotRead {
+        for _ in 0..64 {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let state = self.state.load(Ordering::Acquire);
+            let bits = self.bits.load(Ordering::Acquire);
+            let id = self.id.load(Ordering::Acquire);
+            if self.seq.load(Ordering::Acquire) != s1 {
+                continue;
+            }
+            return match state {
+                ST_UNBOUND => SlotRead::Unbound,
+                ST_EMPTY => SlotRead::Empty,
+                ST_STALE => SlotRead::Stale,
+                _ => SlotRead::Valid { score: f64::from_bits(bits), id },
+            };
+        }
+        SlotRead::Stale
+    }
+}
+
+/// What the fleet tournament currently believes about one shard's leaf.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Leaf {
+    /// No slot bound (never registered, or retired).
+    Vacant,
+    /// The slot cannot vouch for its minimum (unbound or stale): the
+    /// arbiter must peek this shard through its runtime handle.
+    NeedsPeek,
+    /// The shard published an empty pool: skip it.
+    Empty,
+    /// The shard's exact published minimum score.
+    Min(f64),
+}
+
+/// The cross-shard tournament: a power-of-two segment tree whose leaf `j`
+/// is shard `j`'s published minimum, ordered by `(score, shard)` — the same
+/// strict-`<` first-peer-wins order the scan loop induces. All queries are
+/// O(log shards); a drain repairs one root path per moved slot.
+pub struct FleetTournament {
+    queue: Arc<Mutex<Vec<(u32, u32)>>>,
+    /// Current generation per shard slot; stale dirty-queue entries (from a
+    /// slot bound before the last churn on this shard index) are dropped.
+    gens: Vec<u32>,
+    slots: Vec<Option<Arc<MinSlot>>>,
+    leaves: Vec<Leaf>,
+    cap: usize,
+    /// 1-based segment tree of winning shard indices (`NIL` = no candidate
+    /// in the subtree). With `cap == 1` the lone leaf is the root.
+    tree: Vec<u32>,
+    /// Shards whose leaf is [`Leaf::NeedsPeek`], ascending.
+    needs_peek: Vec<u32>,
+    dead_drops: u64,
+    drain_buf: Vec<(u32, u32)>,
+}
+
+impl Default for FleetTournament {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetTournament {
+    pub fn new() -> FleetTournament {
+        FleetTournament {
+            queue: Arc::new(Mutex::new(Vec::new())),
+            gens: Vec::new(),
+            slots: Vec::new(),
+            leaves: Vec::new(),
+            cap: 0,
+            tree: Vec::new(),
+            needs_peek: Vec::new(),
+            dead_drops: 0,
+            drain_buf: Vec::new(),
+        }
+    }
+
+    fn score(&self, shard: u32) -> f64 {
+        match self.leaves[shard as usize] {
+            Leaf::Min(s) => s,
+            // Tree cells only ever name Min leaves; make a logic error lose
+            // every match instead of corrupting a victim choice.
+            _ => f64::INFINITY,
+        }
+    }
+
+    /// Winner of a two-child match: lower `(score, shard)` lexicographically.
+    /// Published scores are finite non-negative (`c/(m·stale)` over positive
+    /// integers), so plain `f64` comparison is total here.
+    fn min_of(&self, x: u32, y: u32) -> u32 {
+        match (x, y) {
+            (NIL, y) => y,
+            (x, NIL) => x,
+            // `x` comes from the left subtree, so on a score tie `x` (the
+            // lower shard index) keeps the match — first-peer-wins.
+            (x, y) => {
+                if self.score(y) < self.score(x) {
+                    y
+                } else {
+                    x
+                }
+            }
+        }
+    }
+
+    fn rebuild(&mut self) {
+        self.tree = vec![NIL; 2 * self.cap];
+        for (i, leaf) in self.leaves.iter().enumerate() {
+            if matches!(leaf, Leaf::Min(_)) {
+                self.tree[self.cap + i] = i as u32;
+            }
+        }
+        for n in (1..self.cap).rev() {
+            self.tree[n] = self.min_of(self.tree[2 * n], self.tree[2 * n + 1]);
+        }
+    }
+
+    fn ensure(&mut self, shard: usize) {
+        if shard >= self.gens.len() {
+            self.gens.resize(shard + 1, 0);
+            self.slots.resize(shard + 1, None);
+            self.leaves.resize(shard + 1, Leaf::Vacant);
+        }
+        if shard >= self.cap {
+            let mut cap = self.cap.max(1);
+            while cap <= shard {
+                cap *= 2;
+            }
+            self.cap = cap;
+            self.rebuild();
+        }
+    }
+
+    /// Re-seed leaf `shard`'s tree cell and repair its root path.
+    fn reseat(&mut self, shard: usize, participate: bool) {
+        self.tree[self.cap + shard] = if participate { shard as u32 } else { NIL };
+        let mut n = (self.cap + shard) >> 1;
+        while n >= 1 {
+            self.tree[n] = self.min_of(self.tree[2 * n], self.tree[2 * n + 1]);
+            n >>= 1;
+        }
+    }
+
+    fn set_leaf(&mut self, shard: usize, leaf: Leaf) {
+        self.leaves[shard] = leaf;
+        self.reseat(shard, matches!(leaf, Leaf::Min(_)));
+        let needs = matches!(leaf, Leaf::NeedsPeek);
+        match (needs, self.needs_peek.iter().position(|&j| j as usize == shard)) {
+            (true, None) => {
+                self.needs_peek.push(shard as u32);
+                self.needs_peek.sort_unstable();
+            }
+            (false, Some(k)) => {
+                self.needs_peek.remove(k);
+            }
+            _ => {}
+        }
+    }
+
+    /// Bind a fresh slot for shard index `shard` (join, or slot recycle
+    /// after churn). Bumps the generation so anything the *previous*
+    /// occupant of this index still publishes is dropped on drain.
+    pub fn bind(&mut self, shard: usize) -> Arc<MinSlot> {
+        self.ensure(shard);
+        self.gens[shard] = self.gens[shard].wrapping_add(1);
+        let slot =
+            Arc::new(MinSlot::new(shard as u32, self.gens[shard], Arc::clone(&self.queue)));
+        self.slots[shard] = Some(Arc::clone(&slot));
+        self.set_leaf(shard, Leaf::NeedsPeek);
+        slot
+    }
+
+    /// Retire a departed shard's leaf (leave/reap). Its slot may live on in
+    /// orphaned `Arc`s held by a dying runtime; anything they publish is
+    /// generation-filtered on drain.
+    pub fn retire(&mut self, shard: usize) {
+        if shard >= self.gens.len() {
+            return;
+        }
+        self.gens[shard] = self.gens[shard].wrapping_add(1);
+        self.slots[shard] = None;
+        self.set_leaf(shard, Leaf::Vacant);
+    }
+
+    /// Absorb every pending slot publish: re-read each dirtied slot once
+    /// and repair its leaf's root path. Entries from dead generations are
+    /// dropped (and counted) — a departed tenant can never re-enter the
+    /// tree.
+    pub fn drain(&mut self) {
+        let mut buf = std::mem::take(&mut self.drain_buf);
+        buf.clear();
+        {
+            let mut q = self.queue.lock().expect("fleet queue poisoned");
+            std::mem::swap(&mut buf, &mut q);
+        }
+        for (sh, gen) in buf.drain(..) {
+            let j = sh as usize;
+            if j >= self.gens.len() || gen != self.gens[j] {
+                self.dead_drops += 1;
+                continue;
+            }
+            let Some(slot) = self.slots[j].clone() else {
+                self.dead_drops += 1;
+                continue;
+            };
+            // Clear the dedup flag *before* reading: a publish racing this
+            // drain re-queues the slot, so the next drain re-reads it.
+            slot.queued.store(false, Ordering::Release);
+            let leaf = match slot.read() {
+                SlotRead::Unbound | SlotRead::Stale => Leaf::NeedsPeek,
+                SlotRead::Empty => Leaf::Empty,
+                SlotRead::Valid { score, .. } => Leaf::Min(score),
+            };
+            self.set_leaf(j, leaf);
+        }
+        self.drain_buf = buf;
+    }
+
+    /// The tournament's current belief about shard `shard`.
+    pub fn leaf(&self, shard: usize) -> Leaf {
+        self.leaves.get(shard).copied().unwrap_or(Leaf::Vacant)
+    }
+
+    /// Shards whose published minimum cannot be trusted and must be peeked
+    /// through their runtime handles (ascending shard order).
+    pub fn peek_list(&self) -> &[u32] {
+        &self.needs_peek
+    }
+
+    /// The globally minimal published `(shard, score)`, or `None` if no
+    /// shard currently publishes a valid minimum.
+    pub fn best(&self) -> Option<(usize, f64)> {
+        if self.cap == 0 {
+            return None;
+        }
+        let w = self.tree[1];
+        if w == NIL {
+            None
+        } else {
+            Some((w as usize, self.score(w)))
+        }
+    }
+
+    /// [`FleetTournament::best`] with `shard`'s own leaf masked out — the
+    /// requester's local candidate competes separately (the `ls <= rs`
+    /// local-wins tie in the arbiter), exactly like the peek loop excludes
+    /// the requester from its peer list. O(log shards): two root-path
+    /// repairs.
+    pub fn best_excluding(&mut self, shard: usize) -> Option<(usize, f64)> {
+        if self.cap == 0 {
+            return None;
+        }
+        if shard >= self.leaves.len() || !matches!(self.leaves[shard], Leaf::Min(_)) {
+            return self.best();
+        }
+        self.reseat(shard, false);
+        let best = self.best();
+        self.reseat(shard, true);
+        best
+    }
+
+    /// Dirty-queue entries dropped because their generation was dead —
+    /// replayed publishes from departed tenants (churn-safety telemetry).
+    pub fn dead_drops(&self) -> u64 {
+        self.dead_drops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_publish_read_roundtrip() {
+        let t = &mut FleetTournament::new();
+        let s = t.bind(0);
+        assert_eq!(s.read(), SlotRead::Unbound);
+        s.publish_min(0.25, 7);
+        assert_eq!(s.read(), SlotRead::Valid { score: 0.25, id: 7 });
+        s.mark_stale();
+        assert_eq!(s.read(), SlotRead::Stale);
+        s.publish_empty();
+        assert_eq!(s.read(), SlotRead::Empty);
+        s.reset_unbound();
+        assert_eq!(s.read(), SlotRead::Unbound);
+    }
+
+    #[test]
+    fn redundant_publish_does_not_requeue() {
+        let t = &mut FleetTournament::new();
+        let s = t.bind(0);
+        s.publish_min(1.0, 3);
+        t.drain();
+        assert_eq!(t.leaf(0), Leaf::Min(1.0));
+        // Identical republish: the slot skips the write entirely, so the
+        // queue stays empty and the leaf stays put.
+        s.publish_min(1.0, 3);
+        assert_eq!(t.queue.lock().unwrap().len(), 0);
+        // A changed value queues exactly once however often it's republished.
+        s.publish_min(0.5, 3);
+        s.publish_min(0.25, 3);
+        assert_eq!(t.queue.lock().unwrap().len(), 1);
+        t.drain();
+        assert_eq!(t.leaf(0), Leaf::Min(0.25), "drain reads the latest value");
+    }
+
+    #[test]
+    fn tournament_orders_by_score_then_shard() {
+        let mut t = FleetTournament::new();
+        let s0 = t.bind(0);
+        let s1 = t.bind(1);
+        let s2 = t.bind(2);
+        s0.publish_min(2.0, 10);
+        s1.publish_min(0.5, 11);
+        s2.publish_min(1.0, 12);
+        t.drain();
+        assert_eq!(t.best(), Some((1, 0.5)));
+        assert_eq!(t.best_excluding(1), Some((2, 1.0)));
+        assert_eq!(t.best_excluding(0), Some((1, 0.5)));
+        // Score tie resolves to the lower shard index (first-peer-wins).
+        s2.publish_min(0.5, 12);
+        t.drain();
+        assert_eq!(t.best(), Some((1, 0.5)));
+        // best_excluding restores the masked leaf.
+        assert_eq!(t.best_excluding(1), Some((2, 0.5)));
+        assert_eq!(t.best(), Some((1, 0.5)));
+    }
+
+    #[test]
+    fn stale_and_empty_leaves_route_to_peeks_and_skips() {
+        let mut t = FleetTournament::new();
+        let s0 = t.bind(0);
+        let s1 = t.bind(1);
+        s0.publish_min(1.0, 1);
+        s1.publish_min(2.0, 2);
+        t.drain();
+        assert!(t.peek_list().is_empty());
+        s0.mark_stale();
+        s1.publish_empty();
+        t.drain();
+        assert_eq!(t.leaf(0), Leaf::NeedsPeek);
+        assert_eq!(t.leaf(1), Leaf::Empty);
+        assert_eq!(t.peek_list(), &[0]);
+        assert_eq!(t.best(), None, "no valid publisher left");
+        // Healing: the next publish clears the peek obligation.
+        s0.publish_min(0.75, 1);
+        t.drain();
+        assert!(t.peek_list().is_empty());
+        assert_eq!(t.best(), Some((0, 0.75)));
+    }
+
+    #[test]
+    fn churn_retires_leaves_and_drops_dead_generation_replays() {
+        let mut t = FleetTournament::new();
+        let s0 = t.bind(0);
+        let s1 = t.bind(1);
+        s0.publish_min(5.0, 1);
+        s1.publish_min(1.0, 2);
+        t.drain();
+        assert_eq!(t.best(), Some((1, 1.0)));
+        // Shard 1 leaves; its slot Arc lives on in the departing runtime.
+        t.retire(1);
+        assert_eq!(t.best(), Some((0, 5.0)), "retired leaf leaves the tree");
+        // The orphan keeps publishing (teardown publishes EMPTY, but even a
+        // bogus minimum must not resurrect the leaf).
+        s1.publish_min(0.001, 3);
+        let drops = t.dead_drops();
+        t.drain();
+        assert!(t.dead_drops() > drops, "dead-generation replay was dropped");
+        assert_eq!(t.leaf(1), Leaf::Vacant);
+        assert_eq!(t.best(), Some((0, 5.0)), "winner never names a dead shard");
+        // A new tenant recycles the slot index with a fresh generation.
+        let s1b = t.bind(1);
+        s1b.publish_min(0.5, 9);
+        t.drain();
+        assert_eq!(t.best(), Some((1, 0.5)));
+        // And the old orphan still can't interfere.
+        s1.publish_min(0.0001, 3);
+        t.drain();
+        assert_eq!(t.best(), Some((1, 0.5)));
+        assert_eq!(t.leaf(1), Leaf::Min(0.5));
+    }
+
+    #[test]
+    fn tournament_grows_past_initial_capacity() {
+        let mut t = FleetTournament::new();
+        let slots: Vec<_> = (0..9).map(|j| t.bind(j)).collect();
+        for (j, s) in slots.iter().enumerate() {
+            s.publish_min(10.0 - j as f64, j as u32);
+        }
+        t.drain();
+        assert_eq!(t.best(), Some((8, 2.0)));
+        assert_eq!(t.best_excluding(8), Some((7, 3.0)));
+    }
+}

@@ -20,6 +20,7 @@
 //! | [`CachedCostScan`]    | staleness-bearing grid cells (fallback under [`PolicyKind::Cached`]) | E.1 cost caching: the expensive `e*`/ẽ*/local numerator is cached and invalidated per neighborhood; the staleness denominator is recomputed in a cheap O(pool) pass |
 //! | [`DifferentialIndex`] | `h_DTR`, `h_DTR^eq`, `h_DTR^local`, `h_LRU`-shaped cells, staleness-bearing grid cells | epoch tiers over the factored score + a kinetic tournament: `pop_min` in O(log) amortized, no O(pool) pass |
 //! | [`AutoIndex`]         | staleness-bearing cells under [`PolicyKind::Auto`] | [`ScanIndex`] until the pool reaches [`AUTO_CROSSOVER_POOL`], then a one-way decision-exact upgrade to [`DifferentialIndex`] — small serve pools skip the kinetic bookkeeping entirely |
+//! | [`FleetTournament`]   | cross-*shard* layer (not a [`PolicyIndex`]) | Coop's pooled-reclaim lesson + PAPER §5 central-allocator interposition: one tournament whose leaves are each shard's published tier-minimum, so the serving arbiter's global victim choice is O(log shards) instead of one peek per peer |
 //!
 //! Why `h_DTR` is *not* a plain heap: its score `c(S)/[m(S)·staleness(S)]`
 //! re-orders as the clock advances (a cheap-but-fresh storage overtakes an
@@ -58,22 +59,41 @@
 //! specialized indexes compare the underlying integers, so equivalence
 //! additionally assumes clocks/sizes below 2^52 (where `1/x` is still
 //! injective in `f64`) — 52 days of nanosecond clock.
+//!
+//! ## The fleet layer (`fleet.rs`)
+//!
+//! Per-shard indexes answer "what is *my* cheapest tensor"; the serving
+//! arbiter needs "what is the *fleet's* cheapest tensor" (Coop argues
+//! eviction silos waste exactly the memory multi-tenancy is supposed to
+//! pool, and PAPER §5 interposes DTR at the central allocator for the same
+//! reason). [`MinSlot`] is the publish seam: a seqlock-protected
+//! `(score, id)` cell each [`DifferentialIndex`] refreshes whenever its
+//! local minimum changes, and [`FleetTournament`] is the arbiter-side
+//! tournament tree over those slots — O(log shards) per global victim
+//! query, generation-stamped so shard churn can never resurrect a dead
+//! shard's leaf. The published score is bitwise-identical to
+//! `heuristics::finish_score` (the numerator is a lossless integer), which
+//! is what makes the shared path decision-exact against the peek loop it
+//! replaces (`tests/serve_exact.rs`).
 
 mod auto;
 mod cached;
 mod dealloc;
 mod differential;
+mod fleet;
 mod lazy_heap;
 mod scan;
 mod size_heap;
 mod staleness;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 pub use auto::{AutoIndex, AUTO_CROSSOVER_POOL};
 pub use cached::CachedCostScan;
 pub use dealloc::DeallocPolicy;
 pub use differential::DifferentialIndex;
+pub use fleet::{FleetTournament, Leaf, MinSlot, SlotRead};
 pub use lazy_heap::LazyHeapIndex;
 pub use scan::ScanIndex;
 pub use size_heap::SizeHeapIndex;
@@ -268,6 +288,14 @@ pub trait PolicyIndex: Send {
         0
     }
 
+    /// Attach a fleet publish slot: indexes that can maintain their exact
+    /// local minimum incrementally publish it here on every change, so the
+    /// serving arbiter can read the fleet-wide argmin without touching this
+    /// runtime. Indexes without an incremental minimum ignore the slot —
+    /// their shard's leaf stays `NeedsPeek` and the arbiter falls back to
+    /// the peek path for it, which is always correct.
+    fn bind_slot(&mut self, _slot: Arc<MinSlot>) {}
+
     /// The current argmin under `ctx`, or `None` if the pool is empty or
     /// fully filtered with no fallback. Does not structurally remove the
     /// winner — the caller evicts it, triggering `on_remove`.
@@ -276,7 +304,17 @@ pub trait PolicyIndex: Send {
 
 /// Build the victim-selection index for a heuristic under the given knob.
 /// Default (`Auto`): indexed where an exact index exists, scan otherwise.
-pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn PolicyIndex> {
+/// `auto_crossover` prices the [`AutoIndex`] scan/differential boundary
+/// (`Config::auto_crossover`); `eager_migration` restores per-touch epoch
+/// re-keying in the differential family (`Config::eager_migration`) in
+/// place of the default lazy parking.
+pub fn make_index(
+    h: Heuristic,
+    kind: PolicyKind,
+    sqrt_sample: bool,
+    auto_crossover: usize,
+    eager_migration: bool,
+) -> Box<dyn PolicyIndex> {
     let want_index = match kind {
         PolicyKind::Scan => false,
         PolicyKind::Auto => !sqrt_sample,
@@ -289,7 +327,7 @@ pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn 
         // Forced: every staleness-bearing cell, even the `h_LRU` shape the
         // staleness list would otherwise take (useful for equivalence tests
         // and benches of the kinetic machinery itself).
-        return Box::new(DifferentialIndex::new(h));
+        return Box::new(DifferentialIndex::new(h).with_eager(eager_migration));
     }
     match h {
         Heuristic::Param(p) if p.cost == CostKind::NoCost && !p.use_size && p.use_staleness => {
@@ -300,8 +338,10 @@ pub fn make_index(h: Heuristic, kind: PolicyKind, sqrt_sample: bool) -> Box<dyn 
         }
         _ if h.clock_free() => Box::new(LazyHeapIndex::new(h)),
         Heuristic::Param(_) if kind == PolicyKind::Cached => Box::new(CachedCostScan::new(h)),
-        Heuristic::Param(_) if kind == PolicyKind::Auto => Box::new(AutoIndex::new(h)),
-        Heuristic::Param(_) => Box::new(DifferentialIndex::new(h)),
+        Heuristic::Param(_) if kind == PolicyKind::Auto => {
+            Box::new(AutoIndex::new(h, auto_crossover, eager_migration))
+        }
+        Heuristic::Param(_) => Box::new(DifferentialIndex::new(h).with_eager(eager_migration)),
         _ => Box::new(ScanIndex::new()),
     }
 }
@@ -465,7 +505,8 @@ mod tests {
 
     #[test]
     fn factory_routes_exactly() {
-        let route = |h: Heuristic, k: PolicyKind, sq: bool| make_index(h, k, sq).name();
+        let route =
+            |h: Heuristic, k: PolicyKind, sq: bool| make_index(h, k, sq, AUTO_CROSSOVER_POOL, false).name();
         // Reference scan: forced, sampled, or h_rand.
         assert_eq!(route(Heuristic::lru(), PolicyKind::Scan, false), "scan");
         assert_eq!(route(Heuristic::lru(), PolicyKind::Auto, true), "scan");

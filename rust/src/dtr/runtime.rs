@@ -42,6 +42,16 @@ pub struct Config {
     /// Record every eviction victim into `Stats::victims` (diagnostics and
     /// the index/scan equivalence property).
     pub trace_victims: bool,
+    /// Pool size at which [`PolicyKind::Auto`]'s scan upgrades to the
+    /// differential index (`policy::AUTO_CROSSOVER_POOL` by default) —
+    /// overridable so bench sweeps can price the boundary without
+    /// recompiling. `0` upgrades at the first pop.
+    pub auto_crossover: usize,
+    /// Restore eager per-touch epoch migration in the differential index
+    /// family instead of the default lazy park-and-batch (`false`). Both
+    /// modes are decision-exact; eager exists as the benchmark bar for the
+    /// lazy path (`bench_dtr`'s `epoch_migration` section).
+    pub eager_migration: bool,
     /// Shared-budget lease (`dtr::lease`): when set, `budget` is ignored
     /// and every allocation reserves bytes through the gate — the fast
     /// path against the shard's lease headroom, the slow path through the
@@ -62,6 +72,8 @@ impl Default for Config {
             seed: 0x5EED,
             profile: false,
             trace_victims: false,
+            auto_crossover: super::policy::AUTO_CROSSOVER_POOL,
+            eager_migration: false,
             gate: None,
         }
     }
@@ -210,7 +222,18 @@ pub struct Runtime<B: Backend> {
 impl<B: Backend> Runtime<B> {
     pub fn new(cfg: Config, backend: B) -> Self {
         let rng = Rng::new(cfg.seed);
-        let index = make_index(cfg.heuristic, cfg.index, cfg.sqrt_sample);
+        let mut index =
+            make_index(cfg.heuristic, cfg.index, cfg.sqrt_sample, cfg.auto_crossover, cfg.eager_migration);
+        if let Some(g) = &cfg.gate {
+            if let Some(slot) = g.0.min_slot() {
+                // Fleet-tournament participation: a fresh runtime starts with
+                // an empty pool, and anything the previous session left
+                // published is now meaningless — reset before the index takes
+                // over publishing.
+                slot.reset_unbound();
+                index.bind_slot(slot);
+            }
+        }
         Runtime {
             cfg,
             graph: Graph::new(),
@@ -924,6 +947,13 @@ impl<B: Backend> Drop for Runtime<B> {
             if leased > 0 {
                 g.0.on_free(leased);
             }
+            // The tenant is between steps: its published fleet-tournament
+            // minimum (if any) names tensors that no longer exist. Empty
+            // matches what a remote peek would now see (`RemotePeek::Gone`
+            // → the arbiter skips the shard).
+            if let Some(slot) = g.0.min_slot() {
+                slot.publish_empty();
+            }
         }
     }
 }
@@ -1279,6 +1309,39 @@ mod tests {
         assert_eq!(scan_victims, auto_victims, "victim sequences diverged");
         assert_eq!(pre, 0, "hybrid paid index metadata below the crossover");
         assert!(post > 0, "hybrid never upgraded past the crossover");
+    }
+
+    #[test]
+    fn auto_crossover_config_boundaries() {
+        use super::policy::AUTO_CROSSOVER_POOL;
+        // The knob prices the scan/differential boundary per run: 0 and 1
+        // upgrade at the very first pop, the 512 default stays in scan mode
+        // for a small pool — victim sequences identical throughout.
+        let drive = |kind: PolicyKind, crossover: usize| {
+            let cfg = Config {
+                heuristic: Heuristic::dtr(),
+                index: kind,
+                auto_crossover: crossover,
+                ..Config::default()
+            };
+            let mut r = Runtime::new(cfg, NullBackend::new());
+            run_chain(&mut r, 64);
+            let mut victims = Vec::new();
+            for _ in 0..16 {
+                victims.push(r.evict_one().expect("pool drained early"));
+            }
+            r.check_invariants().unwrap();
+            (victims, r.index_metadata_len())
+        };
+        let (reference, _) = drive(PolicyKind::Scan, AUTO_CROSSOVER_POOL);
+        for crossover in [0, 1] {
+            let (victims, meta) = drive(PolicyKind::Auto, crossover);
+            assert_eq!(victims, reference, "crossover {crossover} diverged");
+            assert!(meta > 0, "crossover {crossover} never upgraded");
+        }
+        let (victims, meta) = drive(PolicyKind::Auto, AUTO_CROSSOVER_POOL);
+        assert_eq!(victims, reference, "default crossover diverged");
+        assert_eq!(meta, 0, "64-entry pool upgraded below the 512 default");
     }
 
     #[test]

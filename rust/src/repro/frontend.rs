@@ -59,6 +59,7 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
         heuristic: tc.heuristic,
         policy: tc.policy,
         index: tc.index,
+        auto_crossover: tc.auto_crossover,
         ..dtr::Config::default()
     };
     out.row(&[
@@ -78,7 +79,9 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
     ])?;
     for &policy in policies {
         let shards: usize = cfg.classes.iter().map(|c| c.shards.max(1)).sum();
-        let pool = ServePool::new(budget, policy, shards).with_dedup(tc.dedup);
+        let pool = ServePool::new(budget, policy, shards)
+            .with_dedup(tc.dedup)
+            .with_global_index(tc.global_index);
         let report = serve_bursty(&pool, &cfg, &base, PER_CLASS, SEED)?;
         for (ci, m) in report.classes.iter().enumerate() {
             metrics_row(out, policy, &ci.to_string(), m)?;

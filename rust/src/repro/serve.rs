@@ -25,6 +25,7 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
         heuristic: tc.heuristic,
         policy: tc.policy,
         index: tc.index,
+        auto_crossover: tc.auto_crossover,
         ..dtr::Config::default()
     };
     out.row(&[
@@ -44,7 +45,9 @@ pub fn default_run(out: &mut CsvOut, tc: &TrainConfig, policies: &[ArbiterPolicy
         "error",
     ])?;
     for &policy in policies {
-        let pool = ServePool::new(budget, policy, specs.len()).with_dedup(tc.dedup);
+        let pool = ServePool::new(budget, policy, specs.len())
+            .with_dedup(tc.dedup)
+            .with_global_index(tc.global_index);
         let reports = run_tenants(&pool, &specs, &base, tc.steps)?;
         pool.check_invariants()?;
         let mut agg_steps = 0usize;

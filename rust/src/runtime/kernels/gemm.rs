@@ -20,8 +20,9 @@
 //! mul+add each, so every element keeps the single accumulator chain of
 //! the scalar reference (there is deliberately no `k`-blocking: splitting
 //! `k` would split the chain and change rounding). The `simd` feature
-//! swaps the portable block for the hand-vectorized AVX2 one in
-//! [`super::avx`], which rounds identically lane by lane.
+//! swaps the portable block for a hand-vectorized one — AVX2 in
+//! [`super::avx`] on x86-64, NEON in `super::neon` on AArch64 — each of
+//! which rounds identically lane by lane.
 
 use super::par_rows;
 
@@ -52,6 +53,14 @@ fn rank1_block(orow: &mut [f32], av: &[f32; KU], b: &[&[f32]; KU]) {
         // `gemm_rows` builds every `b[u]` with exactly `orow.len()`
         // elements.
         unsafe { super::avx::rank1_block_avx2(orow, av, b) };
+        return;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if super::neon::usable() {
+        // SAFETY: NEON presence is runtime-checked by `usable`, and
+        // `gemm_rows` builds every `b[u]` with exactly `orow.len()`
+        // elements.
+        unsafe { super::neon::rank1_block_neon(orow, av, b) };
         return;
     }
     let [b0, b1, b2, b3, b4, b5, b6, b7] = *b;

@@ -22,13 +22,16 @@
 //! reassociates the reduction — so they are separate manifest ops with
 //! tolerance-based equivalence tests (`rust/tests/prop_kernels.rs`).
 //!
-//! The `simd` cargo feature swaps the portable rank-1 block for the
-//! hand-vectorized AVX2 one in `avx` (runtime-detected, scalar
-//! fallback); each vector lane performs the same rounded mul+add
-//! sequence, so results stay bit-identical with or without it.
+//! The `simd` cargo feature swaps the portable rank-1 block for a
+//! hand-vectorized one — AVX2 in `avx` on x86-64, NEON in `neon` on
+//! AArch64 (both runtime-detected, scalar fallback); each vector lane
+//! performs the same rounded mul+add sequence, so results stay
+//! bit-identical with or without it, and across the two ISAs.
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 pub(crate) mod avx;
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub(crate) mod neon;
 pub mod fused;
 pub mod gemm;
 pub mod reference;

@@ -1,0 +1,67 @@
+//! Hand-vectorized NEON rank-1 block behind the `simd` feature — the
+//! aarch64 sibling of [`super::avx`].
+//!
+//! Same exactness contract as the AVX2 block: each update is a separate
+//! `fmul` + `fadd` pair (never contracted to an FMA — `vfmaq_f32` would
+//! skip the intermediate rounding and break bitwise equality with the
+//! scalar reference), applied lanewise in the same ascending-`p` order,
+//! so every output element's f32 accumulation chain is bit-for-bit the
+//! scalar chain. NEON is baseline on AArch64 but still runtime-detected
+//! — [`usable`] gates dispatch in `gemm::rank1_block` — to keep the
+//! dispatch shape identical to the x86-64 path.
+
+use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+use super::gemm::KU;
+
+/// True when the running CPU can execute [`rank1_block_neon`].
+pub(crate) fn usable() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// `orow[j] += sum_u av[u] * b[u][j]` with one rounded mul+add per `u` in
+/// ascending order — the scalar chain, four f32 lanes per instruction.
+///
+/// # Safety
+///
+/// The caller must ensure NEON is available (see [`usable`]) and that
+/// every `b[u]` holds at least `orow.len()` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn rank1_block_neon(orow: &mut [f32], av: &[f32; KU], b: &[&[f32]; KU]) {
+    let n = orow.len();
+    debug_assert!(b.iter().all(|row| row.len() >= n));
+    let va = [
+        vdupq_n_f32(av[0]),
+        vdupq_n_f32(av[1]),
+        vdupq_n_f32(av[2]),
+        vdupq_n_f32(av[3]),
+        vdupq_n_f32(av[4]),
+        vdupq_n_f32(av[5]),
+        vdupq_n_f32(av[6]),
+        vdupq_n_f32(av[7]),
+    ];
+    let op = orow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 4 <= n {
+        let mut s = vld1q_f32(op.add(j));
+        s = vaddq_f32(s, vmulq_f32(va[0], vld1q_f32(b[0].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[1], vld1q_f32(b[1].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[2], vld1q_f32(b[2].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[3], vld1q_f32(b[3].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[4], vld1q_f32(b[4].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[5], vld1q_f32(b[5].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[6], vld1q_f32(b[6].as_ptr().add(j))));
+        s = vaddq_f32(s, vmulq_f32(va[7], vld1q_f32(b[7].as_ptr().add(j))));
+        vst1q_f32(op.add(j), s);
+        j += 4;
+    }
+    // `n % 4` tail: scalar, same per-element order.
+    while j < n {
+        let mut s = *op.add(j);
+        for u in 0..KU {
+            s += av[u] * b[u][j];
+        }
+        *op.add(j) = s;
+        j += 1;
+    }
+}

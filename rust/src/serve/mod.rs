@@ -16,6 +16,19 @@
 //! fresh ones. [`ArbiterPolicy::StaticSplit`] is the offline baseline:
 //! budget divided `total/N` up front, every shard on its own.
 //!
+//! *How* the global minimum is found is the [`GlobalIndexKind`] knob
+//! ([`ServePool::with_global_index`], `--global-index`). The default,
+//! `Shared`, is the fleet-wide differential index: every shard's kinetic
+//! tournament publishes its local minimum into a lock-free slot, and the
+//! arbiter folds the slots in one cross-shard tournament
+//! (`dtr::policy::fleet`) — a victim decision reads O(log shards) of
+//! arbiter-local state instead of `try_lock`ing every peer runtime. This
+//! is Coop's pooled reclaim carried to its conclusion: not only is the
+//! *budget* one pool, the *eviction index* is one pool. `Scan` retains
+//! the peek-every-peer loop as the fallback and benchmark bar
+//! (`bench_serve`'s `global_evict` section), and shared-vs-scan
+//! decision-exactness is pinned by `tests/serve_exact.rs`.
+//!
 //! Treating memory as one shared pool rather than per-tenant silos is the
 //! central lesson of Coop (see PAPERS.md): eviction and allocation must
 //! cooperate over the *whole* pool or they strand memory in fragments —
@@ -57,7 +70,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use arbiter::{ArbiterPolicy, BudgetArbiter, LeaseGate, ShardMeter, ShardSnapshot};
+pub use arbiter::{
+    ArbiterPolicy, BudgetArbiter, GlobalIndexKind, LeaseGate, ShardMeter, ShardSnapshot,
+};
 pub use tenants::{
     fleet_budget, run_tenants, tenant_envelope, ServeError, TenantDriver, TenantKind,
     TenantReport, TenantSpec,
@@ -104,6 +119,19 @@ impl ServePool {
         self.store = on
             .then(|| WeightStore::new(Arc::clone(&self.arb) as Arc<dyn PinnedLedger>));
         self
+    }
+
+    /// Select how `GlobalReclaim` finds the fleet-wide victim (see
+    /// [`GlobalIndexKind`]). Call before building sessions: the gate hands
+    /// the publish slot to each session's runtime at construction.
+    pub fn with_global_index(self, kind: GlobalIndexKind) -> ServePool {
+        self.arb.set_global_index(kind);
+        self
+    }
+
+    /// The active global victim-index kind.
+    pub fn global_index(&self) -> GlobalIndexKind {
+        self.arb.global_index()
     }
 
     /// The pool's shared weight store, when dedup is enabled.

@@ -327,6 +327,14 @@ fn run_one(
 /// all sharded over `pool`'s single global budget. `base` supplies the
 /// heuristic/policy/index knobs; each tenant gets `base` plus its own
 /// freshly leased gate.
+///
+/// Churn safety under the shared fleet tournament: each `pool.lease()`
+/// binds the shard's [`crate::dtr::policy::MinSlot`] with a fresh
+/// generation, so a tenant that tears down mid-run (gate dropped at
+/// thread exit) retires its tournament leaf and any publishes still in
+/// the dirty queue are dropped as dead-generation entries rather than
+/// replayed into a recycled slot — a later joiner reusing the shard id
+/// can never inherit a dead tenant's minimum.
 pub fn run_tenants(
     pool: &ServePool,
     specs: &[TenantSpec],

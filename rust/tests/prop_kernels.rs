@@ -35,10 +35,13 @@ fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.f64() as f32 * 2.0 - 1.0).collect()
 }
 
-/// Odd shapes (non-multiples of the KU=8 unroll and the 8-lane vector
-/// width, unit dims) plus one shape past the parallel-spawn threshold, at
-/// several thread counts: all three GEMM variants are bitwise the scalar
-/// reference.
+/// Odd shapes (non-multiples of the KU=8 unroll and the 8-lane AVX2 /
+/// 4-lane NEON vector widths, unit dims) plus one shape past the
+/// parallel-spawn threshold, at several thread counts: all three GEMM
+/// variants are bitwise the scalar reference. Under `--features simd`
+/// this same test exercises whichever hand-vectorized block the host
+/// dispatches (AVX2 on x86-64, NEON on AArch64) — the lanewise
+/// mul-then-add chains must round exactly like the scalar loop on both.
 #[test]
 fn tiled_gemms_bitwise_match_scalar_reference_on_odd_shapes() {
     let mut rng = Rng::new(0xBEEF);

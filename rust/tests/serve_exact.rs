@@ -4,12 +4,17 @@
 //! serve-layer analogue of the policy-index equivalence property (PR 3):
 //! the arbiter's reclaim loop must degenerate to exactly the fixed-budget
 //! `free_for` loop when there is nobody to reclaim from.
+//!
+//! The fleet-tournament analogue
+//! (`shared_tournament_is_decision_exact_vs_peek_scan`) pins the shared
+//! cross-shard index (`GlobalIndexKind::Shared`) to the retained
+//! peek-scan loop on a multi-shard round-robin fleet the same way.
 
 use dtr::api::{Session, Tensor};
 use dtr::dtr::{Config, Heuristic, NullBackend, Stats};
 use dtr::exec::dynamic::{headroom_budget, LstmTrainer};
 use dtr::runtime::RnnConfig;
-use dtr::serve::{ArbiterPolicy, ServePool};
+use dtr::serve::{ArbiterPolicy, GlobalIndexKind, ServePool};
 use dtr::util::rng::Rng;
 
 /// Drive a deterministic randomized tape (calls, releases, touches) through
@@ -85,6 +90,95 @@ fn single_tenant_accounting_tape_is_decision_exact() {
                 served
             );
             pool.check_invariants().unwrap();
+        }
+    }
+}
+
+/// Round-robin a deterministic tape on each of `shards` gated sessions;
+/// the per-shard op streams depend only on the shard index. Returns each
+/// shard's final stats (victim traces included).
+fn drive_fleet(pool: &ServePool, shards: usize, ops: usize, h: Heuristic) -> Vec<Stats> {
+    let sessions: Vec<Session<NullBackend>> = (0..shards)
+        .map(|_| {
+            Session::accounting(Config {
+                heuristic: h,
+                trace_victims: true,
+                // Upgrade the auto index immediately so the differential
+                // tournament (the publishing index) is what runs.
+                auto_crossover: 0,
+                gate: Some(pool.lease()),
+                ..Config::default()
+            })
+        })
+        .collect();
+    let mut lives: Vec<Vec<Tensor>> =
+        sessions.iter().map(|s| vec![s.constant_sized(8)]).collect();
+    let mut rngs: Vec<Rng> = (0..shards).map(|i| Rng::new(0xF1EE7 + i as u64)).collect();
+    for i in 0..ops {
+        for sh in 0..shards {
+            let (s, live, rng) = (&sessions[sh], &mut lives[sh], &mut rngs[sh]);
+            let src = rng.index(live.len());
+            let out_bytes = 1 + rng.below(16);
+            let cost = 1 + rng.below(5);
+            let t = s
+                .call_sized(&format!("s{sh}op{i}"), cost, &[&live[src]], &[out_bytes])
+                .expect("fleet tape op under budget")
+                .remove(0);
+            live.push(t);
+            if live.len() > 16 {
+                let k = 1 + rng.index(live.len() - 2);
+                drop(live.remove(k));
+            }
+            if i % 17 == 0 && live.len() > 3 {
+                let k = 1 + rng.index(live.len() - 1);
+                s.touch(&live[k]).expect("fleet touch remat under budget");
+            }
+        }
+    }
+    sessions
+        .iter()
+        .map(|s| {
+            s.check_invariants().unwrap();
+            s.stats()
+        })
+        .collect()
+}
+
+/// The tentpole exactness pin: `GlobalIndexKind::Shared` (one fleet
+/// tournament fed by published per-shard minima) must pick the *same
+/// victims in the same order* as `GlobalIndexKind::Scan` (the retained
+/// peek-every-shard loop) on a deterministic round-robin fleet — per
+/// shard, `Stats::same_decisions` across the two pools. Staleness-bearing
+/// heuristics exercise the published fast path (scores are republished
+/// bitwise); `lru` rides the unbound-leaf fallback, which must also agree.
+#[test]
+fn shared_tournament_is_decision_exact_vs_peek_scan() {
+    const SHARDS: usize = 3;
+    const OPS: usize = 300;
+    for h in [Heuristic::dtr_eq(), Heuristic::dtr(), Heuristic::lru()] {
+        let run = |kind: GlobalIndexKind| {
+            let pool = ServePool::new(400, ArbiterPolicy::GlobalReclaim, SHARDS)
+                .with_global_index(kind);
+            let stats = drive_fleet(&pool, SHARDS, OPS, h);
+            pool.check_invariants().unwrap();
+            assert_eq!(pool.used_bytes(), 0, "fleet teardown left bytes leased");
+            stats
+        };
+        let scan = run(GlobalIndexKind::Scan);
+        let shared = run(GlobalIndexKind::Shared);
+        assert!(
+            scan.iter().any(|s| s.evict_count > 0),
+            "{}: fleet budget never bound; comparison is vacuous",
+            h.name()
+        );
+        for (i, (a, b)) in scan.iter().zip(&shared).enumerate() {
+            assert!(
+                a.same_decisions(b),
+                "{}: shard {i} diverged between scan and shared:\nscan   {:?}\nshared {:?}",
+                h.name(),
+                a,
+                b
+            );
         }
     }
 }
